@@ -1,0 +1,50 @@
+"""Fig. 3 — normalized execution breakdown (Projection / Sorting /
+Rasterization) on the mobile-GPU model, plus the Fig. 4 / Sec. 2.2
+characterization: significant fraction, mean iterated Gaussians per pixel,
+and the warp-masking fraction (paper: ~10.3% significant, ~69% masked)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks import common
+from repro.core import hwmodel
+from repro.data.scenes import structured_scene
+
+
+def run(quick: bool = False) -> list[dict]:
+    frames = 4 if quick else common.FRAMES
+    rows = []
+    for name, n in (('small', 1500), ('medium', 4000), ('large', 8000)):
+        if quick and name == 'large':
+            continue
+        scene = structured_scene(jax.random.PRNGKey(0), n)
+        cams = common.vr_trajectory(frames)
+        cfg = common.default_cfg(use_s2=False, use_rc=False)
+        stats = common.measured_frames(scene, cams, cfg)
+        t = [hwmodel.gpu_stage_times(s) for s in stats]
+        tp = float(np.mean([x['projection'] for x in t]))
+        ts = float(np.mean([x['sorting'] for x in t]))
+        tr = float(np.mean([x['rasterization'] for x in t]))
+        tot = tp + ts + tr
+        rows.append({
+            'scene': f'{name}({n})',
+            'projection_%': 100 * tp / tot,
+            'sorting_%': 100 * ts / tot,
+            'rasterization_%': 100 * tr / tot,
+            'sig_frac_%': 100 * float(np.mean([s.sig_fraction for s in stats])),
+            'mean_iter_per_px': float(np.mean(
+                [s.iterated / s.n_pixels for s in stats])),
+            'masked_%': 100 * float(np.mean(
+                [s.masked_fraction for s in stats])),
+        })
+    return rows
+
+
+def main(quick: bool = False) -> str:
+    return common.fmt_rows(run(quick), 'Fig.3/4 — breakdown + sparsity')
+
+
+if __name__ == '__main__':
+    print(main())

@@ -1,0 +1,79 @@
+"""Kernel-level benchmark: chunk-granular compute savings of the Pallas
+rasterizer (the TPU analogue of the paper's 55%-computation-avoided claim)
+plus ref-vs-kernel agreement.  Chunks processed = the kernel's early-exit
+statistic; with RC, phase A + miss-resume chunks replace the full pass."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import radiance_cache as rc
+from repro.core.groups import num_groups
+from repro.core.pipeline import render_frame_baseline
+from repro.core.projection import project
+from repro.core.s2 import predict_pose, shared_features, speculative_sort
+from repro.core.sorting import sort_scene
+from repro.core.tiling import gather_tile_features
+from repro.kernels import ops
+
+
+def run(quick: bool = False) -> list[dict]:
+    scene = common.default_scene()
+    frames = 4 if quick else 8
+    img = common.IMG
+    cams = common.vr_trajectory(frames, img=img)
+    cfg = common.default_cfg()
+    chunk = 64
+
+    cache = rc.init_cache(num_groups(img, img, cfg.group_tiles), cfg.cache)
+    full_chunks, rc_chunks_a, rc_chunks_b = [], [], []
+    hits, pixel_saved = [], []
+    for cam in cams:
+        proj = project(scene, cam)
+        lists = sort_scene(proj, img, img, cfg.capacity)
+        feats = gather_tile_features(proj, lists)
+        _, aux_full, chunks_full = ops.rasterize_full(feats, lists.tiles_x,
+                                                      chunk=chunk)
+        final, cache, aux, st = ops.rasterize_with_rc(
+            feats, lists.tiles_x, lists.tiles_y, cache, cfg.cache,
+            cfg.group_tiles, k_record=cfg.k_record, chunk=chunk)
+        full_chunks.append(float(np.sum(np.asarray(chunks_full))))
+        rc_chunks_a.append(float(st.chunks_prefix))
+        rc_chunks_b.append(float(st.chunks_resume))
+        hits.append(float(st.hit_rate))
+        # per-pixel integration savings (the paper's 55% metric): work done
+        # with RC = what the RC pass actually iterated, vs the full pass
+        it_full = float(np.asarray(aux_full.n_iterated, np.float64).sum())
+        it_rc = float(np.asarray(aux.n_iterated, np.float64).sum())
+        pixel_saved.append(1.0 - it_rc / max(it_full, 1.0))
+
+    fc = np.asarray(full_chunks)
+    ca, cb = np.asarray(rc_chunks_a), np.asarray(rc_chunks_b)
+    px = np.asarray(pixel_saved)
+    # frame 0 fills the cache; savings accrue from frame 1 on
+    rows = [
+        {'metric': 'pixel_savings_%', 'value': 100 * float(px[1:].mean()),
+         'note': "paper's metric: ~55% of color integration avoided"},
+        {'metric': 'hit_rate_mean', 'value': float(np.mean(hits[1:])),
+         'note': 'paper: >50%'},
+        {'metric': 'chunks_full_mean', 'value': float(fc.mean()),
+         'note': 'tile-granular passes, no RC'},
+        {'metric': 'chunks_rc_mean', 'value': float((ca + cb)[1:].mean()),
+         'note': 'phase A + miss resume'},
+        {'metric': 'chunk_savings_%',
+         'value': 100 * float(1 - (ca + cb)[1:].mean() / fc[1:].mean()),
+         'note': 'tile-granular: scattered misses force full-tile resume — '
+                 'the warp-divergence analogue LuminCore fixes by PE '
+                 'remapping (modeled in hwmodel), not realizable at XLA '
+                 'tile granularity'},
+    ]
+    return rows
+
+
+def main(quick: bool = False) -> str:
+    return common.fmt_rows(run(quick), 'Kernel — chunk-granular RC savings')
+
+
+if __name__ == '__main__':
+    print(main())

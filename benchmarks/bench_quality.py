@@ -1,0 +1,76 @@
+"""Fig. 20 — rendering quality of S2-only / RC-only / Lumina / DS-2 against
+the exact 3DGS baseline, on VR-rate (90 FPS, synthetic setting) and
+capture-rate (30 FPS, real setting) trajectories.  PSNR + SSIM.  The paper's
+claims: S2-only ~= baseline, RC-only within ~0.2 dB, Lumina within ~0.3 dB,
+DS-2 1.0-1.4 dB WORSE.  (LPIPS omitted: needs pretrained VGG — DESIGN.md.)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.core.metrics import psnr, ssim
+from repro.core.pipeline import LuminaConfig, render_frame_baseline
+
+
+def _ds2_render(scene, cam, cfg):
+    """DS-2 baseline: render 2x downsampled, upsample back (bilinear)."""
+    from repro.core.camera import Camera
+    import dataclasses
+    half = dataclasses.replace(
+        cam, width=cam.width // 2, height=cam.height // 2,
+        fx=cam.fx / 2, fy=cam.fy / 2, cx=cam.cx / 2, cy=cam.cy / 2)
+    img, _, _, _ = render_frame_baseline(scene, half, cfg)
+    return jax.image.resize(img, (cam.height, cam.width, 3), 'bilinear')
+
+
+def evaluate(scene, cams, variants: dict) -> list[dict]:
+    rows = []
+    gts = []
+    cfg0 = common.quality_cfg(use_s2=False, use_rc=False)
+    for cam in cams:
+        gt, _, _, _ = render_frame_baseline(scene, cam, cfg0)
+        gts.append(gt)
+    for name, cfg in variants.items():
+        if name == 'DS-2':
+            imgs = [_ds2_render(scene, cam, cfg0) for cam in cams]
+            hits = [0.0] * len(cams)
+        else:
+            imgs, stats, _ = common.run_sequence(scene, cams, cfg)
+            hits = [float(s.hit_rate) for s in stats]
+        ps = [float(psnr(i, g)) for i, g in zip(imgs, gts)]
+        ss = [float(ssim(i, g)) for i, g in zip(imgs, gts)]
+        rows.append({'variant': name,
+                     'psnr_db': float(np.mean(ps)),
+                     'ssim': float(np.mean(ss)),
+                     'hit_rate': float(np.mean(hits[1:])) if len(hits) > 1 else 0.0})
+    return rows
+
+
+def run(quick: bool = False) -> list[dict]:
+    scene = common.default_scene()
+    frames = 6 if quick else common.FRAMES
+    variants = {
+        'S2-only': common.quality_cfg(use_s2=True, use_rc=False),
+        'RC-only': common.quality_cfg(use_s2=False, use_rc=True),
+        'Lumina': common.quality_cfg(use_s2=True, use_rc=True),
+        'DS-2': common.quality_cfg(use_s2=False, use_rc=False),
+    }
+    rows = []
+    for setting, cams in (('vr_90fps', common.vr_trajectory(frames)),
+                          ('real_30fps', common.real_trajectory(frames))):
+        if quick and setting == 'real_30fps':
+            continue
+        for r in evaluate(scene, cams, variants):
+            rows.append({'setting': setting} | r)
+    return rows
+
+
+def main(quick: bool = False) -> str:
+    return common.fmt_rows(run(quick), 'Fig.20 — quality (PSNR/SSIM vs exact baseline)')
+
+
+if __name__ == '__main__':
+    print(main())

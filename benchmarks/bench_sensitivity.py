@@ -1,0 +1,76 @@
+"""Fig. 23 + Fig. 24 — sensitivity studies.
+
+Fig. 23: rendering quality + speedup vs (expanded margin x sharing window).
+Fig. 24: quality + rasterization speedup + hit rate vs alpha-record length.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import hwmodel
+from repro.core.metrics import psnr
+from repro.core.pipeline import render_frame_baseline
+
+
+def margin_window_sweep(scene, frames, *, quick=False) -> list[dict]:
+    margins = (2, 4) if quick else (2, 4, 8)
+    windows = (2, 6) if quick else (2, 6, 12)
+    cams = common.vr_trajectory(frames)
+    cfg0 = common.quality_cfg(use_s2=False, use_rc=False)
+    gts = [render_frame_baseline(scene, cam, cfg0)[0] for cam in cams]
+    rows = []
+    base_stats = common.measured_frames(scene, cams, cfg0)
+    base_t = np.mean([hwmodel.variant_frame_time('GPU', s)
+                      for s in base_stats])
+    for m in margins:
+        for w in windows:
+            cfg = common.quality_cfg(margin=m, window=w,
+                                     use_s2=True, use_rc=False)
+            imgs, stats, _ = common.run_sequence(scene, cams, cfg)
+            ps = float(np.mean([float(psnr(i, g))
+                                for i, g in zip(imgs, gts)]))
+            hstats = common.measured_frames(scene, cams, cfg)
+            t = np.mean([hwmodel.variant_frame_time('S2-GPU', s)
+                         + hwmodel.gpu_stage_times(s)['sorting'] / w
+                         for s in hstats])
+            rows.append({'figure': 'Fig23', 'margin': m, 'window': w,
+                         'psnr_db': ps, 'speedup_x': float(base_t / t),
+                         'k_record': '', 'hit_rate': ''})
+    return rows
+
+
+def krecord_sweep(scene, frames, *, quick=False) -> list[dict]:
+    ks = (2, 5) if quick else (1, 2, 3, 5, 8)
+    cams = common.vr_trajectory(frames)
+    cfg0 = common.quality_cfg(use_s2=False, use_rc=False)
+    gts = [render_frame_baseline(scene, cam, cfg0)[0] for cam in cams]
+    rows = []
+    base_stats = common.measured_frames(scene, cams, cfg0)
+    base_r = np.mean([hwmodel.nru_raster_time(s) for s in base_stats])
+    for k in ks:
+        cfg = common.quality_cfg(k_record=k, use_s2=False, use_rc=True)
+        imgs, stats, _ = common.run_sequence(scene, cams, cfg)
+        ps = float(np.mean([float(psnr(i, g)) for i, g in zip(imgs, gts)]))
+        hit = float(np.mean([float(s.hit_rate) for s in stats[1:]]))
+        hstats = common.measured_frames(scene, cams, cfg)
+        t = np.mean([hwmodel.nru_raster_time(s, rc=True) for s in hstats])
+        rows.append({'figure': 'Fig24', 'margin': '', 'window': '',
+                     'psnr_db': ps, 'speedup_x': float(base_r / t),
+                     'k_record': k, 'hit_rate': hit})
+    return rows
+
+
+def run(quick: bool = False) -> list[dict]:
+    scene = common.default_scene()
+    frames = 4 if quick else 8
+    return (margin_window_sweep(scene, frames, quick=quick)
+            + krecord_sweep(scene, frames, quick=quick))
+
+
+def main(quick: bool = False) -> str:
+    return common.fmt_rows(run(quick), 'Fig.23/24 — sensitivity')
+
+
+if __name__ == '__main__':
+    print(main())

@@ -1,0 +1,97 @@
+"""Shared benchmark scaffolding: scenes, trajectories, measured frames."""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hwmodel, radiance_cache as rc
+from repro.core.camera import Camera
+from repro.core.groups import num_groups
+from repro.core.pipeline import (LuminaConfig, LuminSys,
+                                 render_frame_baseline)
+from repro.data.scenes import structured_scene
+from repro.data.trajectory import orbit_trajectory
+
+# Benchmark scale: small enough for the 1-core CPU container, big enough
+# that sparsity/coherence statistics are meaningful.
+N_GAUSS = 4000
+IMG = 128
+CAPACITY = 512        # speedup/statistics benches (realistic budget)
+CAPACITY_EXACT = 1536  # quality benches: ample so per-tile truncation never
+                       # confounds S^2/RC quality deltas (see EXPERIMENTS.md)
+FRAMES = 12
+
+
+def default_scene(key=0, **kw):
+    return structured_scene(jax.random.PRNGKey(key), N_GAUSS, **kw)
+
+
+def vr_trajectory(frames=FRAMES, *, fps=90.0, img=IMG):
+    return orbit_trajectory(frames, fps=fps, width=img, height_px=img)
+
+
+def real_trajectory(frames=FRAMES, *, img=IMG):
+    """30-FPS capture: 3x larger inter-frame motion (paper Sec. 5)."""
+    return orbit_trajectory(frames, fps=30.0, width=img, height_px=img)
+
+
+def default_cfg(**kw) -> LuminaConfig:
+    base = dict(capacity=CAPACITY, window=6, margin=4)
+    base.update(kw)
+    return LuminaConfig(**base)
+
+
+def quality_cfg(**kw) -> LuminaConfig:
+    base = dict(capacity=CAPACITY_EXACT, window=6, margin=4)
+    base.update(kw)
+    return LuminaConfig(**base)
+
+
+def run_sequence(scene, cams, cfg: LuminaConfig):
+    """Drive LuminSys over a trajectory; returns (images, stats, gt images)."""
+    sys_ = LuminSys(scene, cfg, cams[0])
+    images, stats, gts = [], [], []
+    for cam in cams:
+        img, st = sys_.step(cam)
+        images.append(img)
+        gt, _, _, _ = render_frame_baseline(scene, cam, cfg)
+        gts.append(gt)
+        stats.append(st)
+    return images, stats, gts
+
+
+def measured_frames(scene, cams, cfg: LuminaConfig):
+    """Per-frame FrameHWStats for the hardware models (baseline pipeline
+    stats + the LuminSys hit rates of the same frames)."""
+    sys_ = LuminSys(scene, cfg, cams[0])
+    out = []
+    for i, cam in enumerate(cams):
+        _, st = sys_.step(cam)
+        _, colors, aux, lists = render_frame_baseline(scene, cam, cfg)
+        sorted_flag = 1.0 / cfg.window if cfg.use_s2 else 1.0
+        out.append(hwmodel.measure_frame(
+            lists, aux, hit_rate=float(st.hit_rate),
+            sorted_this_frame=sorted_flag))
+    return out
+
+
+def fmt_rows(rows: list[dict], title: str) -> str:
+    if not rows:
+        return f'== {title} ==\n(no rows)'
+    cols = list(rows[0].keys())
+    w = {c: max(len(c), max(len(_f(r[c])) for r in rows)) for c in cols}
+    lines = [f'== {title} ==',
+             '  '.join(c.ljust(w[c]) for c in cols)]
+    for r in rows:
+        lines.append('  '.join(_f(r[c]).ljust(w[c]) for c in cols))
+    return '\n'.join(lines)
+
+
+def _f(v) -> str:
+    if isinstance(v, float):
+        return f'{v:.4g}'
+    return str(v)

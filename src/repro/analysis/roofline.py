@@ -1,0 +1,155 @@
+"""Three-term roofline from a compiled dry-run artifact (§Roofline).
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = collective_bytes / (chips * link_bw)
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (per the assignment).
+
+Sources: per-device FLOPs/bytes/collective-bytes come from the optimized-HLO
+parser (``repro.analysis.hlo_parse``) which applies while-loop trip counts
+up the call graph — ``compiled.cost_analysis()`` under-counts scanned layers
+(it visits each computation once), so we parse the module text instead and
+cross-check against cost_analysis in tests.  Shapes in the partitioned
+module are per-device, so parsed numbers are already per-chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional
+
+from repro.analysis import hlo_parse
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+ICI_BW = 50e9           # bytes/s / link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device (per-chip) raw terms
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_bytes_crosspod_per_chip: float
+    collective_counts: dict
+    # seconds
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    # analysis
+    bottleneck: str = ''
+    model_flops: float = 0.0
+    useful_ratio: float = 0.0      # MODEL_FLOPS / (HLO_FLOPs * chips)
+    bytes_per_device_hbm: float = 0.0   # peak allocation from memory_analysis
+    note: str = ''
+
+    def finalize(self) -> 'Roofline':
+        self.t_compute = self.flops_per_chip / PEAK_FLOPS
+        self.t_memory = self.bytes_per_chip / HBM_BW
+        self.t_collective = self.coll_bytes_per_chip / ICI_BW
+        terms = {'compute': self.t_compute, 'memory': self.t_memory,
+                 'collective': self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        total_hlo = self.flops_per_chip * self.chips
+        self.useful_ratio = (self.model_flops / total_hlo) if total_hlo else 0.0
+        return self
+
+    @property
+    def step_time(self) -> float:
+        """Roofline-optimistic step time: max of the three terms (perfect
+        overlap of compute, HBM, and ICI)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step spent on the useful-compute floor: how close
+        the compiled program is to a perfect 6ND implementation at peak."""
+        ideal = self.model_flops / (self.chips * PEAK_FLOPS)
+        return ideal / self.step_time if self.step_time else 0.0
+
+    def row(self) -> dict:
+        return {
+            'arch': self.arch, 'shape': self.shape, 'mesh': self.mesh,
+            'chips': self.chips,
+            't_compute_s': self.t_compute, 't_memory_s': self.t_memory,
+            't_collective_s': self.t_collective,
+            'bottleneck': self.bottleneck,
+            'model_flops': self.model_flops,
+            'hlo_flops_total': self.flops_per_chip * self.chips,
+            'useful_ratio': self.useful_ratio,
+            'roofline_fraction': self.roofline_fraction,
+            'hbm_bytes_per_device': self.bytes_per_device_hbm,
+            'collective_counts': self.collective_counts,
+            'coll_bytes_crosspod_per_chip': self.coll_bytes_crosspod_per_chip,
+            'note': self.note,
+        }
+
+
+def from_compiled(arch: str, shape: str, mesh_name: str, chips: int,
+                  hlo_text: str, *, model_flops: float = 0.0,
+                  pod_size: int = 256, memory_analysis=None,
+                  note: str = '') -> Roofline:
+    """Build a Roofline from compiled HLO text (+ optional memory_analysis)."""
+    agg = hlo_parse.analyze_text(hlo_text, pod_size=pod_size)
+    peak = 0.0
+    if memory_analysis is not None:
+        # works for both the CPU and TPU MemoryAnalysis protos
+        for attr in ('temp_size_in_bytes', 'argument_size_in_bytes',
+                     'output_size_in_bytes'):
+            peak += float(getattr(memory_analysis, attr, 0) or 0)
+        gen = float(getattr(memory_analysis, 'generated_code_size_in_bytes', 0)
+                    or 0)
+        peak += gen
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=agg['flops'],
+        bytes_per_chip=agg['bytes'],
+        coll_bytes_per_chip=agg['collective_bytes'],
+        coll_bytes_crosspod_per_chip=agg['collective_bytes_crosspod'],
+        collective_counts=agg['collective_counts'],
+        model_flops=model_flops,
+        bytes_per_device_hbm=peak,
+        note=note,
+    ).finalize()
+
+
+def fmt_seconds(x: float) -> str:
+    if x >= 1.0:
+        return f'{x:.2f}s'
+    if x >= 1e-3:
+        return f'{x * 1e3:.2f}ms'
+    return f'{x * 1e6:.1f}us'
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':<26} {'shape':<12} {'mesh':<6} "
+           f"{'compute':>9} {'memory':>9} {'collect':>9} {'bound':>9} "
+           f"{'useful':>7} {'roofl%':>7}")
+    out = [hdr, '-' * len(hdr)]
+    for r in rows:
+        out.append(
+            f"{r['arch']:<26} {r['shape']:<12} {r['mesh']:<6} "
+            f"{fmt_seconds(r['t_compute_s']):>9} "
+            f"{fmt_seconds(r['t_memory_s']):>9} "
+            f"{fmt_seconds(r['t_collective_s']):>9} "
+            f"{r['bottleneck']:>9} "
+            f"{r['useful_ratio']:>7.2f} "
+            f"{100 * r['roofline_fraction']:>6.1f}%")
+    return '\n'.join(out)
+
+
+def save_rows(rows: list[dict], path: str) -> None:
+    with open(path, 'w') as f:
+        json.dump(rows, f, indent=1, default=str)
+
+
+def load_rows(path: str) -> list[dict]:
+    with open(path) as f:
+        return json.load(f)

@@ -1,0 +1,132 @@
+"""Pinhole camera model and pose utilities (pytree-friendly)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussians import quat_to_rotmat
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Camera:
+    """A camera pose + intrinsics.
+
+    position : [3]   camera center in world coordinates
+    quat     : [4]   world-from-camera rotation quaternion (w,x,y,z)
+    fx, fy   : focal lengths (pixels)
+    cx, cy   : principal point (pixels)
+    width, height : static python ints (image size in pixels)
+    near, far     : clip planes (static)
+    """
+
+    position: jax.Array
+    quat: jax.Array
+    fx: jax.Array
+    fy: jax.Array
+    cx: jax.Array
+    cy: jax.Array
+    width: int = dataclasses.field(metadata=dict(static=True))
+    height: int = dataclasses.field(metadata=dict(static=True))
+    near: float = dataclasses.field(default=0.05, metadata=dict(static=True))
+    far: float = dataclasses.field(default=100.0, metadata=dict(static=True))
+
+    def _replace(self, **kw) -> "Camera":
+        return dataclasses.replace(self, **kw)
+
+
+def make_camera(position, quat, fov_x_deg: float, width: int, height: int,
+                near: float = 0.05, far: float = 100.0) -> Camera:
+    fov_x = jnp.deg2rad(fov_x_deg)
+    fx = (width / 2.0) / jnp.tan(fov_x / 2.0)
+    fy = fx  # square pixels
+    return Camera(
+        position=jnp.asarray(position, jnp.float32),
+        quat=jnp.asarray(quat, jnp.float32),
+        fx=jnp.asarray(fx, jnp.float32),
+        fy=jnp.asarray(fy, jnp.float32),
+        cx=jnp.asarray(width / 2.0, jnp.float32),
+        cy=jnp.asarray(height / 2.0, jnp.float32),
+        width=width, height=height, near=near, far=far)
+
+
+def world_to_camera(cam: Camera, points: jax.Array) -> jax.Array:
+    """World points [N,3] -> camera-frame points [N,3] (z = depth)."""
+    r_wc = quat_to_rotmat(cam.quat)          # world-from-camera
+    r_cw = r_wc.T                            # camera-from-world
+    return (points - cam.position[None, :]) @ r_cw.T
+
+
+def expand_viewport(cam: Camera, margin_px: int) -> Camera:
+    """Expanded sorting viewport for S^2 (Sec. 3.1 of the paper).
+
+    The viewport grows by `margin_px` pixels on each side; the principal point
+    shifts so world geometry stays put.  Tile grids built on the expanded
+    camera therefore cover every rendering viewport in the sharing window.
+    """
+    return cam._replace(
+        cx=cam.cx + margin_px,
+        cy=cam.cy + margin_px,
+        width=cam.width + 2 * margin_px,
+        height=cam.height + 2 * margin_px,
+    )
+
+
+def look_at(position, target, up=(0.0, 1.0, 0.0)):
+    """Return a (position, quat) pose looking from `position` toward `target`.
+
+    Camera convention (COLMAP/3DGS): +z forward into the scene, +x right,
+    +y down — a proper right-handed rotation (x cross y = z).
+    """
+    position = jnp.asarray(position, jnp.float32)
+    target = jnp.asarray(target, jnp.float32)
+    up = jnp.asarray(up, jnp.float32)
+    fwd = target - position
+    fwd = fwd / (jnp.linalg.norm(fwd) + 1e-12)
+    right = jnp.cross(fwd, up)
+    right = right / (jnp.linalg.norm(right) + 1e-12)
+    down = jnp.cross(fwd, right)  # z cross x = y (down, since image y grows down)
+    # world-from-camera columns: x=right, y=down, z=fwd
+    r = jnp.stack([right, down, fwd], axis=1)
+    return position, rotmat_to_quat(r)
+
+
+def rotmat_to_quat(r: jax.Array) -> jax.Array:
+    """Rotation matrix [3,3] -> quaternion (w,x,y,z). Branch-free (Shepperd)."""
+    m00, m01, m02 = r[0, 0], r[0, 1], r[0, 2]
+    m10, m11, m12 = r[1, 0], r[1, 1], r[1, 2]
+    m20, m21, m22 = r[2, 0], r[2, 1], r[2, 2]
+    tr = m00 + m11 + m22
+    # four candidate constructions; pick numerically best
+    qw = jnp.sqrt(jnp.maximum(1 + tr, 1e-12)) / 2
+    qx = jnp.sqrt(jnp.maximum(1 + m00 - m11 - m22, 1e-12)) / 2
+    qy = jnp.sqrt(jnp.maximum(1 - m00 + m11 - m22, 1e-12)) / 2
+    qz = jnp.sqrt(jnp.maximum(1 - m00 - m11 + m22, 1e-12)) / 2
+    cand = jnp.stack([
+        jnp.stack([qw, (m21 - m12) / (4 * qw), (m02 - m20) / (4 * qw), (m10 - m01) / (4 * qw)]),
+        jnp.stack([(m21 - m12) / (4 * qx), qx, (m01 + m10) / (4 * qx), (m02 + m20) / (4 * qx)]),
+        jnp.stack([(m02 - m20) / (4 * qy), (m01 + m10) / (4 * qy), qy, (m12 + m21) / (4 * qy)]),
+        jnp.stack([(m10 - m01) / (4 * qz), (m02 + m20) / (4 * qz), (m12 + m21) / (4 * qz), qz]),
+    ])
+    idx = jnp.argmax(jnp.stack([tr, m00, m11, m22]))
+    q = cand[idx]
+    return q / (jnp.linalg.norm(q) + 1e-12)
+
+
+def slerp(q0: jax.Array, q1: jax.Array, t) -> jax.Array:
+    """Spherical interpolation/extrapolation of quaternions (t may exceed 1)."""
+    q0 = q0 / (jnp.linalg.norm(q0) + 1e-12)
+    q1 = q1 / (jnp.linalg.norm(q1) + 1e-12)
+    dot = jnp.sum(q0 * q1)
+    q1 = jnp.where(dot < 0, -q1, q1)
+    dot = jnp.abs(dot)
+    dot = jnp.clip(dot, -1.0, 1.0)
+    theta = jnp.arccos(dot)
+    sin_theta = jnp.sin(theta)
+    use_lerp = sin_theta < 1e-5
+    w0 = jnp.where(use_lerp, 1.0 - t, jnp.sin((1.0 - t) * theta) / jnp.where(use_lerp, 1.0, sin_theta))
+    w1 = jnp.where(use_lerp, t, jnp.sin(t * theta) / jnp.where(use_lerp, 1.0, sin_theta))
+    q = w0 * q0 + w1 * q1
+    return q / (jnp.linalg.norm(q) + 1e-12)

@@ -1,0 +1,127 @@
+"""Gaussian scene representation for 3DGS.
+
+A scene is a pytree of per-Gaussian parameters (the trainable representation
+from Kerbl et al. 2023, used unchanged by Lumina).  All fields are fixed-shape
+arrays so the whole pipeline stays jit/pjit friendly.
+
+Raw (trainable) parameterization:
+  means         [N, 3]   world-space centers
+  log_scales    [N, 3]   log of per-axis scales (activation: exp)
+  quats         [N, 4]   unnormalized rotation quaternions (activation: normalize)
+  opacity_logit [N]      (activation: sigmoid)
+  sh_dc         [N, 3]   degree-0 spherical-harmonic coefficients
+  sh_rest       [N, 3, 3] degree-1 SH coefficients (3 basis fns x RGB)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SH_C0 = 0.28209479177387814
+SH_C1 = 0.4886025119029199
+
+# Alpha below which a Gaussian is insignificant (paper: 1/255).
+ALPHA_SIGNIFICANT = 1.0 / 255.0
+# Transmittance termination threshold theta (3DGS reference uses 1e-4).
+TRANSMITTANCE_EPS = 1.0e-4
+ALPHA_MAX = 0.99
+
+
+class GaussianScene(NamedTuple):
+    """Trainable scene parameters (raw, pre-activation)."""
+
+    means: jax.Array          # [N, 3]
+    log_scales: jax.Array     # [N, 3]
+    quats: jax.Array          # [N, 4]
+    opacity_logit: jax.Array  # [N]
+    sh_dc: jax.Array          # [N, 3]
+    sh_rest: jax.Array        # [N, 3, 3]
+
+    @property
+    def num_gaussians(self) -> int:
+        return self.means.shape[0]
+
+
+def quat_to_rotmat(q: jax.Array) -> jax.Array:
+    """Normalized quaternion(s) [..., 4] (w,x,y,z) -> rotation matrix [..., 3, 3]."""
+    q = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-12)
+    w, x, y, z = q[..., 0], q[..., 1], q[..., 2], q[..., 3]
+    r00 = 1 - 2 * (y * y + z * z)
+    r01 = 2 * (x * y - w * z)
+    r02 = 2 * (x * z + w * y)
+    r10 = 2 * (x * y + w * z)
+    r11 = 1 - 2 * (x * x + z * z)
+    r12 = 2 * (y * z - w * x)
+    r20 = 2 * (x * z - w * y)
+    r21 = 2 * (y * z + w * x)
+    r22 = 1 - 2 * (x * x + y * y)
+    rows = jnp.stack(
+        [
+            jnp.stack([r00, r01, r02], axis=-1),
+            jnp.stack([r10, r11, r12], axis=-1),
+            jnp.stack([r20, r21, r22], axis=-1),
+        ],
+        axis=-2,
+    )
+    return rows
+
+
+def scales(scene: GaussianScene) -> jax.Array:
+    return jnp.exp(scene.log_scales)
+
+
+def opacities(scene: GaussianScene) -> jax.Array:
+    return jax.nn.sigmoid(scene.opacity_logit)
+
+
+def covariances_3d(scene: GaussianScene) -> jax.Array:
+    """Sigma = R S S^T R^T, [N, 3, 3]."""
+    rot = quat_to_rotmat(scene.quats)                    # [N,3,3]
+    s = scales(scene)                                    # [N,3]
+    m = rot * s[:, None, :]                              # R @ diag(s)
+    return m @ jnp.swapaxes(m, -1, -2)
+
+
+def eval_sh(scene: GaussianScene, view_dirs: jax.Array) -> jax.Array:
+    """Evaluate degree-1 SH color for each Gaussian given unit view dirs [N,3].
+
+    Returns RGB in [0, inf) (clamped at 0 after the +0.5 shift, as in 3DGS).
+    """
+    d = view_dirs / (jnp.linalg.norm(view_dirs, axis=-1, keepdims=True) + 1e-12)
+    x, y, z = d[..., 0:1], d[..., 1:2], d[..., 2:3]
+    c = SH_C0 * scene.sh_dc
+    c = c - SH_C1 * y * scene.sh_rest[..., 0, :]
+    c = c + SH_C1 * z * scene.sh_rest[..., 1, :]
+    c = c - SH_C1 * x * scene.sh_rest[..., 2, :]
+    return jnp.maximum(c + 0.5, 0.0)
+
+
+def geometric_mean_scale(scene: GaussianScene) -> jax.Array:
+    """Geometric mean of the three scale parameters, [N].
+
+    This is the `S` in the paper's scale-constrained loss (Eqn. 4).
+    """
+    return jnp.exp(jnp.mean(scene.log_scales, axis=-1))
+
+
+def init_scene(key: jax.Array, num_gaussians: int,
+               extent: float = 1.0, dtype=jnp.float32) -> GaussianScene:
+    """Random scene initialization (centers uniform in a cube of half-side `extent`)."""
+    k1, k2, k3, k4, k5, k6 = jax.random.split(key, 6)
+    means = jax.random.uniform(k1, (num_gaussians, 3), dtype, -extent, extent)
+    log_scales = jnp.log(
+        jax.random.uniform(k2, (num_gaussians, 3), dtype, 0.02, 0.08) * extent)
+    quats = jax.random.normal(k3, (num_gaussians, 4), dtype)
+    quats = quats.at[:, 0].add(2.0)  # bias toward identity
+    opacity_logit = jax.random.uniform(k4, (num_gaussians,), dtype, -1.0, 2.0)
+    sh_dc = jax.random.uniform(k5, (num_gaussians, 3), dtype, -1.0, 1.0)
+    sh_rest = 0.1 * jax.random.normal(k6, (num_gaussians, 3, 3), dtype)
+    return GaussianScene(means, log_scales, quats, opacity_logit, sh_dc, sh_rest)
+
+
+def scene_num_params(scene: GaussianScene) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(scene))

@@ -1,0 +1,364 @@
+"""First-order cycle/energy models: mobile GPU, NRU+GPU, LuminCore, GSCore.
+
+These models consume *measured statistics from the functional pipeline*
+(per-pixel iterated/significant counts, warp-max iteration counts, cache hit
+rates, chunk counts) and the paper's hardware constants, and produce the
+Fig. 3 / Fig. 22 / Fig. 25-style tables.  They are analytic first-order
+models — not RTL — but every input that depends on the *scene and
+algorithm* is measured, not assumed; only per-op throughputs/energies are
+constants (Sec. 5 of the paper + standard energy ratios).
+
+Hardware constants (paper Sec. 5):
+  * mobile GPU: Volta on Xavier, 2.8 TFLOPS fp32 ~ 1.37 GHz x 512 lanes x 2;
+    SIMT warp = 32 threads -> a warp retires at the pace of its SLOWEST
+    thread (this is where the measured 69% masking comes from);
+  * LuminCore: 8x8 NRUs @ 1 GHz, 4 three-stage PEs each (frontend), one
+    shared backend per NRU; LuminCache 4-way x 1024 sets, 2-cycle probe,
+    double-buffered (fills overlap compute);
+  * GSCore: CCU + GSU + 16-unit rasterizer @ 1 GHz (their Table 2 scale),
+    subtile skipping but NO frontend/backend alpha split;
+  * energy: DRAM:SRAM access ratio 25:1 [30, 76]; ASIC MAC at 16/12 nm vs
+    GPU fp32 FMA ~ 1:5 (DeepScaleTool-scaled, Sec. 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rasterize import RasterAux
+from repro.core.tiling import TILE, TileLists
+
+# ---------------------------------------------------------------------------
+# Hardware constants
+# ---------------------------------------------------------------------------
+
+WARP = 32
+
+# per-Gaussian-per-pixel instruction counts (3DGS reference rasterizer)
+OPS_ALPHA = 10.0        # conic quadratic form + exp + compare
+OPS_BLEND = 8.0         # color integration (3 ch MAC + transmittance)
+FEAT_BYTES = 48.0       # mean2d, conic, color, opacity, id (fp32)
+PIX_BYTES = 12.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GPUParams:
+    lanes: int = 512            # CUDA cores (Xavier Volta)
+    freq: float = 1.377e9
+    ops_per_lane_cycle: float = 2.0       # FMA
+    sort_cycles_per_key: float = 6.0      # radix passes amortized
+    proj_ops: float = 120.0               # EWA projection per gaussian
+    dram_bw: float = 25.6e9               # LPDDR4x-ish on Xavier
+    # energy per op/byte (relative units; eref = 1 SRAM byte)
+    e_op: float = 5.0
+    e_sram: float = 1.0
+    e_dram: float = 25.0
+    idle_power_frac: float = 0.25         # static+leakage share
+
+
+@dataclasses.dataclass(frozen=True)
+class NRUParams:
+    n_nru: int = 64             # 8 x 8
+    pes_per_nru: int = 4
+    freq: float = 1.0e9
+    # frontend: one alpha evaluation per PE per cycle (3-stage pipeline)
+    # backend: one significant-Gaussian integration per NRU per cycle
+    cache_probe_cycles: float = 2.0
+    e_op: float = 1.0           # ASIC MAC (DeepScale-scaled vs GPU 5.0)
+    e_sram: float = 1.0
+    e_dram: float = 25.0
+
+
+@dataclasses.dataclass(frozen=True)
+class GSCoreParams:
+    units: int = 16             # gaussian-parallel volume-rendering units
+    px_per_cycle: float = 4.0   # pixels each unit blends per cycle
+    freq: float = 1.0e9
+    ccu_speedup: float = 8.0    # Culling&Conversion Unit vs GPU projection
+    gsu_speedup: float = 8.0    # Gaussian Sorting Unit vs GPU sorting
+    e_op: float = 1.2
+    e_sram: float = 1.0
+    e_dram: float = 25.0
+    subtile_skip: float = 0.55  # fraction of alpha evals skipped (their OBB/
+                                # subtile culling, from the GSCore paper)
+
+
+# ---------------------------------------------------------------------------
+# Measured per-frame statistics
+# ---------------------------------------------------------------------------
+
+class FrameHWStats(NamedTuple):
+    """Everything scene/algorithm-dependent, measured from the pipeline."""
+
+    n_projected: float       # Gaussians surviving culling
+    n_dup: float             # tile-Gaussian pairs (sort keys)
+    iterated: float          # sum over pixels of Gaussians examined
+    significant: float       # sum over pixels of significant Gaussians
+    warp_max_iter: float     # sum over warps of max-per-warp iterations
+    warp_max_iter_k: float   # same, but iterations to fill the k-record
+    hit_rate: float          # RC cache hit rate (0 if RC off)
+    iter_to_k: float         # sum over pixels of iterations to fill k-record
+    n_pixels: float
+    sorted_this_frame: float  # 1.0 if Projection+Sorting ran (S^2 amortizes)
+
+    @property
+    def masked_fraction(self) -> float:
+        """Fraction of occupied GPU lane slots doing no useful work — the
+        paper's ~69% warp-masking characterization (Sec. 2.2)."""
+        slots = self.warp_max_iter * WARP
+        return 1.0 - self.significant / max(slots, 1.0)
+
+    @property
+    def sig_fraction(self) -> float:
+        return self.significant / max(self.iterated, 1.0)
+
+
+def measure_frame(lists: TileLists, aux: RasterAux, *, hit_rate=0.0,
+                  sorted_this_frame=1.0, n_projected=None) -> FrameHWStats:
+    n_iter = np.asarray(aux.n_iterated, np.float64)       # [T, P]
+    n_sig = np.asarray(aux.n_significant, np.float64)
+    it_k = np.minimum(np.asarray(aux.iter_at_k, np.float64), n_iter)
+    t, p = n_iter.shape
+    warps = n_iter.reshape(t, p // WARP, WARP)
+    warps_k = it_k.reshape(t, p // WARP, WARP)
+    return FrameHWStats(
+        n_projected=float(n_projected if n_projected is not None
+                          else np.asarray(lists.count).sum()),
+        n_dup=float(np.asarray(lists.count, np.float64).sum()),
+        iterated=float(n_iter.sum()),
+        significant=float(n_sig.sum()),
+        warp_max_iter=float(warps.max(axis=-1).sum()),
+        warp_max_iter_k=float(warps_k.max(axis=-1).sum()),
+        hit_rate=float(hit_rate),
+        iter_to_k=float(it_k.sum()),
+        n_pixels=float(t * p),
+        sorted_this_frame=float(sorted_this_frame),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Stage time models (seconds per frame)
+# ---------------------------------------------------------------------------
+
+def gpu_stage_times(s: FrameHWStats, hw: GPUParams = GPUParams(),
+                    *, rc: bool = False) -> dict:
+    """Projection / Sorting / Rasterization on the mobile GPU.
+
+    Rasterization: one thread per pixel; a warp occupies its lanes until
+    its slowest thread finishes, so lane-cycles = warp_max_iter x WARP.
+    Work per lane-cycle-occupied slot: alpha ops always; blend ops only for
+    significant (others masked -> wasted issue slots, the Fig. 5 effect).
+    RC on GPU adds the lookup + LOCK contention overhead the paper
+    measures as a net slowdown (Sec. 6.2): tag identification runs the
+    same warps, and cache probes serialize on shared-memory banks.
+    """
+    lane_ops = hw.lanes * hw.ops_per_lane_cycle * hw.freq
+    t_proj = s.n_projected * hw.proj_ops / lane_ops
+    t_sort = s.n_dup * hw.sort_cycles_per_key / (hw.lanes * hw.freq / WARP)
+    # warp-granular occupancy: every masked slot still holds the lane
+    warp_slots = s.warp_max_iter * WARP
+    t_rast = warp_slots * (OPS_ALPHA + OPS_BLEND) / lane_ops
+    if rc:
+        # phase A runs each warp to its slowest pixel's k-record fill; the
+        # probe serializes ~8 cycles/pixel on shared-memory bank conflicts
+        # + lock contention; a warp resumes phase B if ANY of its pixels
+        # missed — with hits uniformly scattered (Fig. 15) that is nearly
+        # every warp, which is why RC-GPU is a net slowdown (Sec. 6.2)
+        slots_a = s.warp_max_iter_k * WARP
+        probe = s.n_pixels * 8.0 * WARP / (hw.lanes * hw.freq)
+        warp_has_miss = 1.0 - s.hit_rate ** WARP
+        resume = warp_has_miss * (s.warp_max_iter - s.warp_max_iter_k) * WARP
+        t_rast = (slots_a + resume) * (OPS_ALPHA + OPS_BLEND) / lane_ops + probe
+    return {'projection': t_proj, 'sorting': t_sort, 'rasterization': t_rast}
+
+
+def nru_raster_time(s: FrameHWStats, hw: NRUParams = NRUParams(),
+                    *, rc: bool = False) -> float:
+    """LuminCore rasterization: dense frontend + sparse shared backend.
+
+    Frontend retires n_pe alpha evaluations per NRU-cycle regardless of
+    masking (no divergence: PEs evaluate consecutive Gaussians of the same
+    tile); backend retires one significant integration per cycle and is
+    the bottleneck only when sig density > pes/backend ratio.  Sparsity-
+    aware remapping keeps PEs busy when RC terminates pixels early.
+    """
+    fe_tput = hw.n_nru * hw.pes_per_nru * hw.freq   # alpha evals / s
+    be_tput = hw.n_nru * hw.freq                     # integrations / s
+    if not rc:
+        t_fe = s.iterated / fe_tput
+        t_be = s.significant / be_tput
+        return max(t_fe, t_be)
+    # phase A: everyone identifies its first-k significant
+    t_a = max(s.iter_to_k / fe_tput,
+              min(s.significant, s.n_pixels * 5.0) / be_tput)
+    # probe: pipelined through LuminCache, n_nru probes per cycle
+    t_probe = s.n_pixels * hw.cache_probe_cycles / (hw.n_nru * hw.freq)
+    # phase B: only miss pixels continue; remapping keeps PEs on them
+    miss = 1.0 - s.hit_rate
+    t_b = max(miss * (s.iterated - s.iter_to_k) / fe_tput,
+              miss * s.significant / be_tput)
+    return t_a + t_probe + t_b
+
+
+def gscore_raster_time(s: FrameHWStats, hw: GSCoreParams = GSCoreParams()) -> float:
+    """GSCore: gaussian-parallel units with subtile skipping, but alpha
+    evaluation and integration share the same units (no dense/sparse split),
+    so every surviving eval occupies a unit-cycle whether significant or not.
+    """
+    evals = s.iterated * (1.0 - hw.subtile_skip)
+    return evals / (hw.units * hw.px_per_cycle * hw.freq)
+
+
+# ---------------------------------------------------------------------------
+# Energy models (relative units: 1.0 = one SRAM byte access)
+# ---------------------------------------------------------------------------
+
+def gpu_energy(s: FrameHWStats, t: dict, hw: GPUParams = GPUParams(),
+               *, rc: bool = False) -> float:
+    ops = (s.n_projected * hw.proj_ops
+           + s.n_dup * hw.sort_cycles_per_key * 2
+           + s.warp_max_iter * WARP * (OPS_ALPHA + OPS_BLEND))
+    if rc:
+        ops += s.n_pixels * 16.0
+    dram = s.n_dup * FEAT_BYTES + s.n_pixels * PIX_BYTES
+    sram = s.iterated * FEAT_BYTES
+    total_t = sum(t.values())
+    dyn = ops * hw.e_op + dram * hw.e_dram + sram * hw.e_sram
+    return dyn * (1 + hw.idle_power_frac)
+
+
+def lumincore_energy(s: FrameHWStats, *, rc: bool = False, s2: bool = False,
+                     gpu: GPUParams = GPUParams(),
+                     nru: NRUParams = NRUParams()) -> float:
+    """System energy: GPU does Projection+Sorting (amortized by S^2),
+    LuminCore does Rasterization, DRAM is shared."""
+    sort_e = (s.n_projected * gpu.proj_ops
+              + s.n_dup * gpu.sort_cycles_per_key * 2) * gpu.e_op \
+        * (1 + gpu.idle_power_frac)
+    sort_e *= s.sorted_this_frame        # S^2: sorting every N-th frame
+    if rc:
+        evals = s.iter_to_k + (1 - s.hit_rate) * (s.iterated - s.iter_to_k)
+        integ = s.iter_to_k / max(s.iterated, 1) * s.significant \
+            + (1 - s.hit_rate) * s.significant
+        probe_e = s.n_pixels * 10 * nru.e_sram   # 10-byte tag probe
+    else:
+        evals, integ, probe_e = s.iterated, s.significant, 0.0
+    raster_ops = evals * OPS_ALPHA + integ * OPS_BLEND
+    dram = s.n_dup * FEAT_BYTES * s.sorted_this_frame \
+        + s.n_pixels * PIX_BYTES
+    sram = evals * FEAT_BYTES
+    return (sort_e + raster_ops * nru.e_op + probe_e
+            + dram * nru.e_dram + sram * nru.e_sram)
+
+
+def gscore_energy(s: FrameHWStats, hw: GSCoreParams = GSCoreParams(),
+                  gpu: GPUParams = GPUParams()) -> float:
+    evals = s.iterated * (1.0 - hw.subtile_skip)
+    ops = (s.n_projected * 40.0 + s.n_dup * 4.0     # CCU + GSU
+           + evals * OPS_ALPHA + s.significant * OPS_BLEND)
+    dram = s.n_dup * FEAT_BYTES + s.n_pixels * PIX_BYTES
+    sram = evals * FEAT_BYTES
+    return ops * hw.e_op + dram * hw.e_dram + sram * hw.e_sram
+
+
+# ---------------------------------------------------------------------------
+# Variant composition (Fig. 22 / Fig. 25)
+# ---------------------------------------------------------------------------
+
+VARIANTS = ('GPU', 'S2-GPU', 'RC-GPU', 'NRU+GPU', 'S2-Acc', 'RC-Acc', 'Lumina')
+
+
+def variant_frame_time(variant: str, s: FrameHWStats,
+                       *, window: int = 6) -> float:
+    """End-to-end frame time of one Lumina variant.
+
+    S^2 runs Projection+Sorting once per window at the predicted pose.  On
+    the accelerator variants that work runs on the GPU *concurrently* with
+    NRU rasterization, so the frame time is the MAX of the two engines
+    (amortized over the window).  On S2-GPU both share one engine, so the
+    amortized sort serializes after rasterization — which is why S2-GPU
+    only reaches ~1.2x (Fig. 22) while S2-Acc gains much more.
+    """
+    g = gpu_stage_times(s)
+    spec = (g['projection'] + g['sorting']) / window   # amortized S^2 work
+    if variant == 'GPU':
+        return g['projection'] + g['sorting'] + g['rasterization']
+    if variant == 'S2-GPU':
+        return g['rasterization'] + spec              # one engine: serialize
+    if variant == 'RC-GPU':
+        grc = gpu_stage_times(s, rc=True)
+        return g['projection'] + g['sorting'] + grc['rasterization']
+    if variant == 'NRU+GPU':
+        return g['projection'] + g['sorting'] + nru_raster_time(s)
+    if variant == 'S2-Acc':
+        return max(nru_raster_time(s), spec)          # two engines: overlap
+    if variant == 'RC-Acc':
+        return g['projection'] + g['sorting'] + nru_raster_time(s, rc=True)
+    if variant == 'Lumina':
+        return max(nru_raster_time(s, rc=True), spec)
+    raise ValueError(variant)
+
+
+def variant_energy(variant: str, s: FrameHWStats) -> float:
+    g = gpu_stage_times(s)
+    if variant == 'GPU':
+        return gpu_energy(s, g)
+    if variant == 'S2-GPU':
+        return gpu_energy(s._replace(
+            n_projected=s.n_projected * s.sorted_this_frame,
+            n_dup=s.n_dup * s.sorted_this_frame), g)
+    if variant == 'RC-GPU':
+        return gpu_energy(s, gpu_stage_times(s, rc=True), rc=True) \
+            + s.n_pixels * 10.0   # lock traffic
+    if variant == 'NRU+GPU':
+        return lumincore_energy(s._replace(sorted_this_frame=1.0))
+    if variant == 'S2-Acc':
+        return lumincore_energy(s, s2=True)
+    if variant == 'RC-Acc':
+        return lumincore_energy(s._replace(sorted_this_frame=1.0), rc=True)
+    if variant == 'Lumina':
+        return lumincore_energy(s, rc=True, s2=True)
+    raise ValueError(variant)
+
+
+def evaluate_variants(stats: list[FrameHWStats], *, window: int = 6) -> dict:
+    """Average speedup + normalized energy over a frame sequence."""
+    out = {}
+    base_t = np.mean([variant_frame_time('GPU', s) for s in stats])
+    base_e = np.mean([variant_energy('GPU', s) for s in stats])
+    for v in VARIANTS:
+        t = np.mean([variant_frame_time(v, s, window=window) for s in stats])
+        e = np.mean([variant_energy(v, s) for s in stats])
+        out[v] = {'speedup': base_t / t, 'norm_energy': e / base_e,
+                  'fps': 1.0 / t}
+    # GSCore comparison row (Fig. 25): everything normalized to GPU
+    gs = GSCoreParams()
+    t_gs = np.mean([gpu_stage_times(s)['projection'] / gs.ccu_speedup
+                    + gpu_stage_times(s)['sorting'] / gs.gsu_speedup
+                    + gscore_raster_time(s) for s in stats])
+    e_gs = np.mean([gscore_energy(s) for s in stats])
+    out['GSCore'] = {'speedup': base_t / t_gs, 'norm_energy': e_gs / base_e,
+                     'fps': 1.0 / t_gs}
+    return out
+
+
+def rescale_to_paper_mix(s: FrameHWStats) -> FrameHWStats:
+    """Re-weight a measured frame to the paper's Fig. 3 stage mix.
+
+    Our procedural scenes produce far fewer sort keys per rendered pixel
+    than 6M-Gaussian real captures (sorting is 8% of GPU time here vs 23%
+    in Fig. 3), which inflates rasterization-side speedups by Amdahl.  This
+    helper scales n_dup / n_projected so the GPU-baseline stage shares
+    match Fig. 3 (10/23/67) while keeping every per-pixel statistic
+    measured — reported as the 'paper-mix' scenario next to 'measured'.
+    """
+    t = gpu_stage_times(s)
+    target_proj, target_sort = 10.0 / 67.0, 23.0 / 67.0   # vs rasterization
+    f_proj = target_proj * t['rasterization'] / max(t['projection'], 1e-30)
+    f_sort = target_sort * t['rasterization'] / max(t['sorting'], 1e-30)
+    return s._replace(n_projected=s.n_projected * f_proj,
+                      n_dup=s.n_dup * f_sort)

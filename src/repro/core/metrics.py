@@ -1,0 +1,42 @@
+"""Image quality metrics: PSNR and SSIM (pure JAX)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def psnr(a: jax.Array, b: jax.Array, max_val: float = 1.0) -> jax.Array:
+    mse = jnp.mean((a - b) ** 2)
+    return 10.0 * jnp.log10(max_val ** 2 / jnp.maximum(mse, 1e-12))
+
+
+def _gaussian_kernel(size: int = 11, sigma: float = 1.5) -> jax.Array:
+    x = jnp.arange(size, dtype=jnp.float32) - (size - 1) / 2.0
+    g = jnp.exp(-(x ** 2) / (2 * sigma ** 2))
+    g = g / jnp.sum(g)
+    return jnp.outer(g, g)
+
+
+def _filter2d(img: jax.Array, kern: jax.Array) -> jax.Array:
+    """Depthwise 2D convolution, VALID padding. img: [H, W, C]."""
+    c = img.shape[-1]
+    x = img.transpose(2, 0, 1)[:, None]                   # [C,1,H,W]
+    k = kern[None, None]                                   # [1,1,kh,kw]
+    y = jax.lax.conv_general_dilated(x, k, (1, 1), 'VALID')
+    return y[:, 0].transpose(1, 2, 0)
+
+
+def ssim(a: jax.Array, b: jax.Array, max_val: float = 1.0) -> jax.Array:
+    """Standard single-scale SSIM with an 11x11 Gaussian window."""
+    c1 = (0.01 * max_val) ** 2
+    c2 = (0.03 * max_val) ** 2
+    kern = _gaussian_kernel()
+    mu_a = _filter2d(a, kern)
+    mu_b = _filter2d(b, kern)
+    mu_aa, mu_bb, mu_ab = mu_a * mu_a, mu_b * mu_b, mu_a * mu_b
+    s_aa = _filter2d(a * a, kern) - mu_aa
+    s_bb = _filter2d(b * b, kern) - mu_bb
+    s_ab = _filter2d(a * b, kern) - mu_ab
+    num = (2 * mu_ab + c1) * (2 * s_ab + c2)
+    den = (mu_aa + mu_bb + c1) * (s_aa + s_bb + c2)
+    return jnp.mean(num / den)

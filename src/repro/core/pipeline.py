@@ -1,0 +1,194 @@
+"""LuminSys — the full frame pipeline (paper Sec. 3.3).
+
+Combines the three stages with both optimizations:
+
+  pose history --> predict pose --> [Projection + Sorting] at predicted pose
+       (speculative, once per sharing window, expanded viewport)
+  every frame  --> sorting-shared prep (refresh geometry + SH colors)
+               --> Rasterization with alpha-record extraction
+               --> Radiance-Cache lookup: hits take the cached RGB and
+                   terminate early; misses complete integration and insert.
+
+Everything is expressed as jitted stages over fixed shapes; the Python-level
+``LuminSys`` class only sequences them and carries functional state, so the
+same stages drive tests, benchmarks, and the hardware cost models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import radiance_cache as rc
+from repro.core.camera import Camera
+from repro.core.gaussians import GaussianScene
+from repro.core.projection import project
+from repro.core.rasterize import RasterAux, assemble_image, rasterize_tiles
+from repro.core.s2 import SortShared, predict_pose, shared_features, speculative_sort
+from repro.core.sorting import sort_scene
+from repro.core.tiling import TILE, gather_tile_features, tile_grid
+
+
+@dataclasses.dataclass(frozen=True)
+class LuminaConfig:
+    """Algorithm configuration (paper defaults: window=6, margin=4, k=5)."""
+
+    window: int = 6            # sharing window N (frames per sort)
+    margin: int = 4            # expanded-viewport margin, pixels per side
+    capacity: int = 256        # per-tile Gaussian budget
+    k_record: int = 5          # alpha-record length
+    group_tiles: int = 4       # cache shared across group_tiles^2 tiles (4x4 in paper)
+    cache: rc.CacheConfig = rc.CacheConfig()
+    sort_method: str = 'dense'
+    max_tiles_per_gaussian: int = 16
+    bg: float = 0.0
+    use_s2: bool = True
+    use_rc: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, 'cache',
+                           self.cache._replace(k=self.k_record))
+
+
+class FrameStats(NamedTuple):
+    hit_rate: jax.Array          # fraction of pixels served from the cache
+    sig_frac: jax.Array          # significant / iterated Gaussians
+    mean_iterated: jax.Array     # average Gaussians iterated per pixel
+    saved_frac: jax.Array        # fraction of integration skipped thanks to RC
+    sorted_this_frame: jax.Array # 1.0 if Projection+Sorting ran
+
+
+# Pixel <-> cache-group reshaping lives in repro.core.groups (shared with the
+# kernel fast path); re-exported here for convenience.
+from repro.core.groups import group_dims, num_groups, regroup, ungroup  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# Stages
+# ---------------------------------------------------------------------------
+
+def render_frame_baseline(scene: GaussianScene, cam: Camera, cfg: LuminaConfig):
+    """Full 3DGS pipeline (Projection -> Sorting -> Rasterization), no reuse."""
+    proj = project(scene, cam)
+    lists = sort_scene(proj, cam.width, cam.height, cfg.capacity,
+                       method=cfg.sort_method,
+                       max_tiles_per_gaussian=cfg.max_tiles_per_gaussian)
+    feats = gather_tile_features(proj, lists)
+    colors, aux = rasterize_tiles(feats, lists.tiles_x, k_record=cfg.k_record,
+                                  bg=cfg.bg)
+    image = assemble_image(colors, lists.tiles_x, lists.tiles_y,
+                           cam.width, cam.height)
+    return image, colors, aux, lists
+
+
+def rc_apply(cache: rc.CacheState, tile_colors: jax.Array, aux: RasterAux,
+             tiles_x: int, tiles_y: int, cfg: LuminaConfig):
+    """Radiance-cache lookup + update for one frame's tile colors.
+
+    Returns (final tile colors, new cache, hit mask [T,P], saved-iteration
+    fraction scalar).
+    """
+    ids_g = regroup(aux.alpha_record, tiles_x, tiles_y, cfg.group_tiles)
+    raw_g = regroup(tile_colors, tiles_x, tiles_y, cfg.group_tiles)
+    hit, val, _, _, cache = rc.lookup_all_groups(cache, ids_g, cfg.cache)
+    final_g = jnp.where(hit[..., None], val, raw_g)
+    cache = rc.insert_all_groups(cache, ids_g, raw_g, ~hit, cfg.cache)
+
+    hit_t = ungroup(hit[..., None], tiles_x, tiles_y, cfg.group_tiles)[..., 0]
+    final = ungroup(final_g, tiles_x, tiles_y, cfg.group_tiles)
+    # A hit pixel stops after identifying its k significant Gaussians; pixels
+    # whose record never filled (iter_at_k >= n_iterated) save nothing.
+    saved = jnp.where(hit_t, jnp.maximum(aux.n_iterated - aux.iter_at_k, 0), 0)
+    saved_frac = jnp.sum(saved) / jnp.maximum(jnp.sum(aux.n_iterated), 1)
+    return final, cache, hit_t, saved_frac
+
+
+def _stats(aux: RasterAux, hit, saved_frac, sorted_flag) -> FrameStats:
+    tot_iter = jnp.maximum(jnp.sum(aux.n_iterated), 1)
+    return FrameStats(
+        hit_rate=jnp.mean(hit.astype(jnp.float32)),
+        sig_frac=jnp.sum(aux.n_significant) / tot_iter,
+        mean_iterated=jnp.mean(aux.n_iterated.astype(jnp.float32)),
+        saved_frac=saved_frac,
+        sorted_this_frame=jnp.asarray(sorted_flag, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# The runner
+# ---------------------------------------------------------------------------
+
+class LuminSys:
+    """Stateful frame-sequencer over the jitted stages.
+
+    Usage::
+
+        sys = LuminSys(scene, cfg, example_cam)
+        for cam in trajectory:
+            image, stats = sys.step(cam)
+    """
+
+    def __init__(self, scene: GaussianScene, cfg: LuminaConfig, cam0: Camera):
+        self.scene = scene
+        self.cfg = cfg
+        tx, ty = tile_grid(cam0.width, cam0.height)
+        self.tiles_x, self.tiles_y = tx, ty
+        self.cache = rc.init_cache(num_groups(cam0.width, cam0.height,
+                                              cfg.group_tiles), cfg.cache)
+        self.shared: Optional[SortShared] = None
+        self.prev_cam: Optional[Camera] = None
+        self.frame_idx = 0
+
+        cfgc = cfg
+
+        def _sort(scene, cam_pred):
+            return speculative_sort(
+                scene, cam_pred, margin=cfgc.margin, capacity=cfgc.capacity,
+                method=cfgc.sort_method,
+                max_tiles_per_gaussian=cfgc.max_tiles_per_gaussian)
+
+        def _render_shared(scene, cam, shared):
+            feats, lists = shared_features(scene, cam, shared)
+            colors, aux = rasterize_tiles(feats, lists.tiles_x,
+                                          k_record=cfgc.k_record, bg=cfgc.bg)
+            return colors, aux
+
+        def _render_full(scene, cam):
+            return render_frame_baseline(scene, cam, cfgc)
+
+        def _rc(cache, colors, aux):
+            return rc_apply(cache, colors, aux, tx, ty, cfgc)
+
+        self._sort = jax.jit(_sort)
+        self._render_shared = jax.jit(_render_shared)
+        self._render_full = jax.jit(_render_full)
+        self._rc = jax.jit(_rc)
+
+    def step(self, cam: Camera):
+        cfg = self.cfg
+        sorted_flag = 0.0
+        if cfg.use_s2:
+            if self.frame_idx % cfg.window == 0 or self.shared is None:
+                prev = self.prev_cam if self.prev_cam is not None else cam
+                pred = predict_pose(prev, cam, cfg.window)
+                self.shared = self._sort(self.scene, pred)
+                sorted_flag = 1.0
+            colors, aux = self._render_shared(self.scene, cam, self.shared)
+        else:
+            _, colors, aux, _ = self._render_full(self.scene, cam)
+            sorted_flag = 1.0
+
+        if cfg.use_rc:
+            colors, self.cache, hit, saved_frac = self._rc(self.cache, colors, aux)
+        else:
+            hit = jnp.zeros(aux.n_iterated.shape, bool)
+            saved_frac = jnp.float32(0.0)
+
+        image = assemble_image(colors, self.tiles_x, self.tiles_y,
+                               cam.width, cam.height)
+        stats = _stats(aux, hit, saved_frac, sorted_flag)
+        self.prev_cam = cam
+        self.frame_idx += 1
+        return image, stats

@@ -1,0 +1,131 @@
+"""Projection stage of the 3DGS pipeline (EWA splatting).
+
+Given a camera and a scene, produce per-Gaussian screen-space quantities:
+2D means, conics (inverse 2D covariances), projected radii, depths, colors,
+opacities and an in-frustum validity mask.  All fixed shape [N, ...].
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gaussians as G
+from repro.core.camera import Camera
+from repro.core.gaussians import GaussianScene
+
+# Low-pass filter added to 2D covariance (anti-aliasing), as in 3DGS.
+COV2D_BLUR = 0.3
+# Cutoff: a Gaussian's footprint is bounded by 3 sigma.
+CUTOFF_SIGMA = 3.0
+
+
+class Projected(NamedTuple):
+    """Screen-space Gaussians (all [N, ...])."""
+
+    mean2d: jax.Array    # [N, 2] pixel coordinates
+    conic: jax.Array     # [N, 3] (a, b, c): inverse covariance [[a,b],[b,c]]
+    radius: jax.Array    # [N] bounding radius in pixels
+    depth: jax.Array     # [N] camera-space z
+    color: jax.Array     # [N, 3] view-dependent RGB (SH-evaluated)
+    opacity: jax.Array   # [N]
+    valid: jax.Array     # [N] bool — inside frustum and non-degenerate
+
+
+def project(scene: GaussianScene, cam: Camera) -> Projected:
+    """Project all Gaussians onto the screen of `cam` (vectorized EWA)."""
+    r_wc = G.quat_to_rotmat(cam.quat)        # world-from-camera
+    r_cw = r_wc.T
+    t = (scene.means - cam.position[None, :]) @ r_cw.T    # [N,3] camera frame
+    tx, ty, tz = t[:, 0], t[:, 1], t[:, 2]
+
+    in_depth = (tz > cam.near) & (tz < cam.far)
+    tz_safe = jnp.where(tz > cam.near, tz, cam.near)
+
+    # Frustum test with 30% guard band (as in the 3DGS reference).
+    tan_fov_x = (cam.width / 2.0) / cam.fx
+    tan_fov_y = (cam.height / 2.0) / cam.fy
+    lim_x = 1.3 * tan_fov_x
+    lim_y = 1.3 * tan_fov_y
+    in_fov = (jnp.abs(tx / tz_safe) < lim_x) & (jnp.abs(ty / tz_safe) < lim_y)
+
+    # Clamped camera coords for the Jacobian (avoids blow-up at frustum edge).
+    txc = jnp.clip(tx / tz_safe, -lim_x, lim_x) * tz_safe
+    tyc = jnp.clip(ty / tz_safe, -lim_y, lim_y) * tz_safe
+
+    mean2d = jnp.stack([
+        cam.fx * tx / tz_safe + cam.cx,
+        cam.fy * ty / tz_safe + cam.cy,
+    ], axis=-1)
+
+    # Jacobian of perspective projection, [N,2,3].
+    zero = jnp.zeros_like(tz_safe)
+    j = jnp.stack([
+        jnp.stack([cam.fx / tz_safe, zero, -cam.fx * txc / (tz_safe ** 2)], axis=-1),
+        jnp.stack([zero, cam.fy / tz_safe, -cam.fy * tyc / (tz_safe ** 2)], axis=-1),
+    ], axis=-2)
+
+    cov3d = G.covariances_3d(scene)                       # [N,3,3] world
+    # camera-frame covariance: R_cw Sigma R_cw^T
+    cov_cam = jnp.einsum('ij,njk,lk->nil', r_cw, cov3d, r_cw)
+    cov2d = jnp.einsum('nij,njk,nlk->nil', j, cov_cam, j)  # [N,2,2]
+    a = cov2d[:, 0, 0] + COV2D_BLUR
+    b = cov2d[:, 0, 1]
+    c = cov2d[:, 1, 1] + COV2D_BLUR
+
+    det = a * c - b * b
+    det_ok = det > 1e-12
+    det_safe = jnp.where(det_ok, det, 1.0)
+    conic = jnp.stack([c / det_safe, -b / det_safe, a / det_safe], axis=-1)
+
+    # Bounding radius: 3 sigma of the major axis.
+    mid = 0.5 * (a + c)
+    lam = mid + jnp.sqrt(jnp.maximum(mid * mid - det, 1e-12))
+    radius = jnp.ceil(CUTOFF_SIGMA * jnp.sqrt(lam))
+
+    view_dir = scene.means - cam.position[None, :]
+    color = G.eval_sh(scene, view_dir)
+    opacity = G.opacities(scene)
+
+    valid = in_depth & in_fov & det_ok
+    return Projected(
+        mean2d=mean2d,
+        conic=conic,
+        radius=jnp.where(valid, radius, 0.0),
+        depth=jnp.where(valid, tz, jnp.inf),
+        color=color,
+        opacity=jnp.where(valid, opacity, 0.0),
+        valid=valid,
+    )
+
+
+def recolor(scene: GaussianScene, cam: Camera, proj: Projected) -> Projected:
+    """Recompute only the view-dependent colors at a (new) camera pose.
+
+    Used by the S^2 sorting-shared path: the paper requires colors to be
+    re-evaluated from SH at every rendered pose even when sorting is reused.
+    """
+    view_dir = scene.means - cam.position[None, :]
+    return proj._replace(color=G.eval_sh(scene, view_dir))
+
+
+def reproject_geometry(scene: GaussianScene, cam: Camera, proj: Projected) -> Projected:
+    """Recompute screen-space geometry + color at pose `cam`, but KEEP the
+    validity/culling decisions of `proj` (made at the speculative pose).
+
+    This is the sorting-shared render path: no culling, no tile rebuild, no
+    sort — only the cheap per-Gaussian arithmetic is refreshed so the image is
+    geometrically correct at the new pose.
+    """
+    fresh = project(scene, cam)
+    # Keep the speculative culling mask: Gaussians culled at the sorting pose
+    # stay culled (the expanded viewport makes this safe); Gaussians valid at
+    # the sorting pose but degenerate now are dropped.
+    valid = proj.valid & fresh.valid
+    return fresh._replace(
+        valid=valid,
+        opacity=jnp.where(valid, fresh.opacity, 0.0),
+        radius=jnp.where(valid, fresh.radius, 0.0),
+        depth=jnp.where(valid, fresh.depth, jnp.inf),
+    )

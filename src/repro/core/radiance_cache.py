@@ -1,0 +1,212 @@
+"""RC — Radiance Caching (paper Sec. 3.2) as a functional set-associative cache.
+
+Cache key  : the ids of the first ``k`` *significant* Gaussians a pixel's ray
+             intersects (the alpha-record emitted by the rasterizer).
+Cache value: the pixel RGB.
+Geometry   : ``n_sets`` sets x ``n_ways`` ways, one independent cache per
+             tile *group* (the paper shares one LuminCache across a 4x4 block
+             of 16x16 tiles = 64x64 pixels, double-buffered per group).
+
+Indexing follows LuminCache (Fig. 16): ``log2(n_sets)/k`` low bits of each id
+are concatenated to form the set index.  For the tag we store the exact ids
+(int32) instead of the paper's 16-bit slices — strictly stronger matching
+with zero aliasing; the hardware cost model still charges the 10-byte tag.
+
+Replacement: LRU via an age counter (a faithful stand-in for the paper's
+pseudo-LRU tree bits; both approximate LRU).  In-batch insert conflicts
+(two pixels mapping to the same victim slot in the same frame) are resolved
+deterministically: the lowest pixel index wins, mirroring the sequential
+insert order of the hardware.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CacheConfig(NamedTuple):
+    n_sets: int = 1024
+    n_ways: int = 4
+    k: int = 5              # alpha-record length (ids per tag)
+    index_bits_shift: int = 3   # paper uses bits [3:18]; index starts at bit 3
+    index_mode: str = 'hash'    # 'hash' (mixed, default) | 'bitconcat' (paper HW)
+    insert_rounds: int = 4      # batch-insert rounds (hardware inserts serially;
+                                # each round lands at most one entry per slot)
+
+
+class CacheState(NamedTuple):
+    """Functional cache state; leading dim = tile group."""
+
+    tags: jax.Array    # [G, S, W, k] int32 (-2 = invalid slot)
+    values: jax.Array  # [G, S, W, 3] float32
+    age: jax.Array     # [G, S, W] int32 (higher = more recently used)
+    clock: jax.Array   # [G] int32 monotonic insert counter
+
+
+INVALID_TAG = -2  # -1 is a legal record padding value, so invalid slots use -2
+
+
+def init_cache(num_groups: int, cfg: CacheConfig) -> CacheState:
+    g, s, w, k = num_groups, cfg.n_sets, cfg.n_ways, cfg.k
+    return CacheState(
+        tags=jnp.full((g, s, w, k), INVALID_TAG, jnp.int32),
+        values=jnp.zeros((g, s, w, 3), jnp.float32),
+        age=jnp.zeros((g, s, w), jnp.int32),
+        clock=jnp.zeros((g,), jnp.int32),
+    )
+
+
+def set_index(ids: jax.Array, cfg: CacheConfig) -> jax.Array:
+    """Set index from the k record ids ([..., k] -> [...]).
+
+    'bitconcat' concatenates ``log2(n_sets)/k`` low bits of each id — exactly
+    LuminCache's indexing (Fig. 16).  It relies on ids being numerous enough
+    to fill those bits; for the small procedural scenes used on CPU we default
+    to 'hash', a multiplicative mix of the same ids (same hardware cost class:
+    a few adders), which distributes small-id populations uniformly.
+    """
+    if cfg.index_mode == 'bitconcat':
+        bits_total = cfg.n_sets.bit_length() - 1   # log2(n_sets)
+        per_id = max(1, bits_total // cfg.k)
+        mask = (1 << per_id) - 1
+        shifted = (ids >> cfg.index_bits_shift) & mask      # [..., k]
+        weights = (1 << (per_id * jnp.arange(cfg.k, dtype=jnp.int32)))
+        idx = jnp.sum(shifted.astype(jnp.int32) * weights, axis=-1)
+        return jnp.abs(idx) % cfg.n_sets
+    # 'hash': odd-constant multiplicative mixing, xor-folded.  Must stay in
+    # exact lockstep with repro.kernels.rc_lookup._mix_index.
+    consts = (0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F, 0x165667B1)
+    h = (ids[..., 0] + 3).astype(jnp.uint32) * jnp.uint32(consts[0])
+    for i in range(1, ids.shape[-1]):
+        m = ((ids[..., i] + 3).astype(jnp.uint32)
+             * jnp.uint32(consts[i % len(consts)]))
+        h = (h ^ m) * jnp.uint32(0x9E3779B1)
+    h = h ^ (h >> 15)
+    return (h % jnp.uint32(cfg.n_sets)).astype(jnp.int32)
+
+
+def _match(tags_at_set: jax.Array, ids: jax.Array) -> jax.Array:
+    """tags_at_set [B, W, k] vs ids [B, k] -> [B, W] exact-match mask."""
+    return jnp.all(tags_at_set == ids[:, None, :], axis=-1)
+
+
+def lookup(cache: CacheState, group: int | jax.Array, ids: jax.Array,
+           cfg: CacheConfig):
+    """Query one group's cache with B records. Returns (hit [B], value [B,3],
+    set_idx [B], way [B], cache-with-updated-LRU-age)."""
+    tags, values, age, clock = (cache.tags[group], cache.values[group],
+                                cache.age[group], cache.clock[group])
+    sidx = set_index(ids, cfg)                    # [B]
+    cand = tags[sidx]                              # [B, W, k]
+    m = _match(cand, ids)                          # [B, W]
+    hit = jnp.any(m, axis=-1)
+    way = jnp.argmax(m, axis=-1)
+    val = values[sidx, way]
+    # LRU touch for hits (deterministic: later pixels touch later).
+    b = ids.shape[0]
+    touch_age = clock + 1 + jnp.arange(b, dtype=jnp.int32)
+    age = age.at[sidx, way].max(jnp.where(hit, touch_age, -1))
+    new_clock = clock + b
+    new_cache = CacheState(cache.tags,
+                           cache.values,
+                           cache.age.at[group].set(age),
+                           cache.clock.at[group].set(new_clock))
+    return hit, val, sidx, way, new_cache
+
+
+def _insert_round(tags, values, age, clock, sidx, ids, rgb, do_insert):
+    """One insert round: at most one new entry lands per (set, way) slot.
+
+    Winners-only scatter: losing lanes get out-of-range indices and are
+    dropped (``mode='drop'``), so no stale value can clobber a winner.
+    Victim way = first invalid way, else least-recently-used (min age).
+    Conflicts on the same slot: lowest pixel index wins (mirrors the
+    hardware's sequential insert order).
+    """
+    s, w = age.shape
+    b = ids.shape[0]
+    slot_tags = tags[sidx]                                   # [B, W, k]
+    invalid = jnp.all(slot_tags == INVALID_TAG, axis=-1)     # [B, W]
+    slot_age = jnp.where(invalid, jnp.iinfo(jnp.int32).min, age[sidx])
+    victim = jnp.argmin(slot_age, axis=-1)                   # [B]
+
+    slot = sidx * w + victim                                 # [B]
+    pix = jnp.arange(b, dtype=jnp.int32)
+    winner = jnp.full((s * w,), b, jnp.int32).at[slot].min(
+        jnp.where(do_insert, pix, b))
+    wins = do_insert & (winner[slot] == pix)
+
+    sidx_eff = jnp.where(wins, sidx, s)                      # out of range -> drop
+    new_age_val = clock + 1 + pix
+    tags = tags.at[sidx_eff, victim].set(ids, mode='drop')
+    values = values.at[sidx_eff, victim].set(rgb, mode='drop')
+    age = age.at[sidx_eff, victim].set(new_age_val, mode='drop')
+    return tags, values, age, clock + b
+
+
+def touch_all_groups(cache: CacheState, ids: jax.Array, hit: jax.Array,
+                     way: jax.Array, cfg: CacheConfig) -> CacheState:
+    """Apply the LRU side effect of a lookup (age bump for hits) without
+    re-probing — used by the kernel fast path, whose Pallas lookup returns
+    (hit, way) but leaves cache state untouched.  Matches ``lookup``'s age
+    and clock evolution exactly so both paths stay bit-identical."""
+    def one(tags, values, age, clock, gids, ghit, gway):
+        b = gids.shape[0]
+        sidx = set_index(gids, cfg)
+        touch_age = clock + 1 + jnp.arange(b, dtype=jnp.int32)
+        age = age.at[sidx, gway].max(jnp.where(ghit, touch_age, -1))
+        return age, clock + b
+
+    age, clock = jax.vmap(one)(cache.tags, cache.values, cache.age,
+                               cache.clock, ids, hit, way)
+    return CacheState(cache.tags, cache.values, age, clock)
+
+
+def insert(cache: CacheState, group: int | jax.Array, ids: jax.Array,
+           rgb: jax.Array, do_insert: jax.Array, cfg: CacheConfig) -> CacheState:
+    """Insert B (ids -> rgb) entries into one group's cache where ``do_insert``.
+
+    Hardware inserts pixels serially; a vectorized batch can land at most one
+    entry per slot per scatter, so we run ``cfg.insert_rounds`` rounds.  Each
+    round first re-probes the cache so duplicates of already-landed tags
+    become hits and drop out of the insert set.
+    """
+    tags, values, age, clock = (cache.tags[group], cache.values[group],
+                                cache.age[group], cache.clock[group])
+    sidx = set_index(ids, cfg)                               # [B]
+    pending = do_insert
+    for _ in range(max(1, cfg.insert_rounds)):
+        present = jnp.any(_match(tags[sidx], ids), axis=-1)
+        pending = pending & ~present
+        tags, values, age, clock = _insert_round(
+            tags, values, age, clock, sidx, ids, rgb, pending)
+
+    return CacheState(cache.tags.at[group].set(tags),
+                      cache.values.at[group].set(values),
+                      cache.age.at[group].set(age),
+                      cache.clock.at[group].set(clock))
+
+
+def lookup_all_groups(cache: CacheState, ids: jax.Array, cfg: CacheConfig):
+    """vmapped lookup over all groups. ids: [G, B, k]."""
+    def one(tags, values, age, clock, gids):
+        sub = CacheState(tags[None], values[None], age[None], clock[None])
+        hit, val, sidx, way, new = lookup(sub, 0, gids, cfg)
+        return hit, val, sidx, way, (new.tags[0], new.values[0], new.age[0], new.clock[0])
+    hit, val, sidx, way, (t, v, a, c) = jax.vmap(one)(
+        cache.tags, cache.values, cache.age, cache.clock, ids)
+    return hit, val, sidx, way, CacheState(t, v, a, c)
+
+
+def insert_all_groups(cache: CacheState, ids: jax.Array, rgb: jax.Array,
+                      do_insert: jax.Array, cfg: CacheConfig) -> CacheState:
+    """vmapped insert over all groups. ids: [G, B, k], rgb: [G, B, 3]."""
+    def one(tags, values, age, clock, gids, grgb, gdo):
+        sub = CacheState(tags[None], values[None], age[None], clock[None])
+        new = insert(sub, 0, gids, grgb, gdo, cfg)
+        return new.tags[0], new.values[0], new.age[0], new.clock[0]
+    t, v, a, c = jax.vmap(one)(cache.tags, cache.values, cache.age, cache.clock,
+                               ids, rgb, do_insert)
+    return CacheState(t, v, a, c)

@@ -1,0 +1,132 @@
+"""Rasterization (color integration) — pure-JAX reference implementation.
+
+This is the paper's Eqn. 1 evaluated tile-by-tile in depth order:
+
+    C(p) = sum_i  Gamma_i * alpha_i * c_i,   Gamma_i = prod_{j<i} (1 - alpha_j)
+
+with the two reference-implementation rules Lumina exploits:
+  * Gaussians with alpha <= 1/255 are *insignificant* and skipped;
+  * integration terminates once Gamma < theta (1e-4).
+
+Besides the image, the rasterizer emits the statistics Lumina's algorithm and
+hardware model need:
+  * the **alpha-record**: ids of the first `k_record` significant Gaussians of
+    every pixel (the RC cache tag material, Sec. 3.2);
+  * per-pixel significant / iterated counts (Fig. 4 characterization, and the
+    LuminCore cost model inputs);
+  * the iteration index at which the k-th significant Gaussian was found
+    (everything after it is skippable on an RC hit).
+
+The Pallas kernel in ``repro/kernels/rasterize.py`` implements the same
+contract with VMEM tiling and chunk-level early exit; this module is its
+oracle (``repro/kernels/ref.py`` re-exports from here).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussians import ALPHA_MAX, ALPHA_SIGNIFICANT, TRANSMITTANCE_EPS
+from repro.core.tiling import TILE, TileFeatures, TileLists
+
+
+class RasterAux(NamedTuple):
+    """Per-pixel rasterization statistics, shapes [T, P] (P = TILE*TILE)."""
+
+    alpha_record: jax.Array   # [T, P, k_record] int32, -1 padded
+    n_significant: jax.Array  # [T, P] int32
+    n_iterated: jax.Array     # [T, P] int32 (Gaussians seen before termination)
+    iter_at_k: jax.Array      # [T, P] int32 (iterations to find k-th significant)
+    transmittance: jax.Array  # [T, P] final Gamma
+
+
+def _pixel_coords(tiles_x: int, num_tiles: int):
+    """Pixel-center coordinates for every tile: [T, P, 2]."""
+    t = jnp.arange(num_tiles, dtype=jnp.int32)
+    ox = (t % tiles_x) * TILE
+    oy = (t // tiles_x) * TILE
+    py, px = jnp.meshgrid(jnp.arange(TILE), jnp.arange(TILE), indexing='ij')
+    px = px.reshape(-1)[None, :] + ox[:, None]   # [T, P]
+    py = py.reshape(-1)[None, :] + oy[:, None]
+    return jnp.stack([px + 0.5, py + 0.5], axis=-1).astype(jnp.float32)
+
+
+def rasterize_tiles(feats: TileFeatures, tiles_x: int, *, k_record: int = 5,
+                    bg: float = 0.0) -> tuple[jax.Array, RasterAux]:
+    """Integrate colors for all tiles.
+
+    Returns (tile_colors [T, P, 3], aux).
+    """
+    num_tiles = feats.mean2d.shape[0]
+    p = TILE * TILE
+    pix = _pixel_coords(tiles_x, num_tiles)      # [T, P, 2]
+
+    def per_tile(pix_t, mean2d, conic, color, opacity, ids):
+        def step(carry, g):
+            (acc, trans, rec_ids, rec_cnt, n_sig, n_iter, it_k, i) = carry
+            g_mean, g_conic, g_color, g_op, g_id = g
+            d = pix_t - g_mean[None, :]                     # [P, 2]
+            dx, dy = d[:, 0], d[:, 1]
+            power = -0.5 * (g_conic[0] * dx * dx + g_conic[2] * dy * dy) \
+                - g_conic[1] * dx * dy
+            alpha = jnp.minimum(ALPHA_MAX, g_op * jnp.exp(power))
+            valid = (power <= 0.0) & (g_id >= 0)
+            active = trans > TRANSMITTANCE_EPS
+            sig = (alpha > ALPHA_SIGNIFICANT) & valid
+            contrib = sig & active
+
+            w = jnp.where(contrib, trans * alpha, 0.0)
+            acc = acc + w[:, None] * g_color[None, :]
+            trans = jnp.where(contrib, trans * (1.0 - alpha), trans)
+
+            # alpha-record update (first k significant ids).
+            can_rec = contrib & (rec_cnt < k_record)
+            slot = jax.nn.one_hot(rec_cnt, k_record, dtype=bool) \
+                & can_rec[:, None]                           # [P, k]
+            rec_ids = jnp.where(slot, g_id, rec_ids)
+            new_cnt = rec_cnt + can_rec.astype(jnp.int32)
+            just_filled = (new_cnt == k_record) & (rec_cnt < k_record)
+            it_k = jnp.where(just_filled, i + 1, it_k)
+            n_sig = n_sig + contrib.astype(jnp.int32)
+            n_iter = n_iter + (active & (g_id >= 0)).astype(jnp.int32)
+            return (acc, trans, rec_ids, new_cnt, n_sig, n_iter, it_k, i + 1), None
+
+        k = mean2d.shape[0]
+        init = (
+            jnp.zeros((p, 3), jnp.float32),
+            jnp.ones((p,), jnp.float32),
+            jnp.full((p, k_record), -1, jnp.int32),
+            jnp.zeros((p,), jnp.int32),
+            jnp.zeros((p,), jnp.int32),
+            jnp.zeros((p,), jnp.int32),
+            jnp.full((p,), k, jnp.int32),   # iter_at_k defaults to "all of them"
+            jnp.int32(0),
+        )
+        (acc, trans, rec_ids, rec_cnt, n_sig, n_iter, it_k, _), _ = jax.lax.scan(
+            step, init, (mean2d, conic, color, opacity, ids))
+        acc = acc + trans[:, None] * bg
+        return acc, trans, rec_ids, n_sig, n_iter, it_k
+
+    acc, trans, rec, n_sig, n_iter, it_k = jax.vmap(per_tile)(
+        pix, feats.mean2d, feats.conic, feats.color, feats.opacity, feats.ids)
+    aux = RasterAux(alpha_record=rec, n_significant=n_sig, n_iterated=n_iter,
+                    iter_at_k=it_k, transmittance=trans)
+    return acc, aux
+
+
+def assemble_image(tile_colors: jax.Array, tiles_x: int, tiles_y: int,
+                   width: int, height: int) -> jax.Array:
+    """[T, P, 3] tile colors -> [H, W, 3] image (crops tile padding)."""
+    img = tile_colors.reshape(tiles_y, tiles_x, TILE, TILE, 3)
+    img = img.transpose(0, 2, 1, 3, 4).reshape(tiles_y * TILE, tiles_x * TILE, 3)
+    return img[:height, :width]
+
+
+def scatter_tile_pixels(values: jax.Array, tiles_x: int, tiles_y: int,
+                        width: int, height: int) -> jax.Array:
+    """Like assemble_image but for scalar per-pixel stats: [T, P] -> [H, W]."""
+    img = values.reshape(tiles_y, tiles_x, TILE, TILE)
+    img = img.transpose(0, 2, 1, 3).reshape(tiles_y * TILE, tiles_x * TILE)
+    return img[:height, :width]

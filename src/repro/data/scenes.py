@@ -1,0 +1,87 @@
+"""Procedural Gaussian scenes (the container ships no datasets).
+
+``structured_scene`` builds a spatially-coherent ground-truth scene —
+Gaussians laid on parametric surfaces (sphere / plane / torus) with smooth
+color fields — so the temporal/ray-coherence properties Lumina exploits
+(significant-Gaussian sparsity, tag stability across nearby rays) actually
+hold, as they do for trained scenes.  Purely random scenes would understate
+cache hit rates; see DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gaussians import GaussianScene
+
+
+def _sphere(key, n, center, radius, base_color):
+    k1, k2 = jax.random.split(key)
+    d = jax.random.normal(k1, (n, 3))
+    d = d / (jnp.linalg.norm(d, axis=-1, keepdims=True) + 1e-9)
+    means = jnp.asarray(center) + radius * d
+    # color varies smoothly over the surface
+    col = jnp.asarray(base_color) + 0.35 * d
+    return means, col, k2
+
+
+def _plane(key, n, origin, u, v, base_color):
+    k1, k2 = jax.random.split(key)
+    ab = jax.random.uniform(k1, (n, 2), minval=-1.0, maxval=1.0)
+    means = (jnp.asarray(origin) + ab[:, :1] * jnp.asarray(u)
+             + ab[:, 1:2] * jnp.asarray(v))
+    col = jnp.asarray(base_color) + 0.25 * jnp.concatenate(
+        [jnp.sin(3 * ab), jnp.cos(2 * ab[:, :1] + ab[:, 1:2])], axis=-1)
+    return means, col, k2
+
+
+def _torus(key, n, center, r_major, r_minor, base_color):
+    k1, k2, k3 = jax.random.split(key, 3)
+    th = jax.random.uniform(k1, (n,), minval=0, maxval=2 * jnp.pi)
+    ph = jax.random.uniform(k2, (n,), minval=0, maxval=2 * jnp.pi)
+    x = (r_major + r_minor * jnp.cos(ph)) * jnp.cos(th)
+    y = r_minor * jnp.sin(ph)
+    z = (r_major + r_minor * jnp.cos(ph)) * jnp.sin(th)
+    means = jnp.asarray(center) + jnp.stack([x, y, z], axis=-1)
+    col = jnp.asarray(base_color) + 0.3 * jnp.stack(
+        [jnp.cos(th), jnp.sin(2 * ph), jnp.sin(th + ph)], axis=-1)
+    return means, col, k3
+
+
+def structured_scene(key: jax.Array, num_gaussians: int,
+                     scale_range=(0.015, 0.06),
+                     large_gaussian_frac: float = 0.0) -> GaussianScene:
+    """A coherent multi-surface scene in the unit-ish cube around the origin.
+
+    ``large_gaussian_frac`` injects a fraction of oversized Gaussians to
+    recreate the failure mode cache-aware fine-tuning fixes (Fig. 13).
+    """
+    n1 = num_gaussians // 3
+    n2 = num_gaussians // 3
+    n3 = num_gaussians - n1 - n2
+    m1, c1, key = _sphere(key, n1, (0.0, 0.1, 0.0), 0.45, (0.7, 0.3, 0.25))
+    m2, c2, key = _plane(key, n2, (0.0, -0.5, 0.0), (1.2, 0.0, 0.0),
+                         (0.0, 0.0, 1.2), (0.25, 0.55, 0.3))
+    m3, c3, key = _torus(key, n3, (0.0, 0.35, 0.0), 0.7, 0.12, (0.3, 0.35, 0.75))
+    means = jnp.concatenate([m1, m2, m3])
+    colors = jnp.clip(jnp.concatenate([c1, c2, c3]), 0.02, 0.98)
+
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    n = num_gaussians
+    log_scales = jnp.log(jax.random.uniform(
+        k1, (n, 3), minval=scale_range[0], maxval=scale_range[1]))
+    if large_gaussian_frac > 0:
+        big = jax.random.bernoulli(k5, large_gaussian_frac, (n, 1))
+        log_scales = jnp.where(big, jnp.log(0.35), log_scales)
+    quats = jax.random.normal(k2, (n, 4))
+    quats = quats.at[:, 0].add(3.0)
+    opacity_logit = jax.random.uniform(k3, (n,), minval=0.5, maxval=3.0)
+    # invert the SH DC activation: c = SH_C0 * dc + 0.5  =>  dc = (c - 0.5)/SH_C0
+    sh_dc = (colors - 0.5) / 0.28209479177387814
+    sh_rest = 0.08 * jax.random.normal(k4, (n, 3, 3))
+    return GaussianScene(means.astype(jnp.float32),
+                         log_scales.astype(jnp.float32),
+                         quats.astype(jnp.float32),
+                         opacity_logit.astype(jnp.float32),
+                         sh_dc.astype(jnp.float32),
+                         sh_rest.astype(jnp.float32))

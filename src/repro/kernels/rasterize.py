@@ -1,0 +1,230 @@
+"""Pallas TPU rasterization kernel — the LuminCore NRU, re-expressed for TPU.
+
+One grid program = one 16x16-pixel tile.  The tile's depth-sorted Gaussian
+features live in VMEM (streamed there by the Pallas pipeline); the kernel
+walks them in chunks of ``chunk`` Gaussians:
+
+  frontend (NRU PE array analogue)
+      alpha for the whole (chunk x 256 pixels) block is evaluated *densely*
+      on the VPU — conic quadratic form + exp — exactly the cheap uniform
+      work the paper's PE frontend does for every Gaussian;
+  backend (NRU shared backend analogue)
+      the order-sensitive color integration collapses to closed form with an
+      exclusive prefix-product of (1 - alpha) along the chunk axis
+      (associative scan) followed by ONE [P,C]x[C,3] matmul on the MXU —
+      only *significant* Gaussians contribute via masking, mirroring the
+      FIFO that feeds the paper's backend;
+  early exit (sparsity harvesting)
+      a `while`-loop over chunks stops as soon as every pixel in the tile is
+      terminated / its alpha-record is full / it is not live — the TPU
+      analogue of warp-divergence elimination: whole chunks of work are
+      skipped at the granularity the hardware actually schedules.
+
+The same kernel serves three modes (see ops.py):
+  * full      — baseline rasterization (S^2 path);
+  * prefix    — stop each pixel once its k-record fills (RC phase A:
+                "identify the first k significant Gaussians");
+  * resume    — continue cache-MISS pixels from their saved state
+                (RC phase B), with per-pixel ``start_iter`` gating.
+
+Exact-match contract with ``repro.kernels.ref.rasterize_ref`` (same
+floating-point semantics, including the Gamma<eps freeze rule) — verified by
+shape/dtype sweep tests.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.gaussians import ALPHA_MAX, ALPHA_SIGNIFICANT, TRANSMITTANCE_EPS
+
+P = 256            # pixels per tile (16 x 16)
+TILE = 16
+
+
+def _exclusive_cumprod(x):
+    inc = jax.lax.associative_scan(jnp.multiply, x, axis=0)
+    exc = jnp.concatenate([jnp.ones_like(x[:1]), inc[:-1]], axis=0)
+    return inc, exc
+
+
+def _exclusive_cumsum_i32(x):
+    inc = jax.lax.associative_scan(jnp.add, x.astype(jnp.int32), axis=0)
+    return inc - x.astype(jnp.int32)
+
+
+def _kernel(mean2d_ref, conic_ref, color_ref, opacity_ref, ids_ref,
+            acc0_ref, trans0_ref, rec0_ref, cnt0_ref, start_ref, live_ref,
+            acc_ref, trans_ref, rec_ref, cnt_ref, nsig_ref, niter_ref,
+            itk_ref, chunks_ref,
+            *, tiles_x: int, k_record: int, chunk: int, stop_at_k: bool,
+            bg: float):
+    t = pl.program_id(0)
+    k_total = mean2d_ref.shape[1]
+    nc = k_total // chunk
+
+    ox = (t % tiles_x) * TILE
+    oy = (t // tiles_x) * TILE
+    px2 = jax.lax.broadcasted_iota(jnp.float32, (TILE, TILE), 1)
+    py2 = jax.lax.broadcasted_iota(jnp.float32, (TILE, TILE), 0)
+    px = px2.reshape(P) + ox + 0.5
+    py = py2.reshape(P) + oy + 0.5
+
+    live = live_ref[0] != 0                    # [P]
+    start = start_ref[0]                       # [P] int32
+    # first chunk that any live pixel needs
+    start_eff = jnp.where(live, start, k_total)
+    c0 = jnp.min(start_eff) // chunk
+    c0 = jnp.minimum(c0, nc)
+
+    def body(carry):
+        c, acc, trans, rec, cnt, nsig, niter, itk, nchunks = carry
+        sl = pl.ds(c * chunk, chunk)
+        gmx = mean2d_ref[0, sl, 0]             # [C]
+        gmy = mean2d_ref[0, sl, 1]
+        ca = conic_ref[0, sl, 0]
+        cb = conic_ref[0, sl, 1]
+        cc = conic_ref[0, sl, 2]
+        col = color_ref[0, sl, :]              # [C, 3]
+        op = opacity_ref[0, sl]                # [C]
+        gid = ids_ref[0, sl]                   # [C] int32
+
+        dx = px[None, :] - gmx[:, None]        # [C, P]
+        dy = py[None, :] - gmy[:, None]
+        power = (-0.5 * (ca[:, None] * dx * dx + cc[:, None] * dy * dy)
+                 - cb[:, None] * dx * dy)
+        alpha = jnp.minimum(ALPHA_MAX, op[:, None] * jnp.exp(power))
+        valid = (power <= 0.0) & (gid[:, None] >= 0)
+
+        abs_pos = c * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+        allowed = (abs_pos >= start[None, :]) & live[None, :]
+        sig = (alpha > ALPHA_SIGNIFICANT) & valid & allowed    # [C, P]
+
+        if stop_at_k:
+            pos_sig = cnt[None, :] + _exclusive_cumsum_i32(sig)
+            sig = sig & (pos_sig < k_record)
+
+        beta = jnp.where(sig, 1.0 - alpha, 1.0)
+        p_inc, p_exc = _exclusive_cumprod(beta)
+        p_exc = p_exc * trans[None, :]
+        p_inc = p_inc * trans[None, :]
+        contrib = sig & (p_exc > TRANSMITTANCE_EPS)
+
+        w = jnp.where(contrib, p_exc * alpha, 0.0)             # [C, P]
+        acc = acc + jax.lax.dot_general(
+            w, col, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)                # [P, 3]
+        trans = jnp.minimum(trans, jnp.min(
+            jnp.where(contrib, p_inc, trans[None, :]), axis=0))
+
+        pos = cnt[None, :] + _exclusive_cumsum_i32(contrib)    # [C, P]
+        for kk in range(k_record):
+            m = contrib & (pos == kk)
+            sel = jnp.max(jnp.where(m, gid[:, None], -1), axis=0)  # [P]
+            rec = rec.at[kk].set(jnp.where(sel >= 0, sel, rec[kk]))
+        iters = abs_pos + 1                                    # [C, 1]
+        m_k = contrib & (pos == (k_record - 1))
+        sel_it = jnp.max(jnp.where(m_k, iters, -1), axis=0)
+        itk = jnp.where(sel_it >= 0, sel_it, itk)
+
+        cnt = cnt + jnp.sum(contrib.astype(jnp.int32), axis=0)
+        nsig = nsig + jnp.sum(contrib.astype(jnp.int32), axis=0)
+        active = (p_exc > TRANSMITTANCE_EPS) & (gid[:, None] >= 0) & allowed
+        if stop_at_k:
+            # a pixel pauses right after its record fills: iterations past the
+            # fill point are not examined (hardware would hand off to lookup)
+            active = active & (pos < k_record)
+        niter = niter + jnp.sum(active.astype(jnp.int32), axis=0)
+        return (c + 1, acc, trans, rec, cnt, nsig, niter, itk, nchunks + 1)
+
+    def cond(carry):
+        c, acc, trans, rec, cnt, nsig, niter, itk, nchunks = carry
+        pix_done = ~live | (trans <= TRANSMITTANCE_EPS)
+        if stop_at_k:
+            pix_done = pix_done | (cnt >= k_record)
+        return (c < nc) & ~jnp.all(pix_done)
+
+    init = (
+        c0,
+        acc0_ref[0].astype(jnp.float32),       # [P, 3]
+        trans0_ref[0].astype(jnp.float32),     # [P]
+        rec0_ref[0].T,                          # [k, P] in-kernel layout
+        cnt0_ref[0],                            # [P]
+        jnp.zeros((P,), jnp.int32),
+        jnp.zeros((P,), jnp.int32),
+        jnp.full((P,), k_total, jnp.int32),
+        jnp.int32(0),
+    )
+    (c, acc, trans, rec, cnt, nsig, niter, itk, nchunks) = jax.lax.while_loop(
+        cond, body, init)
+
+    del bg  # background compositing happens once, in ops.py, after the final phase
+    acc_ref[0] = acc
+    trans_ref[0] = trans
+    rec_ref[0] = rec.T
+    cnt_ref[0] = cnt
+    nsig_ref[0] = nsig
+    niter_ref[0] = niter
+    itk_ref[0] = itk
+    chunks_ref[0, 0] = nchunks
+
+
+class RasterState(NamedTuple):
+    """Per-pixel kernel state: inputs (phase init) and outputs alike."""
+
+    acc: jax.Array        # [T, P, 3]
+    trans: jax.Array      # [T, P]
+    record: jax.Array     # [T, P, k]
+    rec_cnt: jax.Array    # [T, P]
+    n_sig: jax.Array      # [T, P]
+    n_iter: jax.Array     # [T, P]
+    iter_at_k: jax.Array  # [T, P]
+    chunks: jax.Array     # [T, 1] chunks actually processed (early-exit stat)
+
+
+def rasterize_pallas(mean2d, conic, color, opacity, ids,
+                     acc0, trans0, rec0, cnt0, start_iter, live,
+                     *, tiles_x: int, k_record: int = 5, chunk: int = 64,
+                     stop_at_k: bool = False, bg: float = 0.0,
+                     interpret: bool = True) -> RasterState:
+    """Invoke the kernel. Feature arrays are [T, K, ...]; K must be a
+    multiple of ``chunk`` (ops.py pads).  State arrays are [T, P(=256), ...].
+    """
+    t, k_total = ids.shape
+    assert k_total % chunk == 0, (k_total, chunk)
+    kr = rec0.shape[-1]
+    assert kr == k_record
+
+    grid = (t,)
+    feat = lambda *dims: pl.BlockSpec((1, *dims), lambda i: (i,) + (0,) * len(dims))
+    out_shapes = (
+        jax.ShapeDtypeStruct((t, P, 3), jnp.float32),   # acc
+        jax.ShapeDtypeStruct((t, P), jnp.float32),      # trans
+        jax.ShapeDtypeStruct((t, P, k_record), jnp.int32),
+        jax.ShapeDtypeStruct((t, P), jnp.int32),        # rec_cnt
+        jax.ShapeDtypeStruct((t, P), jnp.int32),        # n_sig
+        jax.ShapeDtypeStruct((t, P), jnp.int32),        # n_iter
+        jax.ShapeDtypeStruct((t, P), jnp.int32),        # iter_at_k
+        jax.ShapeDtypeStruct((t, 1), jnp.int32),        # chunks processed
+    )
+    out_specs = (
+        feat(P, 3), feat(P), feat(P, k_record), feat(P), feat(P), feat(P),
+        feat(P), feat(1),
+    )
+    in_specs = (
+        feat(k_total, 2), feat(k_total, 3), feat(k_total, 3), feat(k_total),
+        feat(k_total),
+        feat(P, 3), feat(P), feat(P, k_record), feat(P), feat(P), feat(P),
+    )
+    kern = functools.partial(_kernel, tiles_x=tiles_x, k_record=k_record,
+                             chunk=chunk, stop_at_k=stop_at_k, bg=bg)
+    outs = pl.pallas_call(
+        kern, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shapes, interpret=interpret,
+    )(mean2d, conic, color, opacity, ids,
+      acc0, trans0, rec0, cnt0, start_iter, live.astype(jnp.int32))
+    return RasterState(*outs)

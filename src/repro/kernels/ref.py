@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-identical contracts).
+
+``rasterize_ref`` mirrors ``repro.kernels.rasterize.rasterize_pallas``
+gaussian-by-gaussian with a sequential ``lax.scan`` — the obviously-correct
+formulation of Eqn. 1 with the 1/255 significance rule and the Gamma<eps
+freeze, generalized to phase-init state (start_iter / live / record resume).
+
+``rc_lookup_ref`` mirrors ``repro.kernels.rc_lookup.rc_lookup_pallas`` via
+the functional cache in ``repro.core.radiance_cache``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import radiance_cache as rc
+from repro.core.gaussians import ALPHA_MAX, ALPHA_SIGNIFICANT, TRANSMITTANCE_EPS
+from repro.kernels.rasterize import P, TILE, RasterState
+
+
+def rasterize_ref(mean2d, conic, color, opacity, ids,
+                  acc0, trans0, rec0, cnt0, start_iter, live,
+                  *, tiles_x: int, k_record: int = 5, chunk: int = 64,
+                  stop_at_k: bool = False, bg: float = 0.0) -> RasterState:
+    t, k_total = ids.shape
+    live = live.astype(bool)
+
+    tix = jnp.arange(t, dtype=jnp.int32)
+    ox = (tix % tiles_x) * TILE
+    oy = (tix // tiles_x) * TILE
+    py2, px2 = jnp.meshgrid(jnp.arange(TILE), jnp.arange(TILE), indexing='ij')
+    px = px2.reshape(-1)[None, :] + ox[:, None] + 0.5   # [T, P]
+    py = py2.reshape(-1)[None, :] + oy[:, None] + 0.5
+
+    def per_tile(px_t, py_t, gm, gc, gcol, gop, gid,
+                 acc0_t, trans0_t, rec0_t, cnt0_t, start_t, live_t):
+        def step(carry, g):
+            acc, trans, rec, cnt, nsig, niter, itk, i = carry
+            m, c3, col, op, idd = g
+            dx = px_t - m[0]
+            dy = py_t - m[1]
+            power = -0.5 * (c3[0] * dx * dx + c3[2] * dy * dy) - c3[1] * dx * dy
+            alpha = jnp.minimum(ALPHA_MAX, op * jnp.exp(power))
+            valid = (power <= 0.0) & (idd >= 0)
+            allowed = (i >= start_t) & live_t
+            active = trans > TRANSMITTANCE_EPS
+            sig = (alpha > ALPHA_SIGNIFICANT) & valid & allowed
+            if stop_at_k:
+                sig = sig & (cnt < k_record)
+            contrib = sig & active
+
+            w = jnp.where(contrib, trans * alpha, 0.0)
+            acc = acc + w[:, None] * col[None, :]
+            trans = jnp.where(contrib, trans * (1.0 - alpha), trans)
+
+            can = contrib & (cnt < k_record)
+            slot = jax.nn.one_hot(cnt, k_record, dtype=bool) & can[:, None]
+            rec = jnp.where(slot, idd, rec)
+            new_cnt = cnt + contrib.astype(jnp.int32)
+            just = (new_cnt >= k_record) & (cnt < k_record) & contrib
+            itk = jnp.where(just, i + 1, itk)
+            nsig = nsig + contrib.astype(jnp.int32)
+            examined = active & (idd >= 0) & allowed
+            if stop_at_k:
+                examined = examined & (cnt < k_record)
+            niter = niter + examined.astype(jnp.int32)
+            return (acc, trans, rec, new_cnt, nsig, niter, itk, i + 1), None
+
+        init = (acc0_t.astype(jnp.float32), trans0_t.astype(jnp.float32),
+                rec0_t, cnt0_t,
+                jnp.zeros((P,), jnp.int32), jnp.zeros((P,), jnp.int32),
+                jnp.full((P,), k_total, jnp.int32), jnp.int32(0))
+        (acc, trans, rec, cnt, nsig, niter, itk, _), _ = jax.lax.scan(
+            step, init, (gm, gc, gcol, gop, gid))
+        return acc, trans, rec, cnt, nsig, niter, itk
+
+    acc, trans, rec, cnt, nsig, niter, itk = jax.vmap(per_tile)(
+        px, py, mean2d, conic, color, opacity, ids,
+        acc0, trans0, rec0, cnt0, start_iter, live)
+    del bg  # compositing is ops-level in both implementations
+    # the oracle has no chunk structure; report the dense-equivalent count
+    chunks = jnp.full((t, 1), k_total // chunk, jnp.int32)
+    return RasterState(acc, trans, rec, cnt, nsig, niter, itk, chunks)
+
+
+def rc_lookup_ref(tags, values, ids, cfg: rc.CacheConfig):
+    """Oracle for the lookup kernel: tags [G,S,W,k], values [G,S,W,3],
+    ids [G,B,k] -> (hit [G,B], value [G,B,3], set_idx [G,B], way [G,B])."""
+    def one(tg, vg, qg):
+        sidx = rc.set_index(qg, cfg)
+        cand = tg[sidx]                       # [B, W, k]
+        m = jnp.all(cand == qg[:, None, :], axis=-1)
+        hit = jnp.any(m, axis=-1)
+        way = jnp.argmax(m, axis=-1)
+        val = vg[sidx, way]
+        return hit, val, sidx, way.astype(jnp.int32)
+    return jax.vmap(one)(tags, values, ids)

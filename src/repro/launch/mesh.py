@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — required for the dry-run's forced-host-
+device trick to work and for tests to see a single CPU device.
+
+Production target: TPU v5e pods.  Single pod = 16 x 16 = 256 chips
+(data, model); multi-pod adds a leading 'pod' axis (2 x 16 x 16 = 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ('pod', 'data', 'model') if multi_pod else ('data', 'model')
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f'need {n} devices for the production mesh, have {len(devices)} — '
+            f'launch with XLA_FLAGS=--xla_force_host_platform_device_count=512 '
+            f'for the dry-run (see launch/dryrun.py)')
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=('data', 'model')):
+    """Small mesh for unit tests (requires forced host devices)."""
+    import numpy as np
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)

@@ -1,0 +1,111 @@
+"""Chunkwise-parallel gated linear attention — the shared compute core of
+xLSTM's mLSTM and Mamba2's SSD (both are decayed linear attention).
+
+Recurrence (per head, per step):
+    S_t = a_t * S_{t-1} + k_t v_t^T          # state [dk, dv]
+    y_t = q_t^T S_t                           # output [dv]
+
+Chunkwise form (chunk width W): within a chunk, cumulative log-decays make
+the intra-chunk term a masked (W x W) matmul and the inter-chunk term a rank-
+dk update — all MXU work, no per-token scan:
+
+    F_t   = sum_{j<=t} log a_j                           (in-chunk cumsum)
+    intra = ((Q K^T) * exp(F_t - F_s) * [s<=t]) V
+    inter = exp(F_t) * (Q @ S_prev)
+    S_new = exp(F_W) * S_prev + sum_s exp(F_W - F_s) k_s v_s^T
+
+Gates must satisfy log a <= 0 (sigmoid/negative-exponential decay) so every
+exponent above is bounded — see DESIGN.md for the xLSTM exponential-gate
+stabilization note.
+
+``normalize=True`` appends a ones-column to V so the same recurrence carries
+the mLSTM normalizer n_t; outputs are divided by max(|n^T q|, 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_linear_attention(q, k, v, log_a, *, chunk: int = 512,
+                             normalize: bool = False,
+                             state_in=None):
+    """q,k: [B,S,H,dk]; v: [B,S,H,dv]; log_a: [B,S,H] (<= 0).
+
+    Returns (y [B,S,H,dv], final state [B,H,dk,dv(+1)]).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if normalize:
+        v = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+        dv_aug = dv + 1
+    else:
+        dv_aug = dv
+    w = min(chunk, s)
+    while s % w:
+        w -= 1
+    nc = s // w
+
+    def resh(x):
+        return jnp.moveaxis(x.reshape(b, nc, w, *x.shape[2:]), 1, 0)
+
+    qr, kr, vr, ar = resh(q), resh(k), resh(v), resh(log_a)   # [nc,B,w,...]
+
+    if state_in is None:
+        state_in = jnp.zeros((b, h, dk, dv_aug), jnp.float32)
+
+    def step(state, xs):
+        qc, kc, vc, ac = xs                     # [B,w,H,*]
+        f = jnp.cumsum(ac.astype(jnp.float32), axis=1)        # [B,w,H]
+        f_tot = f[:, -1]                                       # [B,H]
+        # intra-chunk: masked decayed attention
+        qk = jnp.einsum('bthd,bshd->bhts', qc.astype(jnp.float32),
+                        kc.astype(jnp.float32))                # [B,H,w,w]
+        decay = f[:, :, None, :].transpose(0, 3, 1, 2) \
+            - f[:, None, :, :].transpose(0, 3, 1, 2)           # [B,H,t,s]
+        tri = jnp.tril(jnp.ones((w, w), bool))
+        # mask BEFORE exp: the upper triangle has positive exponents that
+        # overflow, and inf*0 in the cotangent would poison the backward pass
+        gate = jnp.exp(jnp.where(tri[None, None], decay, -1e30))
+        intra = jnp.einsum('bhts,bshv->bthv', qk * gate,
+                           vc.astype(jnp.float32))             # [B,w,H,dv]
+        # inter-chunk: carry-in state
+        qs = qc.astype(jnp.float32) * jnp.exp(f)[..., None]    # [B,w,H,dk]
+        inter = jnp.einsum('bthd,bhdv->bthv', qs, state)
+        y = intra + inter
+        # state update
+        kd = kc.astype(jnp.float32) * jnp.exp(f_tot[:, None] - f)[..., None]
+        outer = jnp.einsum('bshd,bshv->bhdv', kd, vc.astype(jnp.float32))
+        state = state * jnp.exp(f_tot)[..., None, None] + outer
+        return state, y
+
+    # scan-over-checkpoint: the bwd recomputes each chunk's intra/inter
+    # matrices instead of saving them; only the carried state (the mLSTM
+    # matrix memory — [B,H,dk,dv], 269 MB/chunk at xlstm-1.3b sizes) is
+    # saved per iteration, which with chunk=512 is 8 saves instead of 32.
+    state, ys = jax.lax.scan(jax.checkpoint(step), state_in, (qr, kr, vr, ar))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s, h, dv_aug)
+
+    if normalize:
+        out, n_q = y[..., :dv], y[..., dv]
+        out = out / jnp.maximum(jnp.abs(n_q), 1.0)[..., None]
+        return out.astype(q.dtype), state
+    return y.astype(q.dtype), state
+
+
+def linear_attention_step(state, q, k, v, log_a, *, normalize: bool = False):
+    """Single-token recurrent step (decode).  q,k: [B,H,dk]; v: [B,H,dv];
+    log_a: [B,H]; state [B,H,dk,dv(+1)].  Returns (y [B,H,dv], new state)."""
+    dv = v.shape[-1]
+    if normalize:
+        v = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    outer = jnp.einsum('bhd,bhv->bhdv', k.astype(jnp.float32),
+                       v.astype(jnp.float32))
+    state = state * a + outer
+    y = jnp.einsum('bhd,bhdv->bhv', q.astype(jnp.float32), state)
+    if normalize:
+        out, n_q = y[..., :dv], y[..., dv]
+        out = out / jnp.maximum(jnp.abs(n_q), 1.0)[..., None]
+        return out.astype(q.dtype), state
+    return y.astype(q.dtype), state

@@ -1,0 +1,124 @@
+"""Mamba2 (SSD) layer — used standalone and inside the Zamba2 hybrid.
+
+State-space duality: the Mamba2 recurrence
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * x_t B_t^T ;   y_t = h_t C_t + D x_t
+
+is decayed linear attention with q=C_t, k=B_t, v=dt_t*x_t and per-head scalar
+log-decay dt_t*A — so training uses the same chunkwise-parallel MXU core as
+mLSTM (``linear_scan``), and decode is the O(1) recurrent step (long_500k).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.linear_scan import chunked_linear_attention, linear_attention_step
+from repro.runtime.sharding import ShardCtx
+
+EXPAND = 2
+
+
+def _dims(cfg):
+    d_inner = EXPAND * cfg.d_model
+    n_heads = d_inner // cfg.ssm_head_dim
+    return d_inner, n_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def mamba_params(key, cfg, dtype):
+    d = cfg.d_model
+    di, h, hd, ds = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        'ln': jnp.ones((d,), dtype),
+        # fused in-projection: [z (gate), x, B, C, dt]
+        'w_in': L.dense_init(ks[0], d, 2 * di + 2 * ds + h, dtype),
+        'conv': (0.1 * jax.random.normal(ks[1], (cfg.ssm_conv, di + 2 * ds))
+                 ).astype(dtype),
+        'a_log': jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        'dt_bias': jnp.zeros((h,), jnp.float32),
+        'd_skip': jnp.ones((h,), jnp.float32),
+        'out_norm': jnp.ones((hd,), dtype),
+        'w_out': L.dense_init(ks[2], di, d, dtype,
+                              scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _split_proj(p, u, cfg):
+    di, h, hd, ds = _dims(cfg)
+    z = u[..., :di]
+    xbc = u[..., di:di + di + 2 * ds]
+    dt = u[..., di + di + 2 * ds:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, cache=None):
+    """Depthwise causal conv over time. xbc [B,S,C]; conv_w [K,C].
+
+    With ``cache`` [B,K-1,C] given (decode), returns (out [B,1,C], new cache).
+    """
+    kk = conv_w.shape[0]
+    if cache is None:
+        pad = jnp.pad(xbc, ((0, 0), (kk - 1, 0), (0, 0)))
+        out = sum(pad[:, i:i + xbc.shape[1]] * conv_w[i] for i in range(kk))
+        return jax.nn.silu(out), None
+    window = jnp.concatenate([cache, xbc], axis=1)          # [B,K,C]
+    out = jnp.einsum('bkc,kc->bc', window, conv_w)[:, None]
+    return jax.nn.silu(out), window[:, 1:]
+
+
+def _ssm_inputs(p, x, cfg, conv_cache=None):
+    di, h, hd, ds = _dims(cfg)
+    u = x @ p['w_in']
+    z, xbc, dt = _split_proj(p, u, cfg)
+    xbc, new_conv = _causal_conv(xbc, p['conv'], conv_cache)
+    xs = xbc[..., :di]
+    b_in = xbc[..., di:di + ds]
+    c_in = xbc[..., di + ds:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p['dt_bias'])      # [B,S,H]
+    log_a = -jnp.exp(p['a_log'])[None, None, :] * dt                 # <= 0
+    bsz, s = x.shape[:2]
+    v = (xs.reshape(bsz, s, h, hd).astype(jnp.float32)
+         * dt[..., None]).astype(x.dtype)
+    q = jnp.broadcast_to(c_in[:, :, None, :], (bsz, s, h, ds))
+    k = jnp.broadcast_to(b_in[:, :, None, :], (bsz, s, h, ds))
+    d_skip = (xs.reshape(bsz, s, h, hd)
+              * p['d_skip'][None, None, :, None]).astype(x.dtype)
+    return q, k, v, log_a, z, d_skip, new_conv
+
+
+def mamba_block(p, x, cfg, ctx: ShardCtx):
+    res = x
+    xx = L.rmsnorm(x, p['ln'], cfg.norm_eps)
+    q, k, v, log_a, z, d_skip, _ = _ssm_inputs(p, xx, cfg)
+    y, _ = chunked_linear_attention(q, k, v, log_a)
+    y = y + d_skip
+    y = L.rmsnorm(y, p['out_norm'], cfg.norm_eps)
+    bsz, s = x.shape[:2]
+    y = y.reshape(bsz, s, -1) * jax.nn.silu(z)
+    return ctx.btd(res + y @ p['w_out'])
+
+
+def init_state(cfg, batch: int):
+    di, h, hd, ds = _dims(cfg)
+    return {'ssm': jnp.zeros((batch, h, ds, hd), jnp.float32),
+            'conv': jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * ds),
+                              jnp.dtype(cfg.dtype))}
+
+
+def mamba_decode(p, x, state, cfg, ctx: ShardCtx):
+    """x [B,1,D]; recurrent O(1) step."""
+    res = x
+    xx = L.rmsnorm(x, p['ln'], cfg.norm_eps)
+    q, k, v, log_a, z, d_skip, new_conv = _ssm_inputs(
+        p, xx, cfg, conv_cache=state['conv'])
+    y, ssm = linear_attention_step(state['ssm'], q[:, 0], k[:, 0], v[:, 0],
+                                   log_a[:, 0])
+    y = y[:, None] + d_skip
+    y = L.rmsnorm(y, p['out_norm'], cfg.norm_eps)
+    bsz = x.shape[0]
+    y = y.reshape(bsz, 1, -1) * jax.nn.silu(z)
+    return ctx.btd(res + y @ p['w_out']), {'ssm': ssm, 'conv': new_conv}

@@ -1,0 +1,317 @@
+"""Architecture registry: one uniform interface over the model zoo.
+
+Provides, per config:
+  * ``init_params`` / ``abstract_params`` (eval_shape — no allocation),
+  * ``train_step`` (loss + grads + AdamW update),
+  * ``prefill`` / ``decode_step`` serving entry points,
+  * ``input_specs`` — ShapeDtypeStruct stand-ins for every model input of an
+    (arch x shape) cell (the dry-run contract),
+  * ``param_specs`` / input shardings — the recipe's PartitionSpecs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import moe, transformer, whisper, xlstm, zamba2
+from repro.optim import adam
+from repro.runtime.sharding import (ShardCtx, adaptive_spec, all_axes,
+                                    axes_size, batch_axes)
+
+_FAMILY = {
+    'dense': transformer,
+    'vlm': transformer,      # chameleon backbone == dense + qk_norm
+    'moe': moe,
+    'encdec': whisper,
+    'ssm': xlstm,
+    'hybrid': zamba2,
+}
+
+
+def module_for(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def init_params(key, cfg: ModelConfig, tp: int = 1):
+    return module_for(cfg).init_params(key, cfg, tp)
+
+
+def abstract_params(cfg: ModelConfig, tp: int = 1):
+    return jax.eval_shape(
+        functools.partial(init_params, cfg=cfg, tp=tp), jax.random.PRNGKey(0))
+
+
+def make_ctx(mesh, cfg: ModelConfig, *, long_context: bool = False) -> ShardCtx:
+    # activation constraints are divisibility-adaptive and recipe-agnostic
+    return ShardCtx(mesh=mesh, recipe=cfg.recipe,
+                    tp=tp_of(mesh, cfg), seq_shard_kv=long_context)
+
+
+def tp_of(mesh, cfg: ModelConfig) -> int:
+    # Every recipe pads q heads to the model axis: head-sharded attention is
+    # what keeps score-block HBM traffic per chip sane even for replicated-
+    # param (dp) models — see EXPERIMENTS.md §Dry-run notes.
+    if mesh is not None:
+        return mesh.shape.get('model', 1)
+    return 1
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, ctx: ShardCtx,
+                    adam_cfg: Optional[adam.AdamConfig] = None):
+    mod = module_for(cfg)
+    acfg = adam_cfg or adam.AdamConfig(
+        state_dtype=jnp.dtype(cfg.opt_state_dtype))
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: mod.train_loss(p, batch, cfg, ctx))(params)
+        params, opt_state, gnorm = adam.step(params, grads, opt_state, acfg)
+        return params, opt_state, {'loss': loss, 'grad_norm': gnorm}
+
+    return train_step, acfg
+
+
+def make_prefill(cfg: ModelConfig, ctx: ShardCtx):
+    mod = module_for(cfg)
+    if cfg.family == 'encdec':
+        def prefill(params, batch):
+            # encode + precompute cross KV; decoder prefill == teacher-forced
+            # pass that also emits self-attention caches
+            enc = whisper.encode(params, batch['frames'], cfg, ctx)
+            h = whisper.decode_train(params, batch['tokens'], enc, cfg, ctx)
+            from repro.models import layers as L
+            lg = L.logits(params['tok'], h[:, -1:], cfg, ctx)
+            return lg[:, 0]
+        return prefill
+    if cfg.family in ('ssm', 'hybrid'):
+        def prefill(params, batch):
+            h = mod.forward(params, batch['tokens'], cfg, ctx)
+            from repro.models import layers as L
+            lg = L.logits(params['tok'], h[:, -1:], cfg, ctx)
+            return lg[:, 0]
+        return prefill
+    if cfg.family == 'moe':
+        def prefill(params, batch):
+            h, _ = moe.forward(params, batch['tokens'], cfg, ctx)
+            from repro.models import layers as L
+            lg = L.logits(params['tok'], h[:, -1:], cfg, ctx)
+            return lg[:, 0]
+        return prefill
+
+    def prefill(params, batch):
+        lg, caches = transformer.prefill(params, batch['tokens'], cfg, ctx)
+        return lg
+    return prefill
+
+
+def make_decode_step(cfg: ModelConfig, ctx: ShardCtx):
+    mod = module_for(cfg)
+
+    if cfg.family == 'encdec':
+        def step(params, token, state, pos):
+            lg, caches = whisper.decode_step(params, token, state['self'],
+                                             state['cross'], pos, cfg, ctx)
+            return lg, dict(state, self=caches)
+        return step
+    if cfg.family == 'ssm':
+        def step(params, token, state, pos):
+            return xlstm.decode_step(params, token, state, pos, cfg, ctx)
+        return step
+    if cfg.family == 'hybrid':
+        def step(params, token, state, pos):
+            return zamba2.decode_step(params, token, state, pos, cfg, ctx)
+        return step
+    if cfg.family == 'moe':
+        def step(params, token, state, pos):
+            lg, caches = moe.decode_step(params, token, state, pos, cfg, ctx)
+            return lg, caches
+        return step
+
+    def step(params, token, state, pos):
+        lg, caches = transformer.decode_step(params, token, state, pos, cfg, ctx)
+        return lg, caches
+    return step
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int, tp: int = 1):
+    if cfg.family == 'encdec':
+        return {
+            'self': whisper.init_kv_cache(cfg, batch, max_seq, tp),
+            'cross': (jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads,
+                                 cfg.resolved_head_dim()), jnp.dtype(cfg.dtype)),
+                      jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads,
+                                 cfg.resolved_head_dim()), jnp.dtype(cfg.dtype))),
+        }
+    if cfg.family == 'ssm':
+        return xlstm.init_state(cfg, batch)
+    if cfg.family == 'hybrid':
+        return zamba2.init_state(cfg, batch, max_seq, tp)
+    if cfg.family == 'moe':
+        return moe.init_kv_cache(cfg, batch, max_seq, tp)
+    return transformer.init_kv_cache(cfg, batch, max_seq, tp)
+
+
+def abstract_decode_state(cfg: ModelConfig, batch: int, max_seq: int, tp: int = 1):
+    return jax.eval_shape(
+        lambda: init_decode_state(cfg, batch, max_seq, tp))
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs for the dry-run)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if shape.kind == 'train':
+        batch = {'tokens': tok, 'labels': tok}
+        if cfg.family == 'encdec':
+            batch['frames'] = jax.ShapeDtypeStruct(
+                (b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+        return batch
+    if shape.kind == 'prefill':
+        batch = {'tokens': tok}
+        if cfg.family == 'encdec':
+            batch['frames'] = jax.ShapeDtypeStruct(
+                (b, s, cfg.d_model), jnp.dtype(cfg.dtype))
+        return batch
+    # decode: one new token against a cache of length s
+    return {'token': jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Parameter PartitionSpecs (recipe rules, path + rank based)
+# ---------------------------------------------------------------------------
+
+_TP_LAST2 = {
+    'wq': ('data', 'model'), 'w_up': ('data', 'model'),
+    'w_gate': ('data', 'model'), 'w_in': ('data', 'model'),
+    'w_x': ('data', 'model'), 'w_h': ('data', 'model'),
+    'wk': ('data', None), 'wv': ('data', None), 'w_if': ('data', None),
+    'wo': ('model', 'data'), 'w_down': ('model', 'data'),
+    'w_out': ('model', 'data'),
+    # embed shards d_model, NOT vocab: a vocab-sharded table turns every
+    # token lookup into a full-table all-gather (4 GB/device on maverick)
+    'embed': (None, 'model'), 'unembed': (None, 'model'),
+    'router': (None, None), 'frontend_proj': (None, None),
+    'conv': (None, None),
+}
+_EXPERT_LAST3 = {
+    'w_up': ('model', 'data', None), 'w_gate': ('model', 'data', None),
+    'w_down': ('model', None, 'data'),
+}
+
+
+def _guard_divisible(spec: P, shape, mesh) -> P:
+    """Drop spec axes whose size does not divide the tensor dimension."""
+    if mesh is None:
+        return spec
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None or i >= len(shape):
+            out.append(None)
+            continue
+        size = axes_size(mesh, entry)
+        out.append(entry if size and shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def _leaf_spec(path, leaf, recipe: str, mesh=None) -> P:
+    # 'dp' replicates params (small models).  'ssm' follows the same
+    # FSDP('data') x TP('model') table as 'tp' — xlstm-1.3b with fp32
+    # moments does not fit replicated (see DESIGN.md §4).
+    if recipe == 'dp':
+        return P()
+    if recipe == 'fsdp':
+        # ZeRO-3: 256-way sharding of every weight's largest trailing dim;
+        # no tensor parallelism (the model axis carries batch instead)
+        return adaptive_spec(leaf.shape, mesh,
+                             [(-2, ('data', 'model')),
+                              (-1, ('data', 'model'))]) if mesh else P()
+    name = None
+    for entry in reversed(path):
+        if hasattr(entry, 'key'):
+            name = entry.key
+            break
+    nd = leaf.ndim
+    in_moe = any(getattr(e, 'key', None) == 'moe' for e in path)
+    in_shared = any(getattr(e, 'key', None) == 'shared' for e in path)
+    if in_moe and not in_shared and name in _EXPERT_LAST3 and nd >= 3:
+        tail = _EXPERT_LAST3[name]
+        spec = P(*((None,) * (nd - 3) + tail))
+    elif name in _TP_LAST2 and nd >= 2:
+        tail = _TP_LAST2[name]
+        spec = P(*((None,) * (nd - 2) + tail))
+    else:
+        spec = P(*((None,) * nd))
+    return _guard_divisible(spec, leaf.shape, mesh)
+
+
+def param_specs(cfg: ModelConfig, params_tree, mesh=None) -> Any:
+    """PartitionSpec pytree matching ``params_tree`` per the config's recipe."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _leaf_spec(path, leaf, cfg.recipe, mesh), params_tree)
+
+
+def batch_shardings(cfg: ModelConfig, mesh, batch_tree) -> Any:
+    """Input-batch PartitionSpecs: batch dim over pod x data, sequence over
+    'model' where divisible (matches the SP residual layout downstream);
+    recipe 'fsdp' sharding batch over every axis."""
+    baxes = all_axes(mesh) if cfg.recipe == 'fsdp' else batch_axes(mesh)
+
+    def rule(leaf):
+        if mesh is None:
+            return P()
+        return adaptive_spec(leaf.shape, mesh, [(0, baxes), (1, 'model')])
+
+    return jax.tree.map(rule, batch_tree)
+
+
+def decode_state_specs(cfg: ModelConfig, state_tree, mesh, *,
+                       long_context: bool):
+    """KV caches: batch over pod x data, sequence over 'model'
+    (flash-decoding layout — even split regardless of GQA head count);
+    long-context (batch=1): sequence over 'data', heads (else head_dim) over
+    'model'.  SSM recurrent states: batch + largest inner dim."""
+    baxes = batch_axes(mesh)
+
+    def rule(path, leaf):
+        if mesh is None:
+            return P()
+        names = [getattr(e, 'key', None) for e in path]
+        shape = leaf.shape
+        nd = leaf.ndim
+        if cfg.family == 'ssm':
+            if 'mlstm' in names:   # [ns, se-1, B, H, dk, dv]
+                return adaptive_spec(shape, mesh,
+                                     [(2, baxes), (3, 'model'), (4, 'model')])
+            return adaptive_spec(shape, mesh,  # slstm [ns, B, di]
+                                 [(1, baxes), (2, 'model')])
+        if cfg.family == 'hybrid':
+            if 'kv_k' in names or 'kv_v' in names:   # [pts, B, T, H, hd]
+                if long_context:
+                    return adaptive_spec(shape, mesh,
+                                         [(2, 'data'), (3, 'model'),
+                                          (4, 'model')])
+                return adaptive_spec(shape, mesh, [(1, baxes), (2, 'model')])
+            # mamba states: ssm [L,B,h,ds,hd] / conv [L,B,K-1,C]
+            return adaptive_spec(shape, mesh,
+                                 [(1, baxes), (2, 'model'), (-1, 'model')])
+        # dense/moe/encdec stacked caches [L(,A),B,T,Hkv,hd]
+        lead = nd - 4
+        if long_context:
+            return adaptive_spec(shape, mesh,
+                                 [(lead + 1, 'data'), (lead + 2, 'model'),
+                                  (lead + 3, 'model')])
+        return adaptive_spec(shape, mesh,
+                             [(lead, baxes), (lead + 1, 'model')])
+    return jax.tree_util.tree_map_with_path(rule, state_tree)

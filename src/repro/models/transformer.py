@@ -1,0 +1,122 @@
+"""Dense decoder-only transformer (yi-34b, command-r-35b, smollm-360m,
+nemotron-4-15b, chameleon-34b).
+
+Layers are parameter-stacked on a leading [L] axis and consumed by
+``lax.scan`` (small HLO, fast 512-way GSPMD compile); ``cfg.remat`` wraps the
+block in ``jax.checkpoint`` for activation recomputation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.runtime.sharding import ShardCtx
+
+
+def _stack_init(fn, key, n):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_params(key, cfg, tp: int = 1) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(key)
+
+    def block(k):
+        ka, kb = jax.random.split(k)
+        return {
+            'ln1': jnp.ones((cfg.d_model,), dtype),
+            'ln2': jnp.ones((cfg.d_model,), dtype),
+            'attn': L.attention_params(ka, cfg, dtype, tp),
+            'mlp': L.mlp_params(kb, cfg, dtype),
+        }
+
+    return {
+        'tok': L.embed_params(k1, cfg, dtype, tp),
+        'blocks': _stack_init(block, k2, cfg.n_layers),
+    }
+
+
+def _block_train(p, x, cfg, ctx: ShardCtx, positions):
+    x = x + L.attention_train(p['attn'], L.rmsnorm(x, p['ln1'], cfg.norm_eps),
+                              cfg, ctx, positions)
+    x = x + L.mlp(p['mlp'], L.rmsnorm(x, p['ln2'], cfg.norm_eps), cfg, ctx)
+    return ctx.btd(x)
+
+
+def forward(params, tokens, cfg, ctx: ShardCtx) -> jax.Array:
+    """tokens [B, S] -> final hidden [B, S, D]."""
+    b, s = tokens.shape
+    x = L.embed(params['tok'], tokens, ctx)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    blk = functools.partial(_block_train, cfg=cfg, ctx=ctx, positions=positions)
+    if cfg.remat:
+        blk = jax.checkpoint(blk)
+
+    if cfg.scan_layers:
+        def body(x, p_l):
+            return blk(p_l, x), None
+        x, _ = jax.lax.scan(body, x, params['blocks'])
+    else:
+        for i in range(cfg.n_layers):
+            p_l = jax.tree.map(lambda a: a[i], params['blocks'])
+            x = blk(p_l, x)
+    return x
+
+
+def train_loss(params, batch, cfg, ctx: ShardCtx) -> jax.Array:
+    h = forward(params, batch['tokens'], cfg, ctx)
+    return L.chunked_ce_loss(params['tok'], h, batch['labels'], cfg, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, max_seq: int, tp: int = 1, dtype=None):
+    """Per-layer stacked KV cache [L, B, T, Hkv, hd] (pair)."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim()
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, hd)
+    return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def prefill(params, tokens, cfg, ctx: ShardCtx):
+    """tokens [B, S] -> (logits of last position [B, V], kv caches)."""
+    b, s = tokens.shape
+    x = L.embed(params['tok'], tokens, ctx)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, p_l):
+        h = L.rmsnorm(x, p_l['ln1'], cfg.norm_eps)
+        y, (k, v) = L.attention_prefill(p_l['attn'], h, cfg, ctx, positions)
+        x = x + y
+        x = x + L.mlp(p_l['mlp'], L.rmsnorm(x, p_l['ln2'], cfg.norm_eps),
+                      cfg, ctx)
+        return ctx.btd(x), (k, v)
+
+    x, caches = jax.lax.scan(body, x, params['blocks'])
+    lg = L.logits(params['tok'], x[:, -1:, :], cfg, ctx)
+    return lg[:, 0], caches
+
+
+def decode_step(params, token, caches, pos, cfg, ctx: ShardCtx):
+    """One decode step.  token [B, 1] int32; caches [L, B, T, Hkv, hd] pair;
+    pos: scalar int32 position to write.  Returns (logits [B, V], caches)."""
+    x = L.embed(params['tok'], token, ctx)
+
+    def body(x, xs):
+        p_l, kc, vc = xs
+        h = L.rmsnorm(x, p_l['ln1'], cfg.norm_eps)
+        y, (kc, vc) = L.attention_decode(p_l['attn'], h, cfg, ctx, (kc, vc), pos)
+        x = x + y
+        x = x + L.mlp(p_l['mlp'], L.rmsnorm(x, p_l['ln2'], cfg.norm_eps),
+                      cfg, ctx)
+        return ctx.btd(x), (kc, vc)
+
+    x, (k_new, v_new) = jax.lax.scan(body, x, (params['blocks'],) + caches)
+    lg = L.logits(params['tok'], x, cfg, ctx)
+    return lg[:, 0], (k_new, v_new)

@@ -1,0 +1,275 @@
+"""xLSTM (xlstm-1.3b): mLSTM blocks with interspersed sLSTM blocks.
+
+mLSTM = matrix-memory LSTM == decayed linear attention with a normalizer —
+trained with the chunkwise-parallel core in ``linear_scan``; decoded with the
+O(1) recurrent step (this is why xlstm runs the long_500k shape).
+
+sLSTM = scalar-memory recurrent block (every ``slstm_every``-th block);
+inherently sequential, trained with a ``lax.scan`` over time.
+
+Stabilization note (DESIGN.md): the paper's exponential input gate with the
+running-max stabilizer is replaced by a bounded sigmoid gate so the chunked
+form stays overflow-free; forget gates are sigmoid (log a <= 0), matching
+the structure and FLOP count of the original.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.linear_scan import chunked_linear_attention, linear_attention_step
+from repro.models.transformer import _stack_init
+from repro.runtime.sharding import ShardCtx
+
+UP_FACTOR = 2  # block up-projection factor (xLSTM uses ~2x inner dim)
+
+
+def _inner(cfg):
+    return UP_FACTOR * cfg.d_model
+
+
+def mlstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    di = _inner(cfg)
+    hd = di // cfg.n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        'ln': jnp.ones((d,), dtype),
+        'w_up': L.dense_init(ks[0], d, di, dtype),
+        'w_gate': L.dense_init(ks[1], d, di, dtype),
+        'wq': L.dense_init(ks[2], di, di, dtype),
+        'wk': L.dense_init(ks[3], di, di, dtype),
+        'wv': L.dense_init(ks[4], di, di, dtype),
+        'w_if': L.dense_init(ks[5], di, 2 * cfg.n_heads, dtype),  # i/f gates
+        'w_down': L.dense_init(ks[6], di, d, dtype,
+                               scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+        'out_norm': jnp.ones((hd,), dtype),
+    }
+
+
+def slstm_params(key, cfg, dtype):
+    d = cfg.d_model
+    di = _inner(cfg)
+    h = cfg.n_heads
+    hd = di // h
+    ks = jax.random.split(key, 4)
+    return {
+        'ln': jnp.ones((d,), dtype),
+        'w_x': L.dense_init(ks[0], d, 4 * di, dtype),   # z, i, f, o pre-acts
+        # recurrent matrix is BLOCK-DIAGONAL per head (the xLSTM paper's
+        # sLSTM design): [H, hd, 4*hd].  This is both faithful and the perf
+        # fix for the recurrent scan — w_h_blocks is small enough to stay
+        # replicated per chip, so the 4096-step scan runs with ZERO
+        # collectives (the dense FSDP-sharded w_h generated a collective
+        # per timestep: 813k collective-permutes on the dry-run — §Perf).
+        'w_h_blocks': (0.02 * jax.random.normal(ks[1], (h, hd, 4 * hd))
+                       ).astype(dtype),
+        'w_down': L.dense_init(ks[2], di, d, dtype,
+                               scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+
+
+def _mlstm_qkvg(p, x, cfg, ctx: ShardCtx):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    di = _inner(cfg)
+    hd = di // h
+    u = x @ p['w_up']
+    g = jax.nn.silu(x @ p['w_gate'])
+    q = (u @ p['wq']).reshape(b, s, h, hd)
+    k = (u @ p['wk']).reshape(b, s, h, hd) / math.sqrt(hd)
+    v = ctx.btdv((u @ p['wv']).reshape(b, s, h, hd))
+    gates = (u @ p['w_if']).reshape(b, s, 2, h).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(gates[:, :, 0])              # [B,S,H] <= 0
+    i_gate = jax.nn.sigmoid(gates[:, :, 1])                 # bounded input gate
+    k = k * i_gate[..., None].astype(k.dtype)
+    return q, k, v, g, log_f, hd
+
+
+def mlstm_block(p, x, cfg, ctx: ShardCtx):
+    res = x
+    x = L.rmsnorm(x, p['ln'], cfg.norm_eps)
+    q, k, v, g, log_f, hd = _mlstm_qkvg(p, x, cfg, ctx)
+    y, _ = chunked_linear_attention(q, k, v, log_f, normalize=True)
+    y = L.rmsnorm(y, p['out_norm'], cfg.norm_eps)
+    b, s = x.shape[:2]
+    y = (y.reshape(b, s, -1) * g)
+    return ctx.btd(res + y @ p['w_down'])
+
+
+def mlstm_decode(p, x, state, cfg, ctx: ShardCtx):
+    """x [B,1,D]; state [B,H,hd,hd+1].  Returns (y [B,1,D], new state)."""
+    res = x
+    x = L.rmsnorm(x, p['ln'], cfg.norm_eps)
+    q, k, v, g, log_f, hd = _mlstm_qkvg(p, x, cfg, ctx)
+    y, state = linear_attention_step(
+        state, q[:, 0], k[:, 0], v[:, 0], log_f[:, 0], normalize=True)
+    y = L.rmsnorm(y, p['out_norm'], cfg.norm_eps)
+    b = x.shape[0]
+    y = (y.reshape(b, 1, -1) * g)
+    return ctx.btd(res + y @ p['w_down']), state
+
+
+def _slstm_recur(pre_t, h, c, w32, n_heads, hd):
+    """One sLSTM timestep: block-diagonal recurrence + gate nonlinearities.
+
+    pre_t [B, 4*di] f32, h/c [B, di] f32, w32 [H, hd, 4*hd] f32.
+    Callers MUST pass pre-converted f32 operands: a per-step ``astype``
+    inside the scan makes XLA convert whole stacked blocks every timestep
+    (measured: 26 TB/chip of convert traffic on train_4k — §Perf).
+    """
+    b = h.shape[0]
+    hh = h.reshape(b, n_heads, hd)
+    # [B,H,4,hd] -> gate-major [B,4,H,hd] -> [B, 4*di] so the layout lines
+    # up with w_x's (z,i,f,o) concatenation before jnp.split
+    rec = jnp.einsum('bhd,hde->bhe', hh, w32)
+    rec = rec.reshape(b, n_heads, 4, hd).transpose(0, 2, 1, 3).reshape(b, -1)
+    pre = pre_t + rec
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(z)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, c
+
+
+def slstm_block(p, x, cfg, ctx: ShardCtx):
+    """Scalar-memory LSTM over time (sequential scan — that's its nature)."""
+    res = x
+    xx = L.rmsnorm(x, p['ln'], cfg.norm_eps)
+    b, s, _ = xx.shape
+    di = _inner(cfg)
+    h_heads = cfg.n_heads
+    hd = di // h_heads
+    pre_x = xx @ p['w_x']                # [B,S,4*di] in model dtype
+    w32 = p['w_h_blocks'].astype(jnp.float32)   # hoisted loop invariant
+
+    # two-level scan: chunks of the time axis, converted to f32 ONCE per
+    # chunk; jax.checkpoint keeps only per-chunk (h, c) carries for bwd.
+    # (A flat per-step scan makes XLA either save the f32 stream — 4.3 GB —
+    # or re-convert stacked blocks every step — 26 TB of traffic.)
+    w = 256
+    while s % w:
+        w -= 1
+    nc = s // w
+    pre_cs = jnp.moveaxis(pre_x, 1, 0).reshape(nc, w, b, 4 * di)
+
+    def chunk_step(carry, pre_chunk):
+        pre32 = pre_chunk.astype(jnp.float32)     # one convert per chunk
+
+        def step(carry, pre_t):
+            h, c = carry
+            h, c = _slstm_recur(pre_t, h, c, w32, h_heads, hd)
+            return (h, c), h
+
+        carry, hs = jax.lax.scan(step, carry, pre32)
+        return carry, hs.astype(pre_chunk.dtype)
+
+    init = (jnp.zeros((b, di), jnp.float32), jnp.zeros((b, di), jnp.float32))
+    (_, _), hs = jax.lax.scan(jax.checkpoint(chunk_step), init, pre_cs)
+    y = jnp.moveaxis(hs.reshape(s, b, di), 0, 1)             # [B,S,di]
+    return ctx.btd(res + y @ p['w_down'])
+
+
+def slstm_decode(p, x, state, cfg, ctx: ShardCtx):
+    res = x
+    xx = L.rmsnorm(x, p['ln'], cfg.norm_eps)
+    h, c = state
+    di = _inner(cfg)
+    pre = (xx[:, 0] @ p['w_x']).astype(jnp.float32)
+    h, c = _slstm_recur(pre, h, c, p['w_h_blocks'].astype(jnp.float32),
+                        cfg.n_heads, di // cfg.n_heads)
+    y = h[:, None].astype(x.dtype)
+    return ctx.btd(res + y @ p['w_down']), (h, c)
+
+
+# ---------------------------------------------------------------------------
+# Model = super-blocks of (slstm_every-1 mLSTM + 1 sLSTM), scanned.
+# ---------------------------------------------------------------------------
+
+def _super(cfg) -> tuple[int, int]:
+    se = cfg.slstm_every or (cfg.n_layers + 1)
+    if cfg.n_layers % se == 0:
+        return cfg.n_layers // se, se
+    return 1, 0   # no clean grouping -> single group, handled unscanned
+
+
+def init_params(key, cfg, tp: int = 1) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n_super, se = _super(cfg)
+    if se:
+        def super_block(kk):
+            km, ks_ = jax.random.split(kk)
+            return {
+                'mlstm': _stack_init(lambda q: mlstm_params(q, cfg, dtype),
+                                     km, se - 1),
+                'slstm': slstm_params(ks_, cfg, dtype),
+            }
+        blocks = _stack_init(super_block, k2, n_super)
+    else:
+        blocks = _stack_init(lambda q: mlstm_params(q, cfg, dtype),
+                             k2, cfg.n_layers)
+    return {'tok': L.embed_params(k1, cfg, dtype, tp), 'blocks': blocks}
+
+
+def forward(params, tokens, cfg, ctx: ShardCtx) -> jax.Array:
+    x = L.embed(params['tok'], tokens, ctx)
+    n_super, se = _super(cfg)
+
+    if se:
+        def body(x, p_sb):
+            for i in range(se - 1):
+                p_m = jax.tree.map(lambda a: a[i], p_sb['mlstm'])
+                x = mlstm_block(p_m, x, cfg, ctx)
+            x = slstm_block(p_sb['slstm'], x, cfg, ctx)
+            return x, None
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(lambda c, p: body(c, p), x, params['blocks'])
+    else:
+        def body(x, p_m):
+            return mlstm_block(p_m, x, cfg, ctx), None
+        x, _ = jax.lax.scan(body, x, params['blocks'])
+    return x
+
+
+def train_loss(params, batch, cfg, ctx: ShardCtx) -> jax.Array:
+    h = forward(params, batch['tokens'], cfg, ctx)
+    return L.chunked_ce_loss(params['tok'], h, batch['labels'], cfg, ctx)
+
+
+def init_state(cfg, batch: int, tp: int = 1):
+    """Recurrent decode state — O(1) in sequence length (long_500k!)."""
+    n_super, se = _super(cfg)
+    h = cfg.n_heads
+    di = _inner(cfg)
+    hd = di // h
+    m = jnp.zeros((n_super, max(se - 1, 1), batch, h, hd, hd + 1), jnp.float32)
+    s_h = jnp.zeros((n_super, batch, di), jnp.float32)
+    s_c = jnp.zeros((n_super, batch, di), jnp.float32)
+    return {'mlstm': m, 'slstm_h': s_h, 'slstm_c': s_c}
+
+
+def decode_step(params, token, state, pos, cfg, ctx: ShardCtx):
+    del pos  # recurrent state carries position implicitly
+    x = L.embed(params['tok'], token, ctx)
+    n_super, se = _super(cfg)
+
+    def body(x, xs):
+        p_sb, m_states, sh, sc = xs
+        new_m = []
+        for i in range(se - 1):
+            p_m = jax.tree.map(lambda a: a[i], p_sb['mlstm'])
+            x, ns = mlstm_decode(p_m, x, m_states[i], cfg, ctx)
+            new_m.append(ns)
+        x, (sh, sc) = slstm_decode(p_sb['slstm'], x, (sh, sc), cfg, ctx)
+        return x, (jnp.stack(new_m), sh, sc)
+
+    x, (m_new, sh_new, sc_new) = jax.lax.scan(
+        body, x, (params['blocks'], state['mlstm'],
+                  state['slstm_h'], state['slstm_c']))
+    lg = L.logits(params['tok'], x, cfg, ctx)
+    return lg[:, 0], {'mlstm': m_new, 'slstm_h': sh_new, 'slstm_c': sc_new}

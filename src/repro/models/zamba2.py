@@ -1,0 +1,141 @@
+"""Zamba2 hybrid (zamba2-1.2b): Mamba2 backbone + ONE shared attention block
+invoked every ``attn_every`` layers (the Zamba trick — the attention block's
+parameters are shared across all its invocation points, so the KV caches are
+per-invocation but the weights appear once).
+
+Runs long_500k: the Mamba2 state is O(1); the shared-attention KV caches at
+524288 tokens are sequence-sharded over the ``data`` mesh axis
+(``ShardCtx.seq_shard_kv``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2
+from repro.models.transformer import _stack_init
+from repro.runtime.sharding import ShardCtx
+
+
+def _attn_points(cfg) -> list[int]:
+    ae = cfg.attn_every or (cfg.n_layers + 1)
+    return [l for l in range(cfg.n_layers) if (l + 1) % ae == 0]
+
+
+def init_params(key, cfg, tp: int = 1) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    ka, kb = jax.random.split(k3)
+    shared = {
+        'ln1': jnp.ones((cfg.d_model,), dtype),
+        'ln2': jnp.ones((cfg.d_model,), dtype),
+        'attn': L.attention_params(ka, cfg, dtype, tp),
+        'mlp': L.mlp_params(kb, cfg, dtype),
+    }
+    return {
+        'tok': L.embed_params(k1, cfg, dtype, tp),
+        'mamba': _stack_init(lambda q: mamba2.mamba_params(q, cfg, dtype),
+                             k2, cfg.n_layers),
+        'shared': shared,
+    }
+
+
+def _shared_attn(params, x, cfg, ctx, positions):
+    p = params['shared']
+    x = x + L.attention_train(p['attn'], L.rmsnorm(x, p['ln1'], cfg.norm_eps),
+                              cfg, ctx, positions)
+    x = x + L.mlp(p['mlp'], L.rmsnorm(x, p['ln2'], cfg.norm_eps), cfg, ctx)
+    return ctx.btd(x)
+
+
+def forward(params, tokens, cfg, ctx: ShardCtx) -> jax.Array:
+    b, s = tokens.shape
+    x = L.embed(params['tok'], tokens, ctx)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    points = _attn_points(cfg)
+
+    # Segment structure: scan over the mamba layers BETWEEN attention points,
+    # apply the (weight-shared, unscanned) attention block at each point.
+    # No lax.cond inside the scan — every scan body executes exactly
+    # trip-count times, which keeps the HLO cost analysis exact.
+    def body(x, p_m):
+        return mamba2.mamba_block(p_m, x, cfg, ctx), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    seg_bounds = [0] + [p + 1 for p in points]
+    if seg_bounds[-1] != cfg.n_layers:
+        seg_bounds.append(cfg.n_layers)
+    for si in range(len(seg_bounds) - 1):
+        lo, hi = seg_bounds[si], seg_bounds[si + 1]
+        if hi > lo:
+            seg_params = jax.tree.map(lambda a: a[lo:hi], params['mamba'])
+            x, _ = jax.lax.scan(body, x, seg_params)
+        if si < len(points):
+            x = _shared_attn(params, x, cfg, ctx, positions)
+    return x
+
+
+def train_loss(params, batch, cfg, ctx: ShardCtx) -> jax.Array:
+    h = forward(params, batch['tokens'], cfg, ctx)
+    return L.chunked_ce_loss(params['tok'], h, batch['labels'], cfg, ctx)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_state(cfg, batch: int, max_seq: int, tp: int = 1, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim()
+    n_pts = len(_attn_points(cfg))
+    kv_shape = (n_pts, batch, max_seq, cfg.n_kv_heads, hd)
+    ssm = mamba2.init_state(cfg, batch)
+    return {
+        'ssm': jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), ssm),
+        'kv_k': jnp.zeros(kv_shape, dtype),
+        'kv_v': jnp.zeros(kv_shape, dtype),
+    }
+
+
+def decode_step(params, token, state, pos, cfg, ctx: ShardCtx):
+    x = L.embed(params['tok'], token, ctx)
+    points = _attn_points(cfg)
+
+    # mamba layers: scan with per-layer recurrent states
+    def body(x, xs):
+        p_m, st = xs
+        x, st = mamba2.mamba_decode(p_m, x, st, cfg, ctx)
+        return x, st
+
+    # process in segments between attention points so the shared attention
+    # block (unscanned, shared weights, per-point KV) interleaves correctly
+    n_pts = len(points)
+    seg_bounds = [0] + [p + 1 for p in points]
+    if seg_bounds[-1] != cfg.n_layers:
+        seg_bounds.append(cfg.n_layers)
+    new_ssm = []
+    kv_k, kv_v = state['kv_k'], state['kv_v']
+    p_shared = params['shared']
+    for si in range(len(seg_bounds) - 1):
+        lo, hi = seg_bounds[si], seg_bounds[si + 1]
+        seg_params = jax.tree.map(lambda a: a[lo:hi], params['mamba'])
+        seg_state = jax.tree.map(lambda a: a[lo:hi], state['ssm'])
+        x, seg_new = jax.lax.scan(body, x, (seg_params, seg_state))
+        new_ssm.append(seg_new)
+        if si < n_pts:
+            h = L.rmsnorm(x, p_shared['ln1'], cfg.norm_eps)
+            y, (k_i, v_i) = L.attention_decode(
+                p_shared['attn'], h, cfg, ctx, (kv_k[si], kv_v[si]), pos)
+            x = x + y
+            x = x + L.mlp(p_shared['mlp'],
+                          L.rmsnorm(x, p_shared['ln2'], cfg.norm_eps), cfg, ctx)
+            x = ctx.btd(x)
+            kv_k = kv_k.at[si].set(k_i)
+            kv_v = kv_v.at[si].set(v_i)
+
+    ssm_new = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *new_ssm)
+    lg = L.logits(params['tok'], x, cfg, ctx)
+    return lg[:, 0], {'ssm': ssm_new, 'kv_k': kv_k, 'kv_v': kv_v}

@@ -1,0 +1,28 @@
+"""Learning-rate schedules (scalar-in, scalar-out; jit-friendly)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup_cosine(step, *, warmup_steps: int, total_steps: int,
+                         min_ratio: float = 0.1):
+    """Warmup then cosine decay to ``min_ratio`` of peak. Returns a scale in (0,1]."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - warmup_steps) /
+                    jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return warm * cos
+
+
+def constant(step, *, value: float = 1.0):
+    return jnp.full_like(jnp.asarray(step, jnp.float32), value)
+
+
+def exponential_decay(step, *, decay_steps: int, rate: float = 0.5,
+                      staircase: bool = False):
+    step = jnp.asarray(step, jnp.float32)
+    p = step / decay_steps
+    if staircase:
+        p = jnp.floor(p)
+    return rate ** p

@@ -1,0 +1,204 @@
+"""Sharding recipes: logical activation/parameter layouts per architecture.
+
+The production mesh is fixed — ``(data=16, model=16)`` per pod, with a
+leading ``pod`` axis when multi-pod — so recipes map tensor dimensions onto
+those axes:
+
+  * ``tp``  : TP over ``model`` (heads / d_ff / vocab), FSDP over ``data``
+              (parameter + optimizer-state rows), batch over pod x data,
+              **sequence parallelism** for residuals (the [B,S,D] stream is
+              sharded over ``model`` between layers — Megatron-SP style; the
+              per-layer all-gather/reduce-scatter pair is inserted by GSPMD).
+  * ``dp``  : small models — params replicated, batch over pod x data,
+              residual sequence over ``model`` (DP+SP).
+  * ``ep``  : MoE — experts over ``model``, expert-internal FSDP over
+              ``data``; dense submodules follow ``tp``.
+  * ``ssm`` : params FSDP over ``data`` + inner-dim TP over ``model`` where
+              divisible; batch over pod x data; long-context KV sequence
+              sharded over ``data``.
+
+Every constraint is **divisibility-adaptive**: an axis is applied to a
+tensor dimension only when the (static) dimension is divisible by the axis
+size, so the same model code lowers for every (arch x shape) cell — decode
+steps (seq=1), odd head counts (xlstm: 4 heads on a 16-way model axis),
+batch-1 long-context — without per-arch special cases.  ``ShardCtx`` with
+``mesh=None`` is a no-op, so unit tests run the identical code path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axes = Union[str, tuple]
+
+
+def batch_axes(mesh: Optional[Mesh]) -> tuple:
+    if mesh is None:
+        return ()
+    return tuple(n for n in mesh.axis_names if n in ('pod', 'data'))
+
+
+def all_axes(mesh: Optional[Mesh]) -> tuple:
+    if mesh is None:
+        return ()
+    return tuple(mesh.axis_names)
+
+
+def axes_size(mesh: Optional[Mesh], axes: Axes) -> int:
+    if mesh is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def adaptive_spec(shape: Sequence[int], mesh: Optional[Mesh],
+                  assignments: Sequence[tuple]) -> P:
+    """Build a PartitionSpec from (dim, axes) preferences.
+
+    Each assignment is tried in order; it lands only if the dimension is
+    still free, the axes are still free, and the dimension size is divisible
+    by the axes' total size.  Negative dims count from the end.
+    """
+    spec: list = [None] * len(shape)
+    used: set = set()
+    for dim, axes in assignments:
+        if axes is None:
+            continue
+        if isinstance(axes, str):
+            axes = (axes,)
+        axes = tuple(a for a in axes if a not in used)
+        if not axes:
+            continue
+        d = dim if dim >= 0 else len(shape) + dim
+        if d < 0 or d >= len(shape) or spec[d] is not None:
+            continue
+        size = axes_size(mesh, axes)
+        if size <= 1 or shape[d] % size != 0:
+            continue
+        spec[d] = axes if len(axes) > 1 else axes[0]
+        used.update(axes)
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Activation-sharding helper threaded through model code."""
+
+    mesh: Optional[Mesh]
+    recipe: str = 'tp'
+    tp: int = 1                 # model-axis size used for head padding
+    seq_shard_kv: bool = False  # long-context: shard KV sequence over 'data'
+
+    def _constrain(self, x, assignments):
+        if self.mesh is None:
+            return x
+        spec = adaptive_spec(x.shape, self.mesh, assignments)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, spec))
+
+    def _baxes(self) -> tuple:
+        # 'fsdp' (ZeRO-3): the model axis carries BATCH, not tensor shards —
+        # activations stay gather-free; weights all-gather per layer instead
+        # (wins when weight bytes/layer << activation bytes: §Perf log)
+        if self.recipe == 'fsdp':
+            return all_axes(self.mesh)
+        return batch_axes(self.mesh)
+
+    # ---- logical activation layouts ----
+    def btd(self, x):
+        """[batch, seq, d_model] — batch over pod x data, seq over model (SP)."""
+        return self._constrain(x, [(0, self._baxes()), (1, 'model')])
+
+    def bthd(self, x):
+        """[batch, seq, heads, head_dim] — heads over model.
+
+        Deliberately NO head_dim fallback: sharding the contraction dim of
+        QK^T turns every attention score block into a partial-sum all-reduce
+        (measured: +1.5 TB/chip of collectives on smollm — see EXPERIMENTS.md
+        §Dry-run notes).  Odd head counts leave 'model' idle here instead.
+        """
+        return self._constrain(x, [(0, self._baxes()), (2, 'model')])
+
+    def btf(self, x):
+        """[batch, seq, d_ff] — d_ff over model (TP)."""
+        return self._constrain(x, [(0, self._baxes()), (2, 'model')])
+
+    def btv(self, x):
+        """[batch, seq, vocab] (logits) — vocab over model."""
+        return self._constrain(x, [(0, self._baxes()), (2, 'model')])
+
+    def kv_cache(self, x):
+        """[batch, seq, kv_heads, head_dim] — flash-decoding layout: sequence
+        over 'model' (even split regardless of GQA head count); long-context
+        (batch=1): sequence over 'data', heads (else head_dim) over 'model'."""
+        if self.seq_shard_kv:
+            return self._constrain(x, [(1, 'data'), (2, 'model'), (3, 'model')])
+        return self._constrain(x, [(0, self._baxes()), (1, 'model')])
+
+    def ssm_state(self, x):
+        """[batch, heads, dk, dv] recurrent state."""
+        return self._constrain(x, [(0, batch_axes(self.mesh)),
+                                   (1, 'model'), (-1, 'model')])
+
+    def btdv(self, x):
+        """[batch, seq, heads, dv] linear-attention VALUES: dv over model.
+
+        Sharding dv (not dk!) keeps every contraction in the chunked linear
+        attention local — the state [B,H,dk,dv] inherits the dv sharding
+        through the scan carry, cutting the per-chunk state saves 16x
+        (xlstm-1.3b: 269 MB -> 17 MB per chunk per device).
+        """
+        return self._constrain(x, [(0, batch_axes(self.mesh)),
+                                   (3, 'model')])
+
+    def experts(self, x):
+        """[experts, capacity, d] bucketed MoE activations — EP over model."""
+        return self._constrain(x, [(0, 'model'), (1, batch_axes(self.mesh))])
+
+    def tokens(self, x):
+        """Flat routing tensors [N(, d)] — N over every mesh axis.  Without
+        this, GSPMD materializes the full [B*S, d] dispatch intermediates on
+        every chip (measured 167 GB/device on maverick train_4k)."""
+        return self._constrain(x, [(0, all_axes(self.mesh))])
+
+
+def replicated(mesh: Optional[Mesh]):
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, P())
+
+
+def spec_to_sharding(mesh: Optional[Mesh], tree_specs):
+    """Map a pytree of PartitionSpec to NamedSharding (None mesh -> None)."""
+    if mesh is None:
+        return jax.tree.map(lambda _: None, tree_specs)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return (n + m - 1) // m * m
+
+
+def padded_heads(n_heads: int, tp: int) -> int:
+    """Pad a head count to TP divisibility (extra heads are masked)."""
+    return pad_to_multiple(n_heads, max(tp, 1))
+
+
+def replicated_kv_heads(n_kv: int, tp: int) -> int:
+    """GQA kv heads replicated so the model axis divides them evenly."""
+    if tp <= 1 or n_kv % tp == 0:
+        return n_kv
+    if tp % n_kv == 0:
+        return tp                     # replicate each kv head tp/n_kv times
+    return pad_to_multiple(n_kv, tp)  # fall back to padding

@@ -1,0 +1,103 @@
+"""Straggler detection + mitigation for 1000+-node training.
+
+On a synchronous SPMD cluster the step time is the MAX over hosts, so one
+slow host (thermal throttle, ECC retirement, flaky NIC) drags the fleet.
+The detector keeps per-host EWMA step-time statistics; hosts persistently
+slower than ``threshold`` x the fleet median are flagged.  Mitigations are
+policy callbacks the launcher wires up:
+
+  * ``report``   — log and export (dashboards / alerting);
+  * ``exclude``  — hand the host list to repro.runtime.elastic for a
+                   shrink-remesh at the next checkpoint boundary;
+  * ``restart``  — ask the cluster manager to reschedule the host.
+
+The detector is pure-host-side bookkeeping (no device code), so the train
+loop calls ``observe(host_id, step_seconds)`` with timings it already has —
+in a real deployment from a heartbeat service; in tests, synthetically.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class HostStat:
+    ewma: float = 0.0
+    var_ewma: float = 0.0
+    last: float = 0.0
+    count: int = 0
+    slow_streak: int = 0
+
+
+class StragglerDetector:
+    """Flags hosts whose EWMA step time exceeds threshold x fleet median."""
+
+    def __init__(self, num_hosts: int, *, alpha: float = 0.2,
+                 threshold: float = 1.25, patience: int = 3,
+                 on_straggler: Optional[Callable[[int, float, float], None]] = None):
+        self.num_hosts = num_hosts
+        self.alpha = alpha
+        self.threshold = threshold
+        self.patience = patience
+        self.on_straggler = on_straggler
+        self.stats = [HostStat() for _ in range(num_hosts)]
+        self.flagged: set[int] = set()
+
+    def observe(self, host_id: int, step_seconds: float) -> None:
+        s = self.stats[host_id]
+        s.last = step_seconds
+        if s.count == 0:
+            s.ewma = step_seconds
+        else:
+            d = step_seconds - s.ewma
+            s.ewma += self.alpha * d
+            s.var_ewma = (1 - self.alpha) * (s.var_ewma + self.alpha * d * d)
+        s.count += 1
+
+    def observe_step(self, timings: dict[int, float]) -> set[int]:
+        """Feed one synchronous step's per-host timings; returns new flags."""
+        for h, t in timings.items():
+            self.observe(h, t)
+        return self.evaluate()
+
+    def fleet_median(self) -> float:
+        vals = sorted(s.ewma for s in self.stats if s.count > 0)
+        if not vals:
+            return 0.0
+        n = len(vals)
+        return vals[n // 2] if n % 2 else 0.5 * (vals[n // 2 - 1] + vals[n // 2])
+
+    def evaluate(self) -> set[int]:
+        """Update slow-streaks; flag hosts slow for ``patience`` CONSECUTIVE
+        observations.  Streaks count the instantaneous observation (a single
+        GC-pause blip must not flag via its lingering EWMA); the EWMA backs
+        the reported magnitude and z-scores."""
+        med = self.fleet_median()
+        if med <= 0:
+            return set()
+        new = set()
+        for h, s in enumerate(self.stats):
+            if s.count == 0:
+                continue
+            if s.last > self.threshold * med:
+                s.slow_streak += 1
+            else:
+                s.slow_streak = 0
+                self.flagged.discard(h)
+            if s.slow_streak >= self.patience and h not in self.flagged:
+                self.flagged.add(h)
+                new.add(h)
+                if self.on_straggler:
+                    self.on_straggler(h, s.ewma, med)
+        return new
+
+    def zscore(self, host_id: int) -> float:
+        s = self.stats[host_id]
+        med = self.fleet_median()
+        sd = math.sqrt(max(s.var_ewma, 1e-12))
+        return (s.ewma - med) / sd if s.count else 0.0
+
+    def healthy_hosts(self) -> list[int]:
+        return [h for h in range(self.num_hosts) if h not in self.flagged]

@@ -1,0 +1,140 @@
+"""3DGS core invariants: projection, tiling, sorting, S^2."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.camera import expand_viewport, look_at, make_camera, slerp
+from repro.core.gaussians import quat_to_rotmat
+from repro.core.pipeline import LuminaConfig, LuminSys, render_frame_baseline
+from repro.core.projection import project
+from repro.core.metrics import psnr, ssim
+from repro.core.s2 import predict_pose, shared_features, speculative_sort
+from repro.core.sorting import pairwise_order_agreement, sort_scene
+from repro.core.tiling import (TILE, gather_tile_features, tile_grid,
+                               tile_lists_dense, tile_lists_sorted)
+
+
+def test_quat_rotmat_orthonormal():
+    q = jax.random.normal(jax.random.PRNGKey(1), (32, 4))
+    r = quat_to_rotmat(q)
+    eye = jnp.eye(3)
+    err = jnp.abs(r @ jnp.swapaxes(r, -1, -2) - eye).max()
+    assert float(err) < 1e-5
+    det = jnp.linalg.det(r)
+    np.testing.assert_allclose(np.asarray(det), 1.0, atol=1e-5)
+
+
+def test_projection_depth_and_frustum(small_scene, cams64):
+    proj = project(small_scene, cams64[0])
+    valid = np.asarray(proj.valid)
+    depth = np.asarray(proj.depth)
+    assert valid.any()
+    assert (depth[valid] > 0).all()
+    assert np.isinf(depth[~valid]).all()
+    # culled Gaussians contribute nothing
+    assert (np.asarray(proj.opacity)[~valid] == 0).all()
+
+
+def test_tile_lists_sorted_matches_dense(small_scene, cams64):
+    """The scalable duplicate+sort path agrees with the dense oracle."""
+    cam = cams64[0]
+    proj = project(small_scene, cam)
+    dense = tile_lists_dense(proj, cam.width, cam.height, capacity=64)
+    fast = tile_lists_sorted(proj, cam.width, cam.height, capacity=64,
+                             max_tiles_per_gaussian=64)
+    depth = np.asarray(proj.depth)
+    d_idx, f_idx = np.asarray(dense.indices), np.asarray(fast.indices)
+    # same membership per tile (order may tie-break differently)
+    for t in range(d_idx.shape[0]):
+        ds = set(d_idx[t][d_idx[t] >= 0].tolist())
+        fs = set(f_idx[t][f_idx[t] >= 0].tolist())
+        assert ds == fs, f'tile {t} membership differs'
+        # both sorted by depth
+        for idx in (d_idx[t], f_idx[t]):
+            sel = idx[idx >= 0]
+            dd = depth[sel]
+            assert (np.diff(dd) >= -1e-6).all()
+
+
+def test_tile_lists_depth_sorted(small_scene, cams64):
+    cam = cams64[0]
+    proj = project(small_scene, cam)
+    lists = sort_scene(proj, cam.width, cam.height, capacity=128)
+    depth = np.asarray(proj.depth)
+    idx = np.asarray(lists.indices)
+    cnt = np.asarray(lists.count)
+    for t in range(idx.shape[0]):
+        sel = idx[t, :cnt[t]]
+        assert (sel >= 0).all()
+        dd = depth[sel]
+        assert (np.diff(dd) >= -1e-6).all()
+
+
+def test_s2_exact_at_same_pose(small_scene, cams64):
+    """Sorting-shared render at the SORTING pose == full pipeline render."""
+    cam = cams64[0]
+    cfg = LuminaConfig(capacity=1200, margin=0, use_rc=False)
+    shared = speculative_sort(small_scene, cam, margin=0, capacity=1200)
+    feats, lists = shared_features(small_scene, cam, shared)
+    from repro.core.rasterize import assemble_image, rasterize_tiles
+    colors, _ = rasterize_tiles(feats, lists.tiles_x)
+    img_s2 = assemble_image(colors, lists.tiles_x, lists.tiles_y, 64, 64)
+    img_base, _, _, _ = render_frame_baseline(small_scene, cam, cfg)
+    np.testing.assert_allclose(np.asarray(img_s2), np.asarray(img_base),
+                               atol=1e-5)
+
+
+def test_s2_quality_close_at_nearby_pose(small_scene, cams64):
+    """Within a sharing window, S^2-only stays within ~1 dB of exact
+    (paper Fig. 20: indistinguishable at VR frame rates)."""
+    cfg = LuminaConfig(capacity=1200, window=3, margin=4, use_rc=False)
+    sys_ = LuminSys(small_scene, cfg, cams64[0])
+    for i, cam in enumerate(cams64):
+        img, _ = sys_.step(cam)
+        base, _, _, _ = render_frame_baseline(small_scene, cam, cfg)
+        p = float(psnr(img, base))
+        assert p > 35.0, f'frame {i}: S2 degraded to {p:.1f} dB'
+
+
+def test_order_agreement_high_for_nearby_poses(small_scene, cams64):
+    """Paper Sec. 3.1: ~0.2% of pairwise orders flip between VR frames."""
+    cfg_cap = 256
+    proj0 = project(small_scene, cams64[0])
+    proj1 = project(small_scene, cams64[1])
+    l0 = sort_scene(proj0, 64, 64, cfg_cap)
+    l1 = sort_scene(proj1, 64, 64, cfg_cap)
+    agree = float(pairwise_order_agreement(l0, l1))
+    # paper reports 99.8% on full-scale scenes; our 64px procedural scene
+    # at capacity 256 has coarser lists — still strongly coherent
+    assert agree > 0.9, agree
+
+
+def test_expand_viewport_preserves_geometry(small_scene, cams64):
+    """World geometry projects to the same place, offset by the margin."""
+    cam = cams64[0]
+    cam_e = expand_viewport(cam, 16)
+    p0 = project(small_scene, cam)
+    p1 = project(small_scene, cam_e)
+    m = np.asarray(p0.valid) & np.asarray(p1.valid)
+    d = np.asarray(p1.mean2d)[m] - np.asarray(p0.mean2d)[m]
+    np.testing.assert_allclose(d, 16.0, atol=1e-3)
+
+
+def test_predict_pose_constant_velocity():
+    p0, q0 = look_at((0.0, 0.0, 2.0), (0, 0, 0))
+    p1, q1 = look_at((0.1, 0.0, 2.0), (0, 0, 0))
+    c0 = make_camera(p0, q0, 60.0, 64, 64)
+    c1 = make_camera(p1, q1, 60.0, 64, 64)
+    pred = predict_pose(c0, c1, window=6)
+    # position extrapolates linearly: prev + (1 + w/2) * delta
+    expect = np.asarray(p0) + 4.0 * (np.asarray(p1) - np.asarray(p0))
+    np.testing.assert_allclose(np.asarray(pred.position), expect, atol=1e-5)
+
+
+def test_ssim_psnr_sanity():
+    a = jnp.zeros((32, 32, 3)) + 0.5
+    assert float(psnr(a, a)) > 100
+    assert float(ssim(a, a)) > 0.99
+    b = a + 0.1
+    assert float(psnr(a, b)) < 25

@@ -1,0 +1,105 @@
+"""Straggler detection, elastic re-meshing, pipeline parallelism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.elastic import ElasticRunner, plan_remesh
+from repro.runtime.straggler import StragglerDetector
+
+
+def test_straggler_flags_persistent_slow_host():
+    events = []
+    det = StragglerDetector(8, threshold=1.25, patience=3,
+                            on_straggler=lambda h, e, m: events.append(h))
+    for step in range(10):
+        timings = {h: 1.0 for h in range(8)}
+        timings[3] = 2.0   # persistently 2x slower
+        det.observe_step(timings)
+    assert 3 in det.flagged and events and events[0] == 3
+    assert det.healthy_hosts() == [0, 1, 2, 4, 5, 6, 7]
+
+
+def test_straggler_ignores_transient_blip():
+    det = StragglerDetector(4, patience=3)
+    for step in range(10):
+        timings = {h: 1.0 for h in range(4)}
+        if step == 4:
+            timings[1] = 5.0   # one-off GC pause
+        det.observe_step(timings)
+    assert not det.flagged
+
+
+def test_straggler_recovers():
+    det = StragglerDetector(4, patience=2, alpha=0.9)
+    for _ in range(5):
+        det.observe_step({0: 1.0, 1: 1.0, 2: 1.0, 3: 3.0})
+    assert 3 in det.flagged
+    for _ in range(10):
+        det.observe_step({0: 1.0, 1: 1.0, 2: 1.0, 3: 1.0})
+    assert 3 not in det.flagged
+
+
+def test_plan_remesh_basic():
+    plan = plan_remesh(256, 16, model=16)
+    assert plan.shape == (8, 16)      # 240 survivors -> largest divisor data'
+    assert plan.grad_accum_factor == 2
+    assert plan.devices_used == 128
+
+
+def test_plan_remesh_keeps_model_axis():
+    with pytest.raises(ValueError):
+        plan_remesh(16, 8, model=16)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(1, 32).map(lambda x: 16 * x), st.integers(0, 200))
+def test_plan_remesh_properties(total, failed):
+    model = 16
+    if total - failed < model:
+        with pytest.raises(ValueError):
+            plan_remesh(total, failed, model=model)
+        return
+    plan = plan_remesh(total, failed, model=model)
+    old_data = total // model
+    new_data = plan.shape[0]
+    # invariants: fits survivors, model preserved, global batch divides
+    assert plan.devices_used <= total - failed
+    assert plan.shape[1] == model
+    assert old_data % new_data == 0
+    assert plan.grad_accum_factor * new_data == old_data
+
+
+def test_elastic_runner_fail_recover():
+    r = ElasticRunner(256, 16)
+    p1 = r.step_failure([3, 7])
+    assert p1.shape[0] < 16
+    p2 = r.step_recovery([3, 7])
+    assert p2.shape == (16, 16)
+
+
+def test_elastic_reshard_roundtrip():
+    """Host-restored state re-placed on a smaller mesh keeps its values."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.runtime.elastic import build_mesh, reshard_tree
+    plan = plan_remesh(1, 0, model=1, axes=('data', 'model'))
+    mesh = build_mesh(plan)
+    tree = {'w': np.arange(8.0).reshape(4, 2)}
+    out = reshard_tree(tree, {'w': P('data', None)}, mesh)
+    np.testing.assert_allclose(np.asarray(out['w']), tree['w'])
+
+
+def test_checkpoint_plus_remesh_recovery(tmp_path):
+    """The full recovery flow at test scale: save -> 'fail' -> restore."""
+    from repro.checkpoint import CheckpointManager
+    mgr = CheckpointManager(tmp_path)
+    state = {'w': jnp.arange(16.0).reshape(4, 4), 'step': jnp.int32(5)}
+    mgr.save(state, step=5, blocking=True)
+    # failure: rebuild (trivial 1-device) mesh, restore, verify
+    restored = mgr.restore_latest(jax.tree.map(jnp.zeros_like, state))
+    assert restored is not None
+    tree, step, _ = restored
+    assert step == 5
+    np.testing.assert_allclose(np.asarray(tree['w']),
+                               np.asarray(state['w']))

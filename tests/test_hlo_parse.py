@@ -1,0 +1,72 @@
+"""Optimized-HLO analyzer: exact dot FLOPs, trip counts, collectives."""
+import numpy as np
+
+from repro.analysis import hlo_parse as hp
+
+MODULE = '''
+HloModule test
+
+%inner (p0: f32[8,16], p1: f32[16,4]) -> f32[8,4] {
+  %p0 = f32[8,16] parameter(0)
+  %p1 = f32[16,4] parameter(1)
+  ROOT %d = f32[8,4] dot(%p0, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+
+%body (c: (s32[], f32[8,4])) -> (s32[], f32[8,4]) {
+  %c = (s32[], f32[8,4]) parameter(0)
+  %i = s32[] get-tuple-element(%c), index=0
+  %x = f32[8,4] get-tuple-element(%c), index=1
+  %ag = f32[16,4] all-gather(%x), replica_groups={{0,1}}, dimensions={0}
+  %sl = f32[8,4] slice(%ag), slice={[0:8], [0:4]}
+  %add = f32[8,4] add(%x, %sl)
+  ROOT %t = (s32[], f32[8,4]) tuple(%i, %add)
+}
+
+%cond (c: (s32[], f32[8,4])) -> pred[] {
+  %c = (s32[], f32[8,4]) parameter(0)
+  ROOT %lt = pred[] constant(true)
+}
+
+ENTRY %main (a: f32[8,16], b: f32[16,4]) -> f32[8,4] {
+  %a = f32[8,16] parameter(0)
+  %b = f32[16,4] parameter(1)
+  %mm = f32[8,4] call(%a, %b), to_apply=%inner
+  %init = (s32[], f32[8,4]) tuple(%mm)
+  %w = (s32[], f32[8,4]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  %ar = f32[8,4] all-reduce(%mm), replica_groups={{0,1,2,3}}
+  ROOT %out = f32[8,4] get-tuple-element(%w), index=1
+}
+'''
+
+
+def test_dot_flops_exact():
+    agg = hp.analyze_text(MODULE)
+    # dot: 2 * 8*4 * 16 = 1024 flops; add inside while: 32 elems x 5 trips
+    assert agg['flops'] == 1024 + 32 * 5
+
+
+def test_trip_count_applied_to_collectives():
+    agg = hp.analyze_text(MODULE)
+    # all-gather result 16*4*4B = 256B x 5 trips + all-reduce 8*4*4 = 128B
+    assert agg['collective_bytes'] == 256 * 5 + 128
+    assert agg['collective_counts']['all-gather'] == 5
+    assert agg['collective_counts']['all-reduce'] == 1
+
+
+def test_crosspod_split():
+    agg = hp.analyze_text(MODULE, pod_size=2)
+    # the all-reduce group {0,1,2,3} crosses pods of size 2; all-gather {0,1} doesn't
+    assert agg['collective_bytes_crosspod'] == 128
+
+
+def test_bytes_model_counts_moves_and_dots_only():
+    agg = hp.analyze_text(MODULE)
+    # dot operands+result: (8*16 + 16*4)*4 + 128 = 896; slice result 128B x5;
+    # all-gather 256 x5 + all-reduce 128; adds are fused (0 bytes)
+    expect = (8 * 16 + 16 * 4) * 4 + 128 + 5 * 128 + 5 * 256 + 128
+    assert agg['bytes'] == expect
+
+
+def test_entry_detection():
+    agg = hp.analyze_text(MODULE)
+    assert 'main' in agg['entry']

@@ -1,0 +1,115 @@
+"""End-to-end integration: LuminSys frames, hwmodel orderings, train/serve
+drivers, gradient compression in a step, roofline table construction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hwmodel
+from repro.core.metrics import psnr
+from repro.core.pipeline import LuminaConfig, LuminSys, render_frame_baseline
+
+
+def test_luminsys_hits_after_first_frame(small_scene, cams64):
+    cfg = LuminaConfig(capacity=256, window=3)
+    sys_ = LuminSys(small_scene, cfg, cams64[0])
+    hits = []
+    for cam in cams64:
+        _, st = sys_.step(cam)
+        hits.append(float(st.hit_rate))
+    assert hits[0] == 0.0                  # cold cache
+    assert all(h > 0.3 for h in hits[1:])  # warm: temporal coherence pays
+    # paper: ~55% of color integration avoided; ours is scene-dependent
+    # but must be materially positive
+    _, st = sys_.step(cams64[-1])
+    assert float(st.saved_frac) > 0.15
+
+
+def test_luminsys_sorts_once_per_window(small_scene, cams64):
+    cfg = LuminaConfig(capacity=256, window=3, use_rc=False)
+    sys_ = LuminSys(small_scene, cfg, cams64[0])
+    flags = [float(sys_.step(cam)[1].sorted_this_frame) for cam in cams64]
+    assert flags == [1.0, 0.0, 0.0, 1.0, 0.0, 0.0]
+
+
+def test_hwmodel_orderings(small_scene, cams64):
+    """The qualitative claims of Fig. 22 hold on measured stats:
+    Lumina fastest; NRU >= GPU; RC-GPU does not beat plain GPU much;
+    all accelerator variants cut energy."""
+    cfg = LuminaConfig(capacity=256, window=6)
+    sys_ = LuminSys(small_scene, cfg, cams64[0])
+    stats = []
+    for cam in cams64:
+        _, st = sys_.step(cam)
+        _, colors, aux, lists = render_frame_baseline(small_scene, cam, cfg)
+        stats.append(hwmodel.measure_frame(
+            lists, aux, hit_rate=float(st.hit_rate),
+            sorted_this_frame=1.0 / cfg.window))
+    table = hwmodel.evaluate_variants(stats)
+    sp = {v: m['speedup'] for v, m in table.items()}
+    en = {v: m['norm_energy'] for v, m in table.items()}
+    assert sp['Lumina'] >= sp['S2-Acc'] >= sp['NRU+GPU'] > 1.0
+    assert sp['Lumina'] > sp['GPU'] == 1.0
+    assert sp['RC-GPU'] < sp['NRU+GPU']    # GPU can't harvest RC sparsity
+    assert en['Lumina'] < en['NRU+GPU'] < 1.0
+    assert 0 < sp['GSCore'] < sp['Lumina']
+
+
+def test_masked_fraction_matches_paper_ballpark(small_scene, cams64):
+    """Sec. 2.2: threads masked most of the time; sig fraction ~10%."""
+    cfg = LuminaConfig(capacity=256)
+    _, colors, aux, lists = render_frame_baseline(small_scene, cams64[0], cfg)
+    s = hwmodel.measure_frame(lists, aux)
+    assert 0.5 < s.masked_fraction < 0.99
+    assert 0.02 < s.sig_fraction < 0.5
+
+
+def test_train_driver_loss_decreases(tmp_path):
+    from repro.launch.train import train
+    _, _, hist = train('smollm-360m', steps=8, batch=2, seq=64,
+                       lr=3e-3, log_every=0, print_fn=lambda *a: None)
+    assert hist[-1] < hist[0]
+
+
+def test_serve_driver_drains():
+    from repro.launch.serve import run
+    stats = run('smollm-360m', slots=2, n_requests=3, prompt_len=4,
+                max_new=4, max_seq=32, print_fn=lambda *a: None)
+    assert stats['requests'] == 3 and stats['ticks'] > 0
+
+
+def test_grad_compression_in_training_step():
+    """int8 error-feedback compression keeps a toy model training."""
+    from repro.optim import adam, compression
+    key = jax.random.PRNGKey(0)
+    w = {'w': jax.random.normal(key, (16, 16)) * 0.1}
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    y = x @ jax.random.normal(jax.random.PRNGKey(2), (16, 16))
+
+    cfg = adam.AdamConfig(lr=1e-2)
+    state = adam.init(w, cfg)
+    residual = compression.init_residuals(w)
+    losses = []
+    for _ in range(60):
+        loss, g = jax.value_and_grad(
+            lambda p: jnp.mean((x @ p['w'] - y) ** 2))(w)
+        comp, residual = compression.compress_tree(g, residual)
+        g = compression.decompress_tree(comp)
+        w, state, _ = adam.step(w, g, state, cfg)
+        losses.append(float(loss))
+    assert losses[-1] < 0.6 * losses[0], (losses[0], losses[-1])
+
+
+def test_roofline_row_roundtrip():
+    from repro.analysis import roofline as rl
+    r = rl.Roofline(arch='x', shape='train_4k', mesh='single', chips=256,
+                    flops_per_chip=1e12, bytes_per_chip=1e9,
+                    coll_bytes_per_chip=1e8,
+                    coll_bytes_crosspod_per_chip=0.0,
+                    collective_counts={'all-reduce': 3},
+                    model_flops=2e14).finalize()
+    assert r.bottleneck == 'compute'
+    row = r.row()
+    assert 0 < row['roofline_fraction'] <= 1.0
+    assert row['useful_ratio'] == pytest.approx(2e14 / (1e12 * 256))
+    print(rl.fmt_table([row]))

@@ -1,0 +1,189 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode).
+
+Contract: bit-comparable semantics (fp32 allclose) for every mode —
+full / prefix(stop-at-k) / resume — plus the set-associative lookup."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import radiance_cache as rc
+from repro.core.gaussians import TRANSMITTANCE_EPS
+from repro.kernels import ops
+from repro.kernels import rasterize as rk
+from repro.kernels import rc_lookup as lk
+from repro.kernels import ref
+
+
+def _random_tiles(key, t, k, *, tiles_x=4, spread=60.0):
+    ks = jax.random.split(key, 6)
+    mean2d = jax.random.uniform(ks[0], (t, k, 2), minval=-4.0,
+                                maxval=spread + 4.0)
+    # random positive-definite conics
+    a = jax.random.uniform(ks[1], (t, k), minval=0.02, maxval=0.35)
+    c = jax.random.uniform(ks[2], (t, k), minval=0.02, maxval=0.35)
+    b = jax.random.uniform(ks[3], (t, k), minval=-0.05, maxval=0.05)
+    b = jnp.clip(b, -0.9 * jnp.sqrt(a * c), 0.9 * jnp.sqrt(a * c))
+    conic = jnp.stack([a, b, c], axis=-1)
+    color = jax.random.uniform(ks[4], (t, k, 3))
+    opacity = jax.random.uniform(ks[5], (t, k), minval=0.1, maxval=0.95)
+    ids = jnp.tile(jnp.arange(k, dtype=jnp.int32)[None], (t, 1))
+    # sprinkle padding at the tail
+    ids = jnp.where(jnp.arange(k)[None, :] < k - 2, ids, -1)
+    return mean2d, conic, color, opacity, ids
+
+
+def _baseline_state(t, k_record):
+    p = rk.P
+    return (jnp.zeros((t, p, 3), jnp.float32),
+            jnp.ones((t, p), jnp.float32),
+            jnp.full((t, p, k_record), -1, jnp.int32),
+            jnp.zeros((t, p), jnp.int32),
+            jnp.zeros((t, p), jnp.int32),
+            jnp.ones((t, p), jnp.int32))
+
+
+def _assert_state_close(a: rk.RasterState, b: rk.RasterState):
+    np.testing.assert_allclose(np.asarray(a.acc), np.asarray(b.acc),
+                               atol=3e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(a.trans), np.asarray(b.trans),
+                               atol=3e-5, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(a.record), np.asarray(b.record))
+    np.testing.assert_array_equal(np.asarray(a.rec_cnt), np.asarray(b.rec_cnt))
+    np.testing.assert_array_equal(np.asarray(a.n_sig), np.asarray(b.n_sig))
+    np.testing.assert_array_equal(np.asarray(a.n_iter), np.asarray(b.n_iter))
+    np.testing.assert_array_equal(np.asarray(a.iter_at_k),
+                                  np.asarray(b.iter_at_k))
+
+
+@pytest.mark.parametrize('t,k,chunk', [(1, 32, 16), (4, 64, 32),
+                                       (9, 128, 64), (4, 64, 64)])
+@pytest.mark.parametrize('stop_at_k', [False, True])
+def test_rasterize_kernel_vs_ref_sweep(t, k, chunk, stop_at_k):
+    key = jax.random.PRNGKey(t * 1000 + k + chunk)
+    feats = _random_tiles(key, t, k, tiles_x=int(np.ceil(np.sqrt(t))))
+    state = _baseline_state(t, 5)
+    tiles_x = int(np.ceil(np.sqrt(t)))
+    got = rk.rasterize_pallas(*feats, *state, tiles_x=tiles_x, k_record=5,
+                              chunk=chunk, stop_at_k=stop_at_k,
+                              interpret=True)
+    want = ref.rasterize_ref(*feats, *state, tiles_x=tiles_x, k_record=5,
+                             chunk=chunk, stop_at_k=stop_at_k)
+    _assert_state_close(got, want)
+
+
+@pytest.mark.parametrize('k_record', [1, 3, 5, 8])
+def test_rasterize_kernel_k_record_sweep(k_record):
+    key = jax.random.PRNGKey(k_record)
+    t, k, chunk = 4, 64, 32
+    feats = _random_tiles(key, t, k)
+    p = rk.P
+    state = (jnp.zeros((t, p, 3), jnp.float32),
+             jnp.ones((t, p), jnp.float32),
+             jnp.full((t, p, k_record), -1, jnp.int32),
+             jnp.zeros((t, p), jnp.int32),
+             jnp.zeros((t, p), jnp.int32),
+             jnp.ones((t, p), jnp.int32))
+    got = rk.rasterize_pallas(*feats, *state, tiles_x=2, k_record=k_record,
+                              chunk=chunk, stop_at_k=True, interpret=True)
+    want = ref.rasterize_ref(*feats, *state, tiles_x=2, k_record=k_record,
+                             chunk=chunk, stop_at_k=True)
+    _assert_state_close(got, want)
+
+
+def test_prefix_resume_composes_to_full():
+    """phase A (stop at k) + phase B (resume all pixels) == full pass."""
+    key = jax.random.PRNGKey(42)
+    t, k, chunk = 4, 64, 32
+    feats_raw = _random_tiles(key, t, k)
+    from repro.core.tiling import TileFeatures
+    feats = TileFeatures(*feats_raw)
+    full, aux_full, _ = ops.rasterize_full(feats, 2, chunk=chunk,
+                                           interpret=True)
+    st_a = ops.rasterize_prefix(ops.pad_features(feats, chunk), 2,
+                                chunk=chunk, interpret=True)
+    miss = jnp.ones(st_a.trans.shape, bool)   # everyone resumes
+    colors, aux, _ = ops.rasterize_resume(
+        ops.pad_features(feats, chunk), 2, st_a, miss, chunk=chunk,
+        interpret=True)
+    # pixels whose record filled must end at the same color; pixels whose
+    # record never filled completed already in phase A
+    np.testing.assert_allclose(np.asarray(colors), np.asarray(full),
+                               atol=3e-5, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(aux.n_iterated),
+                                  np.asarray(aux_full.n_iterated))
+
+
+def test_kernel_early_exit_saves_chunks():
+    """Opaque front gaussians terminate all pixels -> fewer chunks."""
+    key = jax.random.PRNGKey(7)
+    t, k, chunk = 1, 128, 16
+    mean2d, conic, color, opacity, ids = _random_tiles(key, t, k, tiles_x=1,
+                                                       spread=14.0)
+    opacity = jnp.full_like(opacity, 0.999)    # near-opaque everywhere
+    conic = jnp.tile(jnp.asarray([0.001, 0.0, 0.001])[None, None],
+                     (t, k, 1))                # huge footprint covers tile
+    state = _baseline_state(t, 5)
+    st = rk.rasterize_pallas(mean2d, conic, color, opacity, ids, *state,
+                             tiles_x=1, k_record=5, chunk=chunk,
+                             interpret=True)
+    assert int(st.chunks[0, 0]) < k // chunk, \
+        f'no early exit: {int(st.chunks[0, 0])} of {k // chunk} chunks ran'
+
+
+@pytest.mark.parametrize('g,b,sets,ways,kk', [(1, 64, 16, 2, 3),
+                                              (4, 128, 64, 4, 5),
+                                              (2, 256, 32, 4, 2)])
+def test_rc_lookup_kernel_vs_ref(g, b, sets, ways, kk):
+    cfg = rc.CacheConfig(n_sets=sets, n_ways=ways, k=kk)
+    key = jax.random.PRNGKey(g * 10 + b)
+    cache = rc.init_cache(g, cfg)
+    # seed the cache with half the queries
+    ids = jax.random.randint(key, (g, b, kk), 0, 200).astype(jnp.int32)
+    rgb = jax.random.uniform(jax.random.PRNGKey(1), (g, b, 3))
+    do = jnp.arange(b)[None, :].repeat(g, 0) % 2 == 0
+    cache = rc.insert_all_groups(cache, ids, rgb, do, cfg)
+
+    got = lk.rc_lookup_pallas(cache.tags, cache.values, ids, cfg,
+                              query_chunk=min(64, b), interpret=True)
+    want = ref.rc_lookup_ref(cache.tags, cache.values, ids, cfg)
+    for a, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(w))
+    # hits happen; the exact rate depends on slots vs inserts (tiny caches
+    # evict), so only require agreement above plus a nonzero floor
+    assert np.asarray(got[0]).mean() > 0.1
+
+
+def test_kernel_rc_path_matches_functional(small_scene, cams64):
+    """ops.rasterize_with_rc == pipeline rc path (same cache cfg), on a
+    real projected scene."""
+    from repro.core.groups import num_groups, regroup, ungroup
+    from repro.core.pipeline import LuminaConfig, rc_apply
+    from repro.core.projection import project
+    from repro.core.rasterize import rasterize_tiles
+    from repro.core.sorting import sort_scene
+    from repro.core.tiling import gather_tile_features
+
+    cam = cams64[0]
+    cfg = LuminaConfig(capacity=128)
+    proj = project(small_scene, cam)
+    lists = sort_scene(proj, cam.width, cam.height, cfg.capacity)
+    feats = gather_tile_features(proj, lists)
+
+    # functional path
+    colors_f, aux_f = rasterize_tiles(feats, lists.tiles_x,
+                                      k_record=cfg.k_record)
+    cache_f = rc.init_cache(num_groups(64, 64, cfg.group_tiles), cfg.cache)
+    final_f, cache_f, hit_f, _ = rc_apply(cache_f, colors_f, aux_f,
+                                          lists.tiles_x, lists.tiles_y, cfg)
+
+    # kernel path
+    cache_k = rc.init_cache(num_groups(64, 64, cfg.group_tiles), cfg.cache)
+    final_k, cache_k, aux_k, st = ops.rasterize_with_rc(
+        feats, lists.tiles_x, lists.tiles_y, cache_k, cfg.cache,
+        cfg.group_tiles, k_record=cfg.k_record, chunk=32, interpret=True)
+
+    np.testing.assert_allclose(np.asarray(final_k), np.asarray(final_f),
+                               atol=3e-5, rtol=1e-4)
+    np.testing.assert_array_equal(np.asarray(cache_k.tags),
+                                  np.asarray(cache_f.tags))

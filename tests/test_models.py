@@ -1,0 +1,191 @@
+"""Model zoo: per-arch reduced smoke + serving-path consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_LM_ARCHS, get_config
+from repro.data.tokens import synthetic_batch
+from repro.models import registry
+from repro.optim import adam
+
+
+def _batch(cfg, b=2, s=32):
+    batch = synthetic_batch(0, 0, b, s, cfg.vocab)
+    if cfg.family == 'encdec':
+        batch['frames'] = jnp.ones((b, s, cfg.d_model),
+                                   jnp.dtype(cfg.dtype))
+    return batch
+
+
+@pytest.mark.parametrize('arch', ALL_LM_ARCHS)
+def test_arch_smoke_train_step(arch):
+    """Reduced config: one train step on CPU — shapes + finite loss + the
+    loss actually DECREASES over a few steps (gradients are real)."""
+    cfg = get_config(arch).reduced()
+    ctx = registry.make_ctx(None, cfg)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    step, acfg = registry.make_train_step(
+        cfg, ctx, adam.AdamConfig(lr=3e-3, state_dtype=jnp.float32))
+    opt = adam.init(params, acfg)
+    batch = _batch(cfg)
+    jstep = jax.jit(step)
+    losses = []
+    for _ in range(4):
+        params, opt, m = jstep(params, opt, batch)
+        losses.append(float(m['loss']))
+        assert np.isfinite(losses[-1])
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize('arch', ALL_LM_ARCHS)
+def test_arch_smoke_serve(arch):
+    cfg = get_config(arch).reduced()
+    ctx = registry.make_ctx(None, cfg)
+    params = registry.init_params(jax.random.PRNGKey(0), cfg)
+    b, s = 2, 16
+    batch = _batch(cfg, b, s)
+    lg = jax.jit(registry.make_prefill(cfg, ctx))(params, {
+        k: v for k, v in batch.items() if k != 'labels'})
+    assert lg.shape[0] == b and np.isfinite(np.asarray(lg)).all()
+
+    dstep = jax.jit(registry.make_decode_step(cfg, ctx))
+    state = registry.init_decode_state(cfg, b, s)
+    if cfg.family == 'encdec':
+        from repro.models import whisper
+        state['cross'] = whisper.prepare_cross(params, batch['frames'],
+                                               cfg, ctx)
+    lg2, state = dstep(params, jnp.ones((b, 1), jnp.int32), state,
+                       jnp.int32(0))
+    assert np.isfinite(np.asarray(lg2)).all()
+
+
+@pytest.mark.parametrize('arch', ['smollm-360m', 'xlstm-1.3b',
+                                  'zamba2-1.2b'])
+def test_decode_matches_forward(arch):
+    """Greedy decode continuation == teacher-forced forward logits.
+
+    Feeds the same tokens (a) all at once through forward and (b) one at a
+    time through decode_step; the last-position logits must agree.  This is
+    the core correctness property of KV caching / recurrent decode state.
+    """
+    cfg = get_config(arch).reduced()
+    ctx = registry.make_ctx(None, cfg)
+    params = registry.init_params(jax.random.PRNGKey(1), cfg)
+    mod = registry.module_for(cfg)
+    b, s = 2, 12
+    toks = synthetic_batch(0, 0, b, s, cfg.vocab)['tokens']
+
+    from repro.models import layers as L
+    h = mod.forward(params, toks, cfg, ctx)
+    lg_fwd = L.logits(params['tok'], h[:, -1:], cfg, ctx)[:, 0]
+
+    dstep = jax.jit(registry.make_decode_step(cfg, ctx))
+    state = registry.init_decode_state(cfg, b, s + 4)
+    lg = None
+    for t in range(s):
+        lg, state = dstep(params, toks[:, t:t + 1], state, jnp.int32(t))
+    # decode attention keeps f32 probabilities; the training path's flash
+    # uses bf16 PV (see layers.flash_attention), hence the loose tolerance
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_fwd),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_flash_attention_matches_naive():
+    from repro.models.layers import flash_attention
+    key = jax.random.PRNGKey(0)
+    b, s, h, hd = 2, 64, 4, 16
+    q, k, v = (jax.random.normal(kk, (b, s, h, hd))
+               for kk in jax.random.split(key, 3))
+    out = flash_attention(q, k, v, causal=True, q_chunk=16, kv_chunk=32)
+    # naive reference
+    sc = jnp.einsum('bqhd,bkhd->bhqk', q, k) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    w = jax.nn.softmax(sc, axis=-1)
+    want = jnp.einsum('bhqk,bkhd->bqhd', w, v)
+    # tolerance set by the bf16 PV matmul (the layout real flash kernels
+    # use); stats (m, l) remain f32
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_flash_attention_grad_finite():
+    from repro.models.layers import flash_attention
+    key = jax.random.PRNGKey(0)
+    q, k, v = (jax.random.normal(kk, (1, 32, 2, 8))
+               for kk in jax.random.split(key, 3))
+
+    def loss(q):
+        return flash_attention(q, k, v, causal=True, q_chunk=8,
+                               kv_chunk=16).sum()
+    g = jax.grad(loss)(q)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_gqa_repeat_kv_grouping():
+    from repro.models.layers import repeat_kv
+    k = jnp.arange(5, dtype=jnp.float32)[None, None, :, None]  # [1,1,5,1]
+    out = repeat_kv(k, 16, n_heads=15)
+    idx = np.asarray(out[0, 0, :, 0], np.int32)
+    # real heads i in 0..14 -> kv i//3; padded head 15 -> clamped
+    want = [i // 3 for i in range(15)] + [4]
+    assert idx.tolist() == want
+
+
+def test_chunked_linear_attention_matches_step():
+    """Chunkwise-parallel core == sequential recurrence (mLSTM/Mamba2)."""
+    from repro.models.linear_scan import (chunked_linear_attention,
+                                          linear_attention_step)
+    key = jax.random.PRNGKey(3)
+    b, s, h, dk, dv = 2, 24, 2, 8, 8
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, s, h, dk))
+    k = jax.random.normal(ks[1], (b, s, h, dk))
+    v = jax.random.normal(ks[2], (b, s, h, dv))
+    log_a = -jax.nn.softplus(jax.random.normal(ks[3], (b, s, h)))
+    for normalize in (False, True):
+        y_par, st_par = chunked_linear_attention(q, k, v, log_a, chunk=8,
+                                                 normalize=normalize)
+        st = jnp.zeros((b, h, dk, dv + (1 if normalize else 0)), jnp.float32)
+        ys = []
+        for t in range(s):
+            y_t, st = linear_attention_step(st, q[:, t], k[:, t], v[:, t],
+                                            log_a[:, t], normalize=normalize)
+            ys.append(y_t)
+        y_seq = jnp.stack(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_par), np.asarray(y_seq),
+                                   atol=2e-4, rtol=2e-3)
+        np.testing.assert_allclose(np.asarray(st_par), np.asarray(st),
+                                   atol=2e-4, rtol=2e-3)
+
+
+def test_moe_dispatch_exact_vs_dense():
+    """Sort-based dispatch == brute-force per-token expert sum (no drops)."""
+    from repro.models import moe
+    cfg = get_config('granite-moe-1b-a400m').reduced(
+        n_experts=4, top_k=2, capacity_factor=8.0)  # capacity ample
+    ctx = registry.make_ctx(None, cfg)
+    key = jax.random.PRNGKey(0)
+    p = moe.moe_params(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    out, drop = moe.moe_ffn(p, x, cfg, ctx)
+    assert float(drop) == 0.0
+
+    # dense reference: every token through its top-k experts
+    xf = x.reshape(-1, cfg.d_model)
+    weights, top_idx = moe._route(p['router'], xf, cfg.top_k)
+    want = jnp.zeros_like(xf)
+    for i in range(xf.shape[0]):
+        acc = jnp.zeros((cfg.d_model,))
+        for j in range(cfg.top_k):
+            e = int(top_idx[i, j])
+            buck = xf[i][None, None]
+            y = moe._expert_ffn(buck, p['w_up'][e][None], p['w_gate'][e][None],
+                                p['w_down'][e][None], cfg)[0, 0]
+            acc = acc + weights[i, j] * y
+        want = want.at[i].set(acc)
+    np.testing.assert_allclose(np.asarray(out.reshape(-1, cfg.d_model)),
+                               np.asarray(want), atol=1e-4, rtol=1e-3)

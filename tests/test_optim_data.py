@@ -1,0 +1,129 @@
+"""Optimizer, schedules, gradient compression, and the token pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.tokens import (TokenStream, global_batch_view,
+                               synthetic_batch, synthetic_tokens)
+from repro.optim import adam, compression, schedule
+
+
+def test_adam_matches_reference():
+    """One step vs the closed-form AdamW update."""
+    cfg = adam.AdamConfig(lr=0.1, b1=0.9, b2=0.99, eps=1e-8,
+                          weight_decay=0.0, clip_norm=None)
+    p = {'w': jnp.asarray([1.0, -2.0])}
+    g = {'w': jnp.asarray([0.5, 0.25])}
+    state = adam.init(p, cfg)
+    new_p, state, _ = adam.step(p, g, state, cfg)
+    m = 0.1 * np.asarray(g['w'])
+    v = 0.01 * np.asarray(g['w']) ** 2
+    update = (m / 0.1) / (np.sqrt(v / 0.01) + 1e-8)
+    want = np.asarray(p['w']) - 0.1 * update
+    np.testing.assert_allclose(np.asarray(new_p['w']), want, rtol=1e-5)
+
+
+def test_adam_clip_norm():
+    cfg = adam.AdamConfig(lr=0.0, clip_norm=1.0)
+    p = {'w': jnp.zeros(3)}
+    g = {'w': jnp.asarray([3.0, 4.0, 0.0])}
+    state = adam.init(p, cfg)
+    _, _, gnorm = adam.step(p, g, state, cfg)
+    assert abs(float(gnorm) - 5.0) < 1e-5
+
+
+def test_adam_bf16_state_dtype():
+    cfg = adam.AdamConfig(state_dtype=jnp.bfloat16)
+    p = {'w': jnp.ones((4, 4), jnp.bfloat16)}
+    state = adam.init(p, cfg)
+    assert state.mu['w'].dtype == jnp.bfloat16
+    new_p, state, _ = adam.step(p, {'w': jnp.ones((4, 4), jnp.bfloat16)},
+                                state, cfg)
+    assert new_p['w'].dtype == jnp.bfloat16
+    assert state.nu['w'].dtype == jnp.bfloat16
+
+
+def test_schedule_warmup_cosine():
+    s0 = float(schedule.linear_warmup_cosine(0, warmup_steps=10,
+                                             total_steps=100))
+    s10 = float(schedule.linear_warmup_cosine(10, warmup_steps=10,
+                                              total_steps=100))
+    s100 = float(schedule.linear_warmup_cosine(100, warmup_steps=10,
+                                               total_steps=100))
+    assert s0 == 0.0 and abs(s10 - 1.0) < 1e-6 and abs(s100 - 0.1) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000), st.integers(1, 64))
+def test_compression_roundtrip_bounded_error(seed, n):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 3.0
+    comp, residual = compression.compress(x)
+    y = compression.decompress(comp)
+    # quantization error bounded by scale/2 per element; residual exact
+    scale = np.asarray(comp.scale).max()
+    assert float(jnp.abs(y - x).max()) <= scale * 0.51 + 1e-6
+    np.testing.assert_allclose(np.asarray(x - y), np.asarray(residual),
+                               atol=1e-6)
+
+
+def test_compression_error_feedback_converges():
+    """With error feedback the time-average of dequantized gradients
+    converges to the true gradient (error bounded by scale/steps)."""
+    x = jnp.asarray([0.001, -0.002, 3.0, 0.0005])
+    residual = jnp.zeros_like(x)
+    acc = jnp.zeros_like(x)
+    steps = 50
+    for _ in range(steps):
+        comp, residual = compression.compress(x, residual)
+        acc = acc + compression.decompress(comp)
+    scale = 3.0 / 127.0
+    np.testing.assert_allclose(np.asarray(acc / steps), np.asarray(x),
+                               atol=2 * scale / steps)
+
+
+def test_tokens_deterministic_and_in_range():
+    a = synthetic_tokens(1, 5, 4, 16, 997)
+    b = synthetic_tokens(1, 5, 4, 16, 997)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(a.min()) >= 0 and int(a.max()) < 997
+    c = synthetic_tokens(1, 6, 4, 16, 997)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4).map(lambda k: 2 ** k), st.integers(0, 5))
+def test_token_stream_host_sharding_invariant(num_hosts, step0):
+    """Concatenating every host's slice == the single-host global batch."""
+    gb, seq, vocab = 16, 8, 211
+    slices = []
+    for h in range(num_hosts):
+        s = TokenStream(seed=3, global_batch=gb, seq=seq, vocab=vocab,
+                        host_id=h, num_hosts=num_hosts, step=step0)
+        slices.append(np.asarray(s.next()['tokens']))
+    got = np.concatenate(slices, axis=0)
+    want = np.asarray(global_batch_view(3, step0, gb, seq, vocab)['tokens'])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_token_stream_resume():
+    s1 = TokenStream(seed=0, global_batch=4, seq=8, vocab=101)
+    for _ in range(3):
+        s1.next()
+    state = s1.state_dict()
+    want = s1.next()
+    s2 = TokenStream(seed=0, global_batch=4, seq=8, vocab=101)
+    s2.load_state_dict(state)
+    got = s2.next()
+    np.testing.assert_array_equal(np.asarray(got['tokens']),
+                                  np.asarray(want['tokens']))
+
+
+def test_labels_are_shifted_tokens():
+    b = synthetic_batch(0, 0, 2, 8, 53)
+    full = synthetic_tokens(0, 0, 2, 9, 53)
+    np.testing.assert_array_equal(np.asarray(b['tokens']),
+                                  np.asarray(full[:, :-1]))
+    np.testing.assert_array_equal(np.asarray(b['labels']),
+                                  np.asarray(full[:, 1:]))

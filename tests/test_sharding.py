@@ -1,0 +1,104 @@
+"""Sharding substrate: adaptive specs, param spec rules, mesh builders."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ALL_LM_ARCHS, get_config
+from repro.models import registry
+from repro.runtime.sharding import (adaptive_spec, axes_size, batch_axes,
+                                    padded_heads, pad_to_multiple,
+                                    replicated_kv_heads)
+
+
+class FakeMesh:
+    """Shape-only stand-in (adaptive_spec touches only .shape/.axis_names)."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh(data=16, model=16)
+
+
+def test_adaptive_spec_basic():
+    spec = adaptive_spec((256, 4096, 1024), MESH,
+                         [(0, ('data',)), (1, 'model')])
+    assert spec == P(('data',), 'model')
+
+
+def test_adaptive_spec_skips_indivisible():
+    spec = adaptive_spec((15, 4096), MESH, [(0, 'model'), (1, 'model')])
+    assert spec == P(None, 'model')
+
+
+def test_adaptive_spec_no_axis_reuse():
+    spec = adaptive_spec((64, 64), MESH, [(0, 'model'), (1, 'model')])
+    assert spec == P('model')      # second use of 'model' dropped
+
+
+def test_adaptive_spec_negative_dim():
+    spec = adaptive_spec((4, 4, 64), MESH, [(-1, 'model')])
+    assert spec == P(None, None, 'model')
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.integers(1, 512), min_size=1, max_size=4),
+       st.lists(st.tuples(st.integers(-4, 3),
+                          st.sampled_from(['data', 'model', None])),
+                max_size=4))
+def test_adaptive_spec_properties(shape, assignments):
+    """Every produced spec is divisibility-sound and never reuses an axis."""
+    spec = adaptive_spec(shape, MESH, assignments)
+    seen = set()
+    for i, entry in enumerate(spec):
+        if entry is None:
+            continue
+        size = axes_size(MESH, entry)
+        assert shape[i] % size == 0
+        names = entry if isinstance(entry, tuple) else (entry,)
+        assert not (set(names) & seen)
+        seen.update(names)
+
+
+@pytest.mark.parametrize('arch', ALL_LM_ARCHS)
+def test_param_specs_divisible(arch):
+    """Every param spec divides its tensor on the production mesh shape."""
+    cfg = get_config(arch)
+    params_abs = registry.abstract_params(cfg, tp=16)
+    specs = registry.param_specs(cfg, params_abs, MESH)
+
+    def check(leaf, spec):
+        for i, entry in enumerate(spec):
+            if entry is None:
+                continue
+            assert leaf.shape[i] % axes_size(MESH, entry) == 0, \
+                (arch, leaf.shape, spec)
+    jax.tree.map(check, params_abs, specs,
+                 is_leaf=lambda x: isinstance(x, P))
+
+
+def test_padded_heads_and_kv():
+    assert padded_heads(56, 16) == 64
+    assert padded_heads(15, 16) == 16
+    assert padded_heads(48, 16) == 48
+    assert replicated_kv_heads(8, 16) == 16
+    assert replicated_kv_heads(8, 8) == 8
+    assert pad_to_multiple(49155, 128) == 49280
+
+
+def test_make_production_mesh_requires_devices():
+    """On the 1-CPU test process the production mesh must refuse to build
+    (the dry-run process forces 512 host devices instead)."""
+    from repro.launch.mesh import make_production_mesh
+    with pytest.raises(RuntimeError):
+        make_production_mesh()
+
+
+def test_batch_shardings_decode_token():
+    cfg = get_config('yi-34b')
+    tok = jax.ShapeDtypeStruct((1, 1), np.int32)
+    spec = registry.batch_shardings(cfg, MESH, tok)
+    assert spec == P()    # batch=1: nothing shardable, stays replicated
