@@ -1,0 +1,73 @@
+"""Serve -- multi-viewer throughput: batched vs sequential stepping.
+
+Measures end-to-end frames/sec of the render-serving subsystem as the number
+of concurrent viewers grows, once with the vmapped batched stepper (one
+jitted call advances every slot) and once with per-slot sequential stepping.
+The batched column is the one that matters for the ROADMAP's many-users
+goal: its per-viewer cost should fall as slots fill, while sequential cost
+stays flat.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core.pipeline import LuminaConfig
+from repro.data.scenes import structured_scene
+from repro.serve.render import build_sessions
+from repro.serve.session import SessionManager
+from repro.serve.stepper import BatchedStepper, SequentialStepper
+
+WIDTH = 64
+GAUSS = 1200
+CAPACITY = 192
+
+
+def _serve_once(scene, cfg, viewers: int, frames: int, sequential: bool):
+    sessions = build_sessions(viewers, frames, width=WIDTH, stagger=0)
+    engine = SequentialStepper if sequential else BatchedStepper
+    stepper = engine(scene, cfg, sessions[0].cams[0], viewers)
+    mgr = SessionManager(stepper, viewers)
+    for s in sessions:
+        mgr.submit(s)
+    # warm-up tick compiles the step; excluded from the timed run
+    mgr.run_tick()
+    t0 = time.perf_counter()
+    finished = mgr.run()
+    wall = time.perf_counter() - t0
+    rendered = sum(s.telemetry.frames for s in finished) - viewers  # warm-up
+    return rendered, wall, finished
+
+
+def run(quick: bool = False):
+    frames = 4 if quick else 8
+    counts = (1, 2) if quick else (1, 2, 4)
+    scene = structured_scene(jax.random.PRNGKey(0), GAUSS)
+    cfg = LuminaConfig(capacity=CAPACITY, window=4)
+    rows = []
+    for viewers in counts:
+        for sequential in (False, True):
+            rendered, wall, finished = _serve_once(
+                scene, cfg, viewers, frames, sequential)
+            fps = rendered / wall if wall > 0 else float('inf')
+            rows.append({
+                'viewers': viewers,
+                'mode': 'sequential' if sequential else 'batched',
+                'frames': rendered,
+                'wall_s': wall,
+                'fps_total': fps,
+                'fps_per_viewer': fps / viewers,
+                'hit_rate': sum(s.telemetry.summary()['hit_rate']
+                                for s in finished) / viewers,
+            })
+    return rows
+
+
+def main():
+    from benchmarks.common import fmt_rows
+    print(fmt_rows(run(), __doc__.strip().splitlines()[0]))
+
+
+if __name__ == '__main__':
+    main()

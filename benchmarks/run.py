@@ -10,6 +10,7 @@ Suites:
   sensitivity  Fig. 23/24 margin x window, alpha-record length
   finetune     Fig. 21/13 scale-constrained loss
   kernel       --         Pallas chunk-early-exit savings
+  serve        --         multi-viewer throughput, batched vs sequential
 """
 from __future__ import annotations
 
@@ -20,7 +21,7 @@ import traceback
 from pathlib import Path
 
 SUITES = ('breakdown', 'sparsity', 'quality', 'speedup', 'sensitivity',
-          'finetune', 'kernel')
+          'finetune', 'kernel', 'serve')
 
 
 def _render(mod, rows) -> str:

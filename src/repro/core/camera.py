@@ -52,6 +52,17 @@ def make_camera(position, quat, fov_x_deg: float, width: int, height: int,
         width=width, height=height, near=near, far=far)
 
 
+def stack_cameras(cams: list) -> Camera:
+    """Stack cameras sharing intrinsics' static fields into one batched Camera
+    (dynamic leaves gain a leading axis) — the input to a vmapped render step."""
+    first = cams[0]
+    for c in cams[1:]:
+        if (c.width, c.height, c.near, c.far) != (first.width, first.height,
+                                                  first.near, first.far):
+            raise ValueError('stack_cameras requires identical static fields')
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *cams)
+
+
 def world_to_camera(cam: Camera, points: jax.Array) -> jax.Array:
     """World points [N,3] -> camera-frame points [N,3] (z = depth)."""
     r_wc = quat_to_rotmat(cam.quat)          # world-from-camera

@@ -9,14 +9,18 @@ Combines the three stages with both optimizations:
                --> Radiance-Cache lookup: hits take the cached RGB and
                    terminate early; misses complete integration and insert.
 
-Everything is expressed as jitted stages over fixed shapes; the Python-level
-``LuminSys`` class only sequences them and carries functional state, so the
-same stages drive tests, benchmarks, and the hardware cost models.
+Everything is expressed as one pure, jitted ``render_step`` over fixed shapes:
+per-viewer state (radiance cache, S^2 sort-shared buffers, previous pose,
+frame counter) lives in a ``ViewerState`` pytree, and the sort-or-reuse
+decision is a ``lax.cond`` — so the same step function drives the
+single-viewer ``LuminSys`` wrapper, the vmapped multi-viewer serving path
+(``repro.serve``), tests, benchmarks, and the hardware cost models.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional
+import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +30,8 @@ from repro.core.camera import Camera
 from repro.core.gaussians import GaussianScene
 from repro.core.projection import project
 from repro.core.rasterize import RasterAux, assemble_image, rasterize_tiles
-from repro.core.s2 import SortShared, predict_pose, shared_features, speculative_sort
+from repro.core.s2 import (SortShared, empty_sort_shared, predict_pose,
+                           shared_features, speculative_sort)
 from repro.core.sorting import sort_scene
 from repro.core.tiling import TILE, gather_tile_features, tile_grid
 
@@ -117,11 +122,115 @@ def _stats(aux: RasterAux, hit, saved_frac, sorted_flag) -> FrameStats:
 
 
 # ---------------------------------------------------------------------------
-# The runner
+# Functional core: ViewerState + render_step
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ViewerState:
+    """Everything one viewer carries between frames, as a pure pytree.
+
+    cache     : radiance-cache state (tags/values/LRU age per tile group)
+    shared    : the S^2 speculative-sort result for the current window
+    prev_cam  : camera of the previous rendered frame (pose prediction input)
+    frame_idx : int32 scalar frame counter (drives the sort cadence)
+
+    Being a pytree, a batch of viewers is just a ``ViewerState`` whose leaves
+    carry a leading slot axis — ``render_step`` vmaps over it unchanged.
+    """
+
+    cache: rc.CacheState
+    shared: SortShared
+    prev_cam: Camera
+    frame_idx: jax.Array
+
+
+def init_viewer_state(scene: GaussianScene, cfg: LuminaConfig,
+                      cam0: Camera) -> ViewerState:
+    """Cold-start state for one viewer rendering at ``cam0``'s resolution."""
+    cache = rc.init_cache(num_groups(cam0.width, cam0.height, cfg.group_tiles),
+                          cfg.cache)
+    shared = empty_sort_shared(
+        scene, cam0, margin=cfg.margin, capacity=cfg.capacity,
+        method=cfg.sort_method,
+        max_tiles_per_gaussian=cfg.max_tiles_per_gaussian)
+    return ViewerState(cache=cache, shared=shared, prev_cam=cam0,
+                       frame_idx=jnp.int32(0))
+
+
+def render_step(scene: GaussianScene, state: ViewerState, cam: Camera,
+                cfg: LuminaConfig):
+    """One frame of the Lumina pipeline as a pure function.
+
+    Returns ``(new_state, image, FrameStats)``.  The S^2 sort-or-reuse
+    decision is a ``lax.cond`` on ``frame_idx % window`` so the whole step
+    jits once and vmaps over batched (state, cam) for multi-viewer serving.
+    """
+    tiles_x, tiles_y = tile_grid(cam.width, cam.height)
+
+    if cfg.use_s2:
+        do_sort = (state.frame_idx % cfg.window) == 0
+        # Frame 0 has no real previous pose: predict from the current one
+        # (LuminSys semantics — prediction degenerates to the identity).
+        is_first = state.frame_idx == 0
+        prev_cam = jax.tree.map(lambda p, c: jnp.where(is_first, c, p),
+                                state.prev_cam, cam)
+        pred = predict_pose(prev_cam, cam, cfg.window)
+
+        def _sort(_):
+            return speculative_sort(
+                scene, pred, margin=cfg.margin, capacity=cfg.capacity,
+                method=cfg.sort_method,
+                max_tiles_per_gaussian=cfg.max_tiles_per_gaussian)
+
+        shared = jax.lax.cond(do_sort, _sort, lambda _: state.shared, None)
+        feats, lists = shared_features(scene, cam, shared)
+        colors, aux = rasterize_tiles(feats, lists.tiles_x,
+                                      k_record=cfg.k_record, bg=cfg.bg)
+        sorted_flag = do_sort.astype(jnp.float32)
+    else:
+        _, colors, aux, _ = render_frame_baseline(scene, cam, cfg)
+        shared = state.shared
+        sorted_flag = jnp.float32(1.0)
+
+    if cfg.use_rc:
+        colors, cache, hit, saved_frac = rc_apply(state.cache, colors, aux,
+                                                  tiles_x, tiles_y, cfg)
+    else:
+        cache = state.cache
+        hit = jnp.zeros(aux.n_iterated.shape, bool)
+        saved_frac = jnp.float32(0.0)
+
+    image = assemble_image(colors, tiles_x, tiles_y, cam.width, cam.height)
+    stats = _stats(aux, hit, saved_frac, sorted_flag)
+    new_state = ViewerState(cache=cache, shared=shared, prev_cam=cam,
+                            frame_idx=state.frame_idx + 1)
+    return new_state, image, stats
+
+
+def batched_render_step(scene: GaussianScene, states: ViewerState,
+                        cams: Camera, cfg: LuminaConfig):
+    """vmap of ``render_step`` over a slot axis: states/cams carry a leading
+    [S] axis (build cams with ``repro.core.camera.stack_cameras``); the scene
+    is shared.  Returns batched ``(states, images, FrameStats)``.
+
+    Because each lane keeps its own sort cadence (required for exact parity
+    with independent ``LuminSys`` runs), the per-lane ``lax.cond`` lowers to
+    a select under vmap and the speculative sort executes for every lane on
+    every tick.  A cadence synchronized across slots would keep the cond
+    scalar and restore the 1-in-window amortization — see ROADMAP.
+    """
+    return jax.vmap(lambda st, cm: render_step(scene, st, cm, cfg))(
+        states, cams)
+
+
+# ---------------------------------------------------------------------------
+# The runner — thin single-viewer wrapper over the functional core
 # ---------------------------------------------------------------------------
 
 class LuminSys:
-    """Stateful frame-sequencer over the jitted stages.
+    """Stateful frame-sequencer: carries one ``ViewerState`` through the
+    jitted ``render_step``.
 
     Usage::
 
@@ -133,62 +242,18 @@ class LuminSys:
     def __init__(self, scene: GaussianScene, cfg: LuminaConfig, cam0: Camera):
         self.scene = scene
         self.cfg = cfg
-        tx, ty = tile_grid(cam0.width, cam0.height)
-        self.tiles_x, self.tiles_y = tx, ty
-        self.cache = rc.init_cache(num_groups(cam0.width, cam0.height,
-                                              cfg.group_tiles), cfg.cache)
-        self.shared: Optional[SortShared] = None
-        self.prev_cam: Optional[Camera] = None
-        self.frame_idx = 0
+        self.tiles_x, self.tiles_y = tile_grid(cam0.width, cam0.height)
+        self.state = init_viewer_state(scene, cfg, cam0)
+        self._step = jax.jit(functools.partial(render_step, cfg=cfg))
 
-        cfgc = cfg
+    @property
+    def cache(self) -> rc.CacheState:
+        return self.state.cache
 
-        def _sort(scene, cam_pred):
-            return speculative_sort(
-                scene, cam_pred, margin=cfgc.margin, capacity=cfgc.capacity,
-                method=cfgc.sort_method,
-                max_tiles_per_gaussian=cfgc.max_tiles_per_gaussian)
-
-        def _render_shared(scene, cam, shared):
-            feats, lists = shared_features(scene, cam, shared)
-            colors, aux = rasterize_tiles(feats, lists.tiles_x,
-                                          k_record=cfgc.k_record, bg=cfgc.bg)
-            return colors, aux
-
-        def _render_full(scene, cam):
-            return render_frame_baseline(scene, cam, cfgc)
-
-        def _rc(cache, colors, aux):
-            return rc_apply(cache, colors, aux, tx, ty, cfgc)
-
-        self._sort = jax.jit(_sort)
-        self._render_shared = jax.jit(_render_shared)
-        self._render_full = jax.jit(_render_full)
-        self._rc = jax.jit(_rc)
+    @property
+    def frame_idx(self) -> int:
+        return int(self.state.frame_idx)
 
     def step(self, cam: Camera):
-        cfg = self.cfg
-        sorted_flag = 0.0
-        if cfg.use_s2:
-            if self.frame_idx % cfg.window == 0 or self.shared is None:
-                prev = self.prev_cam if self.prev_cam is not None else cam
-                pred = predict_pose(prev, cam, cfg.window)
-                self.shared = self._sort(self.scene, pred)
-                sorted_flag = 1.0
-            colors, aux = self._render_shared(self.scene, cam, self.shared)
-        else:
-            _, colors, aux, _ = self._render_full(self.scene, cam)
-            sorted_flag = 1.0
-
-        if cfg.use_rc:
-            colors, self.cache, hit, saved_frac = self._rc(self.cache, colors, aux)
-        else:
-            hit = jnp.zeros(aux.n_iterated.shape, bool)
-            saved_frac = jnp.float32(0.0)
-
-        image = assemble_image(colors, self.tiles_x, self.tiles_y,
-                               cam.width, cam.height)
-        stats = _stats(aux, hit, saved_frac, sorted_flag)
-        self.prev_cam = cam
-        self.frame_idx += 1
+        self.state, image, stats = self._step(self.scene, self.state, cam)
         return image, stats

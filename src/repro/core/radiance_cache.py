@@ -58,6 +58,13 @@ def init_cache(num_groups: int, cfg: CacheConfig) -> CacheState:
     )
 
 
+def occupancy(cache: CacheState) -> jax.Array:
+    """Fraction of valid (non-invalid-tag) slots across all groups — a cheap
+    telemetry signal for how warmed-up a viewer's cache is."""
+    valid = jnp.any(cache.tags != INVALID_TAG, axis=-1)   # [G, S, W]
+    return jnp.mean(valid.astype(jnp.float32))
+
+
 def set_index(ids: jax.Array, cfg: CacheConfig) -> jax.Array:
     """Set index from the k record ids ([..., k] -> [...]).
 

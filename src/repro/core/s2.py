@@ -72,6 +72,24 @@ def speculative_sort(scene: GaussianScene, pred_cam: Camera, *,
                       render_tiles_x=rtx, render_tiles_y=rty)
 
 
+def empty_sort_shared(scene: GaussianScene, cam: Camera, *,
+                      margin: int, capacity: int, method: str = 'dense',
+                      max_tiles_per_gaussian: int = 16) -> SortShared:
+    """A zero-filled ``SortShared`` with the exact structure ``speculative_sort``
+    would produce for this (scene, cam, config).
+
+    Used to initialise functional viewer state: the pipeline always sorts on
+    frame 0 (``frame_idx % window == 0``), so the zeros are never rendered —
+    they only give ``lax.cond`` a branch-compatible carry.
+    """
+    shapes = jax.eval_shape(
+        lambda s, c: speculative_sort(
+            s, c, margin=margin, capacity=capacity, method=method,
+            max_tiles_per_gaussian=max_tiles_per_gaussian),
+        scene, cam)
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), shapes)
+
+
 def _render_sublists(shared: SortShared) -> TileLists:
     """Extract the render-grid tile lists out of the expanded grid."""
     mt = shared.margin_tiles

@@ -83,15 +83,20 @@ class Server:
         self.cur_tok = self.cur_tok.at[slot, 0].set(nxt)
         req.out.append(nxt)
 
-    def step(self) -> None:
-        """One fused decode tick for all active slots."""
+    def step(self) -> list[Request]:
+        """One fused decode tick for all active slots.
+
+        Returns the requests that finished on this tick (their slots are
+        freed and can be refilled before the next tick).
+        """
         active = [i for i, r in enumerate(self.slot_req) if r is not None]
         if not active:
-            return
+            return []
         pos = max(self.slot_pos[i] for i in active)
         logits, self.state = self.decode_fn(
             self.params, self.cur_tok, self.state, jnp.int32(pos))
         nxt = jnp.argmax(logits, axis=-1)
+        finished = []
         for i in active:
             r = self.slot_req[i]
             tok = int(nxt[i])
@@ -100,7 +105,9 @@ class Server:
             if len(r.out) >= r.max_new or self.slot_pos[i] >= self.max_seq - 1:
                 r.done_at = time.time()
                 self.slot_req[i] = None
+                finished.append(r)
         self.cur_tok = nxt[:, None].astype(jnp.int32)
+        return finished
 
     def free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.slot_req) if r is None]
@@ -125,17 +132,18 @@ def run(arch: str, *, slots: int = 4, n_requests: int = 8,
             if not pending:
                 break
             server.admit(pending.pop(0), slot)
-        server.step()
+        done.extend(server.step())
         ticks += 1
-        done = [r for r in done]
         if ticks > 10000:
             raise RuntimeError('serve loop did not drain')
     dt = time.time() - t0
-    total_tokens = n_requests * max_new
-    stats = {'requests': n_requests, 'ticks': ticks,
-             'wall_s': dt, 'tok_per_s': total_tokens / dt}
-    print_fn(f'{arch}: {n_requests} requests, {ticks} ticks, '
-             f'{stats["tok_per_s"]:.1f} tok/s')
+    # tokens actually emitted (requests can stop early at max_seq)
+    total_tokens = sum(len(r.out) for r in done)
+    stats = {'requests': n_requests, 'completed': len(done), 'ticks': ticks,
+             'tokens': total_tokens, 'wall_s': dt,
+             'tok_per_s': total_tokens / dt}
+    print_fn(f'{arch}: {len(done)}/{n_requests} requests, {ticks} ticks, '
+             f'{total_tokens} tokens, {stats["tok_per_s"]:.1f} tok/s')
     return stats
 
 

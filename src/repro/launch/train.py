@@ -43,6 +43,9 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq: int = 256,
     params = registry.init_params(jax.random.PRNGKey(seed), cfg, tp)
     acfg = adam.AdamConfig(lr=lr, state_dtype=jnp.dtype(cfg.opt_state_dtype))
 
+    # NOTE: the schedule must depend only on (step, warmup, steps) as given —
+    # checkpoint resume replays a prefix run with a smaller --steps and relies
+    # on the overlapping region seeing identical lr scales.
     def sched(step):
         return schedule.linear_warmup_cosine(
             step, warmup_steps=warmup, total_steps=steps)

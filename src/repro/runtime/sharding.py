@@ -72,7 +72,8 @@ def adaptive_spec(shape: Sequence[int], mesh: Optional[Mesh],
     for dim, axes in assignments:
         if axes is None:
             continue
-        if isinstance(axes, str):
+        was_str = isinstance(axes, str)
+        if was_str:
             axes = (axes,)
         axes = tuple(a for a in axes if a not in used)
         if not axes:
@@ -83,7 +84,9 @@ def adaptive_spec(shape: Sequence[int], mesh: Optional[Mesh],
         size = axes_size(mesh, axes)
         if size <= 1 or shape[d] % size != 0:
             continue
-        spec[d] = axes if len(axes) > 1 else axes[0]
+        # preserve the caller's spelling: a bare string stays a bare axis,
+        # a tuple stays a tuple (even with one element)
+        spec[d] = axes[0] if was_str and len(axes) == 1 else axes
         used.update(axes)
     while spec and spec[-1] is None:
         spec.pop()

@@ -1,0 +1,18 @@
+"""Multi-viewer batched render serving over one shared GaussianScene.
+
+Layers (bottom-up):
+  * ``repro.core.pipeline.render_step`` — the pure per-viewer frame function
+    (lives in core; vmapped here for the batched path);
+  * ``stepper``   — Batched (one vmapped call per tick) / Sequential engines;
+  * ``session``   — viewer sessions + slot-based admit/evict manager;
+  * ``telemetry`` — per-session FPS / hit-rate / latency percentiles;
+  * ``render``    — the CLI entrypoint (``python -m repro.serve.render``).
+"""
+from repro.serve.session import SessionManager, ViewerSession
+from repro.serve.stepper import BatchedStepper, SequentialStepper
+from repro.serve.telemetry import (SessionTelemetry, aggregate, format_table)
+
+__all__ = [
+    'BatchedStepper', 'SequentialStepper', 'SessionManager', 'ViewerSession',
+    'SessionTelemetry', 'aggregate', 'format_table',
+]

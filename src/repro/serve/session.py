@@ -1,0 +1,126 @@
+"""Viewer sessions and the slot-based session manager.
+
+The manager mirrors the continuous-batching LM server
+(``repro.launch.serve``): a fixed number of slots, a queue of pending
+viewers with arrival times, admit-on-free-slot, evict-on-completion.  A
+viewer session is a camera trajectory (one camera per frame) plus its
+telemetry; slots hold whichever sessions are currently live, and the
+stepper advances every live slot one frame per tick.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+from repro.core.camera import Camera
+from repro.serve.telemetry import SessionTelemetry
+
+
+@dataclasses.dataclass
+class ViewerSession:
+    """One viewer's camera stream: frames are consumed front-to-back."""
+
+    sid: int
+    cams: list          # list[Camera], one per frame
+    arrival_tick: int = 0
+    cursor: int = 0
+    telemetry: SessionTelemetry = None
+
+    def __post_init__(self):
+        if self.telemetry is None:
+            self.telemetry = SessionTelemetry(sid=self.sid,
+                                              arrival_tick=self.arrival_tick)
+
+    @property
+    def done(self) -> bool:
+        return self.cursor >= len(self.cams)
+
+    def current_cam(self) -> Camera:
+        return self.cams[self.cursor]
+
+
+class SessionManager:
+    """Admit/evict viewers over a fixed set of render slots.
+
+    ``stepper`` is any object with the ``admit(slot)`` / ``step({slot: cam})``
+    interface of ``repro.serve.stepper``; the manager owns which sessions sit
+    in which slots and feeds their per-frame stats into telemetry.
+    """
+
+    def __init__(self, stepper, slots: int):
+        self.stepper = stepper
+        self.slots = slots
+        self.slot_session: list[Optional[ViewerSession]] = [None] * slots
+        self.pending: deque[ViewerSession] = deque()
+        self.finished: list[ViewerSession] = []
+        self.tick = 0
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def submit(self, session: ViewerSession) -> None:
+        self.pending.append(session)
+
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slot_session) if s is None]
+
+    def active_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self.slot_session) if s is not None]
+
+    def admit_ready(self) -> list[int]:
+        """Admit arrived pending sessions into free slots (FIFO)."""
+        admitted = []
+        for slot in self.free_slots():
+            if not self.pending or self.pending[0].arrival_tick > self.tick:
+                break
+            sess = self.pending.popleft()
+            sess.telemetry.admitted_tick = self.tick
+            self.slot_session[slot] = sess
+            self.stepper.admit(slot)
+            admitted.append(slot)
+        return admitted
+
+    def evict_finished(self) -> list[int]:
+        evicted = []
+        for slot, sess in enumerate(self.slot_session):
+            if sess is not None and sess.done:
+                sess.telemetry.finished_tick = self.tick
+                self.finished.append(sess)
+                self.slot_session[slot] = None
+                evicted.append(slot)
+        return evicted
+
+    # -- the serving loop --------------------------------------------------
+
+    def run_tick(self) -> int:
+        """One scheduler tick: evict, admit, render every live slot one frame.
+
+        Returns the number of frames rendered this tick.
+        """
+        self.evict_finished()
+        self.admit_ready()
+        cams = {slot: self.slot_session[slot].current_cam()
+                for slot in self.active_slots()}
+        outputs = self.stepper.step(cams)
+        for slot, (_image, stats, latency) in outputs.items():
+            sess = self.slot_session[slot]
+            sess.telemetry.observe_frame(
+                latency_s=latency,
+                hit_rate=float(stats.hit_rate),
+                saved_frac=float(stats.saved_frac),
+                sorted_flag=float(stats.sorted_this_frame))
+            sess.cursor += 1
+        self.tick += 1
+        return len(outputs)
+
+    def drained(self) -> bool:
+        return not self.pending and not self.active_slots()
+
+    def run(self, max_ticks: int = 100_000) -> list[ViewerSession]:
+        """Drive ticks until every submitted session has completed."""
+        while not self.drained():
+            self.run_tick()
+            self.evict_finished()
+            if self.tick >= max_ticks:
+                raise RuntimeError('serve loop did not drain')
+        return self.finished

@@ -1,0 +1,96 @@
+"""Slot steppers: how a set of viewer slots advances one frame.
+
+Two interchangeable engines behind one interface:
+
+* ``BatchedStepper``    — all slots advance in ONE vmapped, jitted
+  ``render_step`` call over stacked ``ViewerState``/``Camera`` pytrees
+  (continuous batching for frames: this is the serving fast path);
+* ``SequentialStepper`` — each active slot advances through its own
+  single-viewer jitted step (the reference/baseline the benchmark
+  compares against).
+
+Interface::
+
+    stepper.admit(slot)                  # reset a slot to cold-start state
+    out = stepper.step({slot: cam, ..})  # advance the given slots one frame
+    # out: {slot: (image, FrameStats, latency_s)}
+
+Inactive slots in the batched engine still execute (their lanes render at
+their last camera) — their outputs and state are garbage-by-construction and
+are fully overwritten by ``admit`` before the slot is read again, exactly
+like a freed KV-cache slot in the LM server.
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.camera import Camera, stack_cameras
+from repro.core.gaussians import GaussianScene
+from repro.core.pipeline import (LuminaConfig, ViewerState,
+                                 batched_render_step, init_viewer_state,
+                                 render_step)
+
+
+class BatchedStepper:
+    """All slots advance in one vmapped ``render_step`` call."""
+
+    def __init__(self, scene: GaussianScene, cfg: LuminaConfig,
+                 cam0: Camera, slots: int):
+        self.scene = scene
+        self.cfg = cfg
+        self.slots = slots
+        self._fresh = init_viewer_state(scene, cfg, cam0)
+        self.states: ViewerState = jax.tree.map(
+            lambda x: jnp.stack([x] * slots), self._fresh)
+        self._slot_cams: list[Camera] = [cam0] * slots
+        self._step = jax.jit(functools.partial(batched_render_step, cfg=cfg))
+
+    def admit(self, slot: int) -> None:
+        self.states = jax.tree.map(lambda full, one: full.at[slot].set(one),
+                                   self.states, self._fresh)
+
+    def step(self, cams: dict[int, Camera]) -> dict:
+        if not cams:
+            return {}
+        for slot, cam in cams.items():
+            self._slot_cams[slot] = cam
+        cam_b = stack_cameras(self._slot_cams)
+        t0 = time.perf_counter()
+        self.states, images, stats = self._step(self.scene, self.states, cam_b)
+        jax.block_until_ready(images)
+        latency = time.perf_counter() - t0
+        # every rider of the batch waited for the whole tick
+        return {slot: (images[slot],
+                       jax.tree.map(lambda x: x[slot], stats),
+                       latency)
+                for slot in cams}
+
+
+class SequentialStepper:
+    """Reference engine: one single-viewer jitted step per active slot."""
+
+    def __init__(self, scene: GaussianScene, cfg: LuminaConfig,
+                 cam0: Camera, slots: int):
+        self.scene = scene
+        self.cfg = cfg
+        self.slots = slots
+        self._fresh = init_viewer_state(scene, cfg, cam0)
+        self._states: list[ViewerState] = [self._fresh] * slots
+        self._step = jax.jit(functools.partial(render_step, cfg=cfg))
+
+    def admit(self, slot: int) -> None:
+        self._states[slot] = self._fresh
+
+    def step(self, cams: dict[int, Camera]) -> dict:
+        out = {}
+        for slot, cam in cams.items():
+            t0 = time.perf_counter()
+            self._states[slot], image, stats = self._step(
+                self.scene, self._states[slot], cam)
+            jax.block_until_ready(image)
+            out[slot] = (image, stats, time.perf_counter() - t0)
+        return out

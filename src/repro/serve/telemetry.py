@@ -1,0 +1,88 @@
+"""Per-session render telemetry for the multi-viewer server.
+
+Each viewer session accumulates per-frame observations (wall-clock latency of
+the batched tick it rode in, radiance-cache hit rate, whether its slot ran a
+speculative sort) and summarises them into the numbers an operator watches:
+frames/sec, mean hit rate, p50/p99 frame latency and the realised sort
+cadence (sorts per frame; 1/window when S^2 is keeping up).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SessionTelemetry:
+    """Accumulated per-frame observations for one viewer session."""
+
+    sid: int
+    arrival_tick: int = 0
+    admitted_tick: int = -1
+    finished_tick: int = -1
+    latencies_s: list = dataclasses.field(default_factory=list)
+    hit_rates: list = dataclasses.field(default_factory=list)
+    saved_fracs: list = dataclasses.field(default_factory=list)
+    sorted_flags: list = dataclasses.field(default_factory=list)
+
+    def observe_frame(self, latency_s: float, hit_rate: float,
+                      saved_frac: float, sorted_flag: float) -> None:
+        self.latencies_s.append(float(latency_s))
+        self.hit_rates.append(float(hit_rate))
+        self.saved_fracs.append(float(saved_frac))
+        self.sorted_flags.append(float(sorted_flag))
+
+    @property
+    def frames(self) -> int:
+        return len(self.latencies_s)
+
+    def summary(self) -> dict:
+        lat = np.asarray(self.latencies_s, np.float64)
+        wall = float(lat.sum())
+        queue_ticks = (self.admitted_tick - self.arrival_tick
+                       if self.admitted_tick >= 0 else -1)
+        return {
+            'sid': self.sid,
+            'frames': self.frames,
+            'queue_ticks': queue_ticks,
+            'fps': self.frames / wall if wall > 0 else float('inf'),
+            'hit_rate': float(np.mean(self.hit_rates)) if self.hit_rates else 0.0,
+            'saved_frac': (float(np.mean(self.saved_fracs))
+                           if self.saved_fracs else 0.0),
+            'p50_ms': float(np.percentile(lat, 50) * 1e3) if self.frames else 0.0,
+            'p99_ms': float(np.percentile(lat, 99) * 1e3) if self.frames else 0.0,
+            'sorts_per_frame': (float(np.mean(self.sorted_flags))
+                                if self.sorted_flags else 0.0),
+        }
+
+
+def format_table(summaries: list[dict]) -> str:
+    """Render session summaries as an aligned text table."""
+    if not summaries:
+        return '(no sessions)'
+    cols = list(summaries[0].keys())
+
+    def fmt(v):
+        return f'{v:.3g}' if isinstance(v, float) else str(v)
+
+    width = {c: max(len(c), max(len(fmt(s[c])) for s in summaries))
+             for c in cols}
+    lines = ['  '.join(c.rjust(width[c]) for c in cols)]
+    for s in summaries:
+        lines.append('  '.join(fmt(s[c]).rjust(width[c]) for c in cols))
+    return '\n'.join(lines)
+
+
+def aggregate(summaries: list[dict]) -> dict:
+    """Fleet-level rollup across sessions."""
+    if not summaries:
+        return {'sessions': 0, 'frames': 0}
+    frames = sum(s['frames'] for s in summaries)
+    return {
+        'sessions': len(summaries),
+        'frames': frames,
+        'mean_fps': float(np.mean([s['fps'] for s in summaries])),
+        'mean_hit_rate': float(np.mean([s['hit_rate'] for s in summaries])),
+        'worst_p99_ms': float(max(s['p99_ms'] for s in summaries)),
+    }

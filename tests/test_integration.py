@@ -66,8 +66,10 @@ def test_masked_fraction_matches_paper_ballpark(small_scene, cams64):
 
 def test_train_driver_loss_decreases(tmp_path):
     from repro.launch.train import train
+    # warmup sized to the run: the default (20) would leave the effective lr
+    # near zero for all 8 steps and the loss in the noise
     _, _, hist = train('smollm-360m', steps=8, batch=2, seq=64,
-                       lr=3e-3, log_every=0, print_fn=lambda *a: None)
+                       lr=3e-3, warmup=2, log_every=0, print_fn=lambda *a: None)
     assert hist[-1] < hist[0]
 
 

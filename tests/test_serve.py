@@ -1,0 +1,148 @@
+"""Multi-viewer serving: functional-core parity, session lifecycle, CLI."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.camera import stack_cameras
+from repro.core.pipeline import (LuminaConfig, LuminSys, batched_render_step,
+                                 init_viewer_state, render_step)
+from repro.data.trajectory import orbit_trajectory
+from repro.serve.session import SessionManager, ViewerSession
+from repro.serve.stepper import BatchedStepper, SequentialStepper
+from repro.serve.telemetry import SessionTelemetry, aggregate
+
+
+CFG = LuminaConfig(capacity=256, window=3)
+
+
+def _trajectories(n, frames):
+    return [orbit_trajectory(frames, width=64, height_px=64,
+                             start_deg=120.0 * i) for i in range(n)]
+
+
+def test_render_step_matches_luminsys(small_scene, cams64):
+    """The jitted functional step IS LuminSys: identical image stream."""
+    import functools
+    sys_ = LuminSys(small_scene, CFG, cams64[0])
+    state = init_viewer_state(small_scene, CFG, cams64[0])
+    step = jax.jit(functools.partial(render_step, cfg=CFG))
+    for cam in cams64:
+        img_w, st_w = sys_.step(cam)
+        state, img_f, st_f = step(small_scene, state, cam)
+        np.testing.assert_array_equal(np.asarray(img_w), np.asarray(img_f))
+        assert float(st_w.hit_rate) == float(st_f.hit_rate)
+    assert int(state.frame_idx) == len(cams64)
+
+
+def test_batched_vmap_parity_with_sequential(small_scene):
+    """N viewers stepped via one vmapped call match N independent LuminSys
+    runs: every integer cache decision (tags, LRU age, clock, hit counts)
+    is bitwise identical; images agree to float32 ulp (XLA's batched
+    lowering reorders FMA contractions in the projection einsums, so exact
+    bit equality across the two compiled programs is not attainable on CPU).
+    """
+    n, frames = 3, 5
+    trajs = _trajectories(n, frames)
+    refs = [LuminSys(small_scene, CFG, t[0]) for t in trajs]
+    states = jax.tree.map(
+        lambda *xs: jnp.stack(xs),
+        *[init_viewer_state(small_scene, CFG, t[0]) for t in trajs])
+    step_b = jax.jit(
+        lambda st, cm: batched_render_step(small_scene, st, cm, CFG))
+
+    for f in range(frames):
+        cams = stack_cameras([t[f] for t in trajs])
+        states, images, stats = step_b(states, cams)
+        for v in range(n):
+            img_ref, st_ref = refs[v].step(trajs[v][f])
+            np.testing.assert_allclose(
+                np.asarray(images[v]), np.asarray(img_ref), atol=1e-5,
+                err_msg=f'viewer {v} frame {f}')
+            assert float(stats.hit_rate[v]) == pytest.approx(
+                float(st_ref.hit_rate), abs=1e-6)
+            assert float(stats.sorted_this_frame[v]) == float(
+                st_ref.sorted_this_frame)
+
+    for v in range(n):
+        cache_b = jax.tree.map(lambda x: x[v], states.cache)
+        cache_s = refs[v].state.cache
+        np.testing.assert_array_equal(np.asarray(cache_b.tags),
+                                      np.asarray(cache_s.tags))
+        np.testing.assert_array_equal(np.asarray(cache_b.age),
+                                      np.asarray(cache_s.age))
+        np.testing.assert_array_equal(np.asarray(cache_b.clock),
+                                      np.asarray(cache_s.clock))
+        np.testing.assert_allclose(np.asarray(cache_b.values),
+                                   np.asarray(cache_s.values), atol=1e-5)
+
+
+def test_batched_and_sequential_steppers_agree(small_scene):
+    """The two serve engines produce the same per-session hit statistics."""
+    trajs = _trajectories(2, 4)
+    results = {}
+    for engine in (BatchedStepper, SequentialStepper):
+        stepper = engine(small_scene, CFG, trajs[0][0], slots=2)
+        mgr = SessionManager(stepper, slots=2)
+        for sid, t in enumerate(trajs):
+            mgr.submit(ViewerSession(sid=sid, cams=t))
+        finished = mgr.run()
+        results[engine.__name__] = {
+            s.sid: s.telemetry.hit_rates for s in finished}
+    for sid in (0, 1):
+        np.testing.assert_allclose(results['BatchedStepper'][sid],
+                                   results['SequentialStepper'][sid],
+                                   atol=1e-6)
+
+
+def test_session_manager_admit_evict_lifecycle(small_scene):
+    """More viewers than slots: arrivals queue, slots are reused, everyone
+    finishes with exactly their trajectory's frame count."""
+    trajs = _trajectories(4, 3)
+    stepper = BatchedStepper(small_scene, CFG, trajs[0][0], slots=2)
+    mgr = SessionManager(stepper, slots=2)
+    for sid, t in enumerate(trajs):
+        mgr.submit(ViewerSession(sid=sid, cams=t, arrival_tick=sid))
+
+    # tick 0: only viewer 0 has arrived
+    mgr.run_tick()
+    assert len(mgr.active_slots()) == 1
+    # tick 1: viewer 1 arrives -> both slots busy, viewers 2/3 must queue
+    mgr.run_tick()
+    assert len(mgr.active_slots()) == 2
+    assert len(mgr.pending) == 2
+
+    finished = mgr.run()
+    assert sorted(s.sid for s in finished) == [0, 1, 2, 3]
+    for s in finished:
+        assert s.telemetry.frames == 3
+        assert s.telemetry.admitted_tick >= s.arrival_tick
+    # late viewers could not be admitted on arrival: they queued for a slot
+    late = [s for s in finished if s.sid >= 2]
+    assert all(s.telemetry.summary()['queue_ticks'] > 0 for s in late)
+    # slots were reused across sessions
+    assert mgr.drained() and mgr.tick < 20
+
+
+def test_telemetry_summary():
+    t = SessionTelemetry(sid=7, arrival_tick=1)
+    t.admitted_tick = 3
+    for i in range(10):
+        t.observe_frame(latency_s=0.01 * (i + 1), hit_rate=0.5,
+                        saved_frac=0.25, sorted_flag=float(i % 3 == 0))
+    s = t.summary()
+    assert s['sid'] == 7 and s['frames'] == 10
+    assert s['queue_ticks'] == 2
+    assert s['hit_rate'] == pytest.approx(0.5)
+    assert s['sorts_per_frame'] == pytest.approx(0.4)
+    assert 0 < s['p50_ms'] < s['p99_ms'] <= 100.0
+    agg = aggregate([s])
+    assert agg['sessions'] == 1 and agg['frames'] == 10
+
+
+def test_serve_cli_smoke(capsys):
+    from repro.serve import render as serve_render
+    serve_render.main(['--viewers', '2', '--frames', '3', '--width', '64',
+                       '--gaussians', '600', '--capacity', '128'])
+    out = capsys.readouterr().out
+    assert 'hit_rate' in out and 'batched: 2 sessions' in out
