@@ -1,11 +1,15 @@
 """Serve -- multi-viewer throughput: batched vs sequential stepping.
 
 Measures end-to-end frames/sec of the render-serving subsystem as the number
-of concurrent viewers grows, once with the vmapped batched stepper (one
-jitted call advances every slot) and once with per-slot sequential stepping.
-The batched column is the one that matters for the ROADMAP's many-users
-goal: its per-viewer cost should fall as slots fill, while sequential cost
-stays flat.
+of concurrent viewers grows, once with the cohort-scheduled batched stepper
+(one vmapped shade per tick, speculative sorts staggered so at most
+ceil(S/window) slots sort per tick) and once with per-slot sequential
+stepping.  The batched column is the one that matters for the ROADMAP's
+many-users goal: its per-viewer cost should fall as slots fill, while
+sequential cost stays flat.  Each row also reports the realised sort
+schedule (mean/max speculative sorts per tick after warmup) and the
+per-phase latency split — the run asserts the cohort bound, so a regression
+that reintroduces per-lane sorting fails the benchmark itself.
 """
 from __future__ import annotations
 
@@ -18,10 +22,12 @@ from repro.data.scenes import structured_scene
 from repro.serve.render import build_sessions
 from repro.serve.session import SessionManager
 from repro.serve.stepper import BatchedStepper, SequentialStepper
+from repro.serve.telemetry import tick_rollup
 
 WIDTH = 64
 GAUSS = 1200
 CAPACITY = 192
+WINDOW = 4
 
 
 def _serve_once(scene, cfg, viewers: int, frames: int, sequential: bool):
@@ -31,35 +37,49 @@ def _serve_once(scene, cfg, viewers: int, frames: int, sequential: bool):
     mgr = SessionManager(stepper, viewers)
     for s in sessions:
         mgr.submit(s)
-    # warm-up tick compiles the step; excluded from the timed run
+    # warm-up tick compiles the step (and absorbs every sort-on-admit burst);
+    # excluded from the timed run and the per-tick sort accounting
     mgr.run_tick()
     t0 = time.perf_counter()
     finished = mgr.run()
     wall = time.perf_counter() - t0
     rendered = sum(s.telemetry.frames for s in finished) - viewers  # warm-up
-    return rendered, wall, finished
+    roll = tick_rollup(mgr.tick_log, warmup_ticks=1)
+    return rendered, wall, finished, roll
 
 
 def run(quick: bool = False):
     frames = 4 if quick else 8
     counts = (1, 2) if quick else (1, 2, 4)
     scene = structured_scene(jax.random.PRNGKey(0), GAUSS)
-    cfg = LuminaConfig(capacity=CAPACITY, window=4)
+    cfg = LuminaConfig(capacity=CAPACITY, window=WINDOW)
     rows = []
     for viewers in counts:
         for sequential in (False, True):
-            rendered, wall, finished = _serve_once(
+            rendered, wall, finished, roll = _serve_once(
                 scene, cfg, viewers, frames, sequential)
             fps = rendered / wall if wall > 0 else float('inf')
+            cohort_bound = -(-viewers // WINDOW)
+            if not sequential:
+                assert roll['max_sorts_per_tick'] <= cohort_bound, (
+                    f"cohort scheduler regressed: "
+                    f"{roll['max_sorts_per_tick']} speculative sorts in one "
+                    f"tick with {viewers} viewers, window {WINDOW} "
+                    f"(bound ceil(S/window) = {cohort_bound})")
             rows.append({
                 'viewers': viewers,
                 'mode': 'sequential' if sequential else 'batched',
+                'window': WINDOW,
                 'frames': rendered,
                 'wall_s': wall,
                 'fps_total': fps,
                 'fps_per_viewer': fps / viewers,
                 'hit_rate': sum(s.telemetry.summary()['hit_rate']
                                 for s in finished) / viewers,
+                'sorts_per_tick': roll['mean_sorts_per_tick'],
+                'max_sorts_per_tick': roll['max_sorts_per_tick'],
+                'sort_ms': roll['mean_sort_ms'],
+                'shade_ms': roll['mean_shade_ms'],
             })
     return rows
 

@@ -23,6 +23,12 @@ from pathlib import Path
 SUITES = ('breakdown', 'sparsity', 'quality', 'speedup', 'sensitivity',
           'finetune', 'kernel', 'serve')
 
+# Suites whose rows are additionally written as machine-readable
+# BENCH_<name>.json at the repo root — the perf trajectory other sessions
+# diff against (experiments/bench/ keeps the full per-run archive).
+TRACKED = ('serve', 'kernel')
+REPO_ROOT = Path(__file__).resolve().parent.parent
+
 
 def _render(mod, rows) -> str:
     from benchmarks import common
@@ -51,6 +57,12 @@ def main() -> None:
             print(f'[{name}: {time.time() - t0:.1f}s]\n')
             with open(out_dir / f'{name}.json', 'w') as f:
                 json.dump(rows, f, indent=1, default=str)
+            if name in TRACKED:
+                payload = {'suite': name, 'quick': bool(args.quick),
+                           'wall_s': round(time.time() - t0, 2),
+                           'rows': rows}
+                with open(REPO_ROOT / f'BENCH_{name}.json', 'w') as f:
+                    json.dump(payload, f, indent=1, default=str)
         except Exception:
             failures.append(name)
             print(f'== {name} FAILED ==')

@@ -9,12 +9,22 @@ Combines the three stages with both optimizations:
                --> Radiance-Cache lookup: hits take the cached RGB and
                    terminate early; misses complete integration and insert.
 
-Everything is expressed as one pure, jitted ``render_step`` over fixed shapes:
-per-viewer state (radiance cache, S^2 sort-shared buffers, previous pose,
-frame counter) lives in a ``ViewerState`` pytree, and the sort-or-reuse
-decision is a ``lax.cond`` — so the same step function drives the
-single-viewer ``LuminSys`` wrapper, the vmapped multi-viewer serving path
-(``repro.serve``), tests, benchmarks, and the hardware cost models.
+Everything is expressed as pure functions over fixed shapes: per-viewer state
+(radiance cache, S^2 sort-shared buffers, previous pose, frame counter) lives
+in a ``ViewerState`` pytree, and the frame is split into two phases:
+
+  * ``sort_phase``  — pose prediction + speculative Projection/Sorting,
+    producing a ``SortShared`` (runs once per sharing window);
+  * ``shade_phase`` — sorting-shared prep + rasterization + radiance cache,
+    consuming the current ``SortShared`` (runs every frame, sort-free).
+
+``render_step`` composes the two with a ``lax.cond`` on
+``frame_idx % window`` — the single-viewer contract is unchanged and it still
+jits/vmaps as one step.  The multi-viewer serving path
+(``repro.serve.stepper``) instead schedules the phases itself: a cohort sort
+scheduler runs ``sort_phase`` for only the due slots each tick and advances
+all slots through a vmapped ``shade_phase``, restoring the 1-in-window sort
+amortization that a per-lane cond (lowered to a select under vmap) destroys.
 """
 from __future__ import annotations
 
@@ -30,8 +40,9 @@ from repro.core.camera import Camera
 from repro.core.gaussians import GaussianScene
 from repro.core.projection import project
 from repro.core.rasterize import RasterAux, assemble_image, rasterize_tiles
-from repro.core.s2 import (SortShared, empty_sort_shared, predict_pose,
-                           shared_features, speculative_sort)
+from repro.core.s2 import (SortShared, empty_sort_shared,
+                           predict_window_pose, shared_features,
+                           speculative_sort)
 from repro.core.sorting import sort_scene
 from repro.core.tiling import TILE, gather_tile_features, tile_grid
 
@@ -74,7 +85,8 @@ from repro.core.groups import group_dims, num_groups, regroup, ungroup  # noqa: 
 # Stages
 # ---------------------------------------------------------------------------
 
-def render_frame_baseline(scene: GaussianScene, cam: Camera, cfg: LuminaConfig):
+def render_frame_baseline(scene: GaussianScene, cam: Camera, cfg: LuminaConfig,
+                          live=None):
     """Full 3DGS pipeline (Projection -> Sorting -> Rasterization), no reuse."""
     proj = project(scene, cam)
     lists = sort_scene(proj, cam.width, cam.height, cfg.capacity,
@@ -82,7 +94,7 @@ def render_frame_baseline(scene: GaussianScene, cam: Camera, cfg: LuminaConfig):
                        max_tiles_per_gaussian=cfg.max_tiles_per_gaussian)
     feats = gather_tile_features(proj, lists)
     colors, aux = rasterize_tiles(feats, lists.tiles_x, k_record=cfg.k_record,
-                                  bg=cfg.bg)
+                                  bg=cfg.bg, live=live)
     image = assemble_image(colors, lists.tiles_x, lists.tiles_y,
                            cam.width, cam.height)
     return image, colors, aux, lists
@@ -145,6 +157,12 @@ class ViewerState:
     frame_idx: jax.Array
 
 
+def copy_pytree(tree):
+    """Fresh buffers for every array leaf — required before handing a pytree
+    to a donating jitted call while the original is referenced elsewhere."""
+    return jax.tree.map(lambda x: jnp.array(x, copy=True), tree)
+
+
 def init_viewer_state(scene: GaussianScene, cfg: LuminaConfig,
                       cam0: Camera) -> ViewerState:
     """Cold-start state for one viewer rendering at ``cam0``'s resolution."""
@@ -154,44 +172,55 @@ def init_viewer_state(scene: GaussianScene, cfg: LuminaConfig,
         scene, cam0, margin=cfg.margin, capacity=cfg.capacity,
         method=cfg.sort_method,
         max_tiles_per_gaussian=cfg.max_tiles_per_gaussian)
-    return ViewerState(cache=cache, shared=shared, prev_cam=cam0,
+    # prev_cam gets its own buffers: the state is donated into jitted steps,
+    # and the first step is typically called with cam0 itself — donating
+    # aliased leaves is an XLA error (`f(donate(a), a)`).
+    return ViewerState(cache=cache, shared=shared, prev_cam=copy_pytree(cam0),
                        frame_idx=jnp.int32(0))
 
 
-def render_step(scene: GaussianScene, state: ViewerState, cam: Camera,
-                cfg: LuminaConfig):
-    """One frame of the Lumina pipeline as a pure function.
+def sort_phase(scene: GaussianScene, state: ViewerState, cam: Camera,
+               cfg: LuminaConfig) -> SortShared:
+    """Phase 1 of a frame: pose prediction + speculative Projection/Sorting.
 
-    Returns ``(new_state, image, FrameStats)``.  The S^2 sort-or-reuse
-    decision is a ``lax.cond`` on ``frame_idx % window`` so the whole step
-    jits once and vmaps over batched (state, cam) for multi-viewer serving.
+    Pure and unconditional — the *caller* decides when it runs (``render_step``
+    guards it with a ``lax.cond`` on the per-viewer cadence; the cohort
+    scheduler in ``repro.serve.stepper`` gathers only the due slots and calls
+    it once per window per slot).  Returns the ``SortShared`` for the next
+    sharing window.
+    """
+    pred = predict_window_pose(state.prev_cam, cam, state.frame_idx,
+                               cfg.window)
+    return speculative_sort(
+        scene, pred, margin=cfg.margin, capacity=cfg.capacity,
+        method=cfg.sort_method,
+        max_tiles_per_gaussian=cfg.max_tiles_per_gaussian)
+
+
+def shade_phase(scene: GaussianScene, state: ViewerState, cam: Camera,
+                cfg: LuminaConfig, *, sorted_flag=0.0, active=None):
+    """Phase 2 of a frame: sorting-shared prep + rasterization + radiance
+    cache, consuming ``state.shared``.  Sort-free by construction — its cost
+    is the per-frame cost S^2 amortizes the sort against.
+
+    ``sorted_flag`` is threaded into ``FrameStats.sorted_this_frame`` (the
+    phase itself never sorts, so whoever scheduled the sort reports it).
+    ``active`` (scalar bool per call/lane) reaches the rasterizer's ``live``
+    input: evicted/idle lanes in the batched serving path contribute nothing
+    and count zero iterations instead of burning chunk iterations.
+
+    Returns ``(new_state, image, FrameStats)``.
     """
     tiles_x, tiles_y = tile_grid(cam.width, cam.height)
 
     if cfg.use_s2:
-        do_sort = (state.frame_idx % cfg.window) == 0
-        # Frame 0 has no real previous pose: predict from the current one
-        # (LuminSys semantics — prediction degenerates to the identity).
-        is_first = state.frame_idx == 0
-        prev_cam = jax.tree.map(lambda p, c: jnp.where(is_first, c, p),
-                                state.prev_cam, cam)
-        pred = predict_pose(prev_cam, cam, cfg.window)
-
-        def _sort(_):
-            return speculative_sort(
-                scene, pred, margin=cfg.margin, capacity=cfg.capacity,
-                method=cfg.sort_method,
-                max_tiles_per_gaussian=cfg.max_tiles_per_gaussian)
-
-        shared = jax.lax.cond(do_sort, _sort, lambda _: state.shared, None)
-        feats, lists = shared_features(scene, cam, shared)
+        feats, lists = shared_features(scene, cam, state.shared)
         colors, aux = rasterize_tiles(feats, lists.tiles_x,
-                                      k_record=cfg.k_record, bg=cfg.bg)
-        sorted_flag = do_sort.astype(jnp.float32)
+                                      k_record=cfg.k_record, bg=cfg.bg,
+                                      live=active)
     else:
-        _, colors, aux, _ = render_frame_baseline(scene, cam, cfg)
-        shared = state.shared
-        sorted_flag = jnp.float32(1.0)
+        _, colors, aux, _ = render_frame_baseline(scene, cam, cfg,
+                                                  live=active)
 
     if cfg.use_rc:
         colors, cache, hit, saved_frac = rc_apply(state.cache, colors, aux,
@@ -202,10 +231,35 @@ def render_step(scene: GaussianScene, state: ViewerState, cam: Camera,
         saved_frac = jnp.float32(0.0)
 
     image = assemble_image(colors, tiles_x, tiles_y, cam.width, cam.height)
-    stats = _stats(aux, hit, saved_frac, sorted_flag)
-    new_state = ViewerState(cache=cache, shared=shared, prev_cam=cam,
+    stats = _stats(aux, hit, saved_frac,
+                   jnp.asarray(sorted_flag, jnp.float32))
+    new_state = ViewerState(cache=cache, shared=state.shared, prev_cam=cam,
                             frame_idx=state.frame_idx + 1)
     return new_state, image, stats
+
+
+def render_step(scene: GaussianScene, state: ViewerState, cam: Camera,
+                cfg: LuminaConfig):
+    """One frame of the Lumina pipeline as a pure function: the composition
+    ``sort_phase`` (under a ``lax.cond`` on ``frame_idx % window``) followed
+    by ``shade_phase``.
+
+    Returns ``(new_state, image, FrameStats)``.  The cond keeps the whole
+    step one jittable function; note that under vmap the cond lowers to a
+    select and every lane pays the sort — batched serving uses the cohort
+    scheduler in ``repro.serve.stepper`` instead.
+    """
+    if cfg.use_s2:
+        do_sort = (state.frame_idx % cfg.window) == 0
+        shared = jax.lax.cond(do_sort,
+                              lambda st: sort_phase(scene, st, cam, cfg),
+                              lambda st: st.shared,
+                              state)
+        state = dataclasses.replace(state, shared=shared)
+        sorted_flag = do_sort.astype(jnp.float32)
+    else:
+        sorted_flag = jnp.float32(1.0)
+    return shade_phase(scene, state, cam, cfg, sorted_flag=sorted_flag)
 
 
 def batched_render_step(scene: GaussianScene, states: ViewerState,
@@ -214,13 +268,35 @@ def batched_render_step(scene: GaussianScene, states: ViewerState,
     [S] axis (build cams with ``repro.core.camera.stack_cameras``); the scene
     is shared.  Returns batched ``(states, images, FrameStats)``.
 
-    Because each lane keeps its own sort cadence (required for exact parity
-    with independent ``LuminSys`` runs), the per-lane ``lax.cond`` lowers to
-    a select under vmap and the speculative sort executes for every lane on
-    every tick.  A cadence synchronized across slots would keep the cond
-    scalar and restore the 1-in-window amortization — see ROADMAP.
+    Each lane keeps its own sort cadence (exact parity with independent
+    ``LuminSys`` runs), so the per-lane ``lax.cond`` lowers to a select under
+    vmap and the speculative sort executes for every lane on every tick —
+    this is the parity oracle, not the serving fast path.  The serving path
+    (``repro.serve.stepper.BatchedStepper``) staggers sort phases across
+    slots and runs ``sort_phase`` only for the due cohort each tick.
     """
     return jax.vmap(lambda st, cm: render_step(scene, st, cm, cfg))(
+        states, cams)
+
+
+def batched_shade_phase(scene: GaussianScene, states: ViewerState,
+                        cams: Camera, sorted_flags: jax.Array,
+                        active: jax.Array, cfg: LuminaConfig):
+    """vmap of ``shade_phase`` over a slot axis — the per-tick body of the
+    cohort-scheduled serving path.  ``sorted_flags`` [S] float32 and
+    ``active`` [S] bool are per-slot scalars from the scheduler; the cond-free
+    no-sort path stays scalar and sort-free under vmap."""
+    return jax.vmap(
+        lambda st, cm, sf, ac: shade_phase(scene, st, cm, cfg,
+                                           sorted_flag=sf, active=ac)
+    )(states, cams, sorted_flags, active)
+
+
+def batched_sort_phase(scene: GaussianScene, states: ViewerState,
+                       cams: Camera, cfg: LuminaConfig) -> SortShared:
+    """vmap of ``sort_phase`` over a (small) cohort axis: states/cams carry a
+    leading [C] axis of just the due slots."""
+    return jax.vmap(lambda st, cm: sort_phase(scene, st, cm, cfg))(
         states, cams)
 
 
@@ -244,10 +320,17 @@ class LuminSys:
         self.cfg = cfg
         self.tiles_x, self.tiles_y = tile_grid(cam0.width, cam0.height)
         self.state = init_viewer_state(scene, cfg, cam0)
-        self._step = jax.jit(functools.partial(render_step, cfg=cfg))
+        # The previous ViewerState is dead the instant the step returns —
+        # donate it so XLA updates the cache/shared buffers in place instead
+        # of copying the full O(N) state every frame.
+        self._step = jax.jit(functools.partial(render_step, cfg=cfg),
+                             donate_argnums=(1,))
 
     @property
     def cache(self) -> rc.CacheState:
+        """The *current* cache state.  The step donates its input state, so a
+        reference held across a later ``step`` call points at deleted buffers
+        — re-read the property (or copy) instead of caching it."""
         return self.state.cache
 
     @property

@@ -54,16 +54,26 @@ def _pixel_coords(tiles_x: int, num_tiles: int):
 
 
 def rasterize_tiles(feats: TileFeatures, tiles_x: int, *, k_record: int = 5,
-                    bg: float = 0.0) -> tuple[jax.Array, RasterAux]:
+                    bg: float = 0.0, live=None) -> tuple[jax.Array, RasterAux]:
     """Integrate colors for all tiles.
+
+    ``live`` mirrors the Pallas kernel's per-pixel liveness input: anything
+    broadcastable to [T, P] bool (a scalar masks the whole call — e.g. one
+    idle lane under vmap in the batched serving path).  Dead pixels
+    contribute nothing and count zero iterations, so the stats of masked
+    lanes stay out of the fleet telemetry; on the kernel fast path the same
+    mask skips whole chunks.  ``None`` means all live.
 
     Returns (tile_colors [T, P, 3], aux).
     """
     num_tiles = feats.mean2d.shape[0]
     p = TILE * TILE
     pix = _pixel_coords(tiles_x, num_tiles)      # [T, P, 2]
+    if live is None:
+        live = True
+    live_tp = jnp.broadcast_to(jnp.asarray(live, bool), (num_tiles, p))
 
-    def per_tile(pix_t, mean2d, conic, color, opacity, ids):
+    def per_tile(pix_t, mean2d, conic, color, opacity, ids, live_t):
         def step(carry, g):
             (acc, trans, rec_ids, rec_cnt, n_sig, n_iter, it_k, i) = carry
             g_mean, g_conic, g_color, g_op, g_id = g
@@ -73,7 +83,7 @@ def rasterize_tiles(feats: TileFeatures, tiles_x: int, *, k_record: int = 5,
                 - g_conic[1] * dx * dy
             alpha = jnp.minimum(ALPHA_MAX, g_op * jnp.exp(power))
             valid = (power <= 0.0) & (g_id >= 0)
-            active = trans > TRANSMITTANCE_EPS
+            active = (trans > TRANSMITTANCE_EPS) & live_t
             sig = (alpha > ALPHA_SIGNIFICANT) & valid
             contrib = sig & active
 
@@ -110,7 +120,8 @@ def rasterize_tiles(feats: TileFeatures, tiles_x: int, *, k_record: int = 5,
         return acc, trans, rec_ids, n_sig, n_iter, it_k
 
     acc, trans, rec, n_sig, n_iter, it_k = jax.vmap(per_tile)(
-        pix, feats.mean2d, feats.conic, feats.color, feats.opacity, feats.ids)
+        pix, feats.mean2d, feats.conic, feats.color, feats.opacity, feats.ids,
+        live_tp)
     aux = RasterAux(alpha_record=rec, n_significant=n_sig, n_iterated=n_iter,
                     iter_at_k=it_k, transmittance=trans)
     return acc, aux

@@ -56,6 +56,20 @@ def predict_pose(prev: Camera, cur: Camera, window: int) -> Camera:
     return cur._replace(position=position, quat=quat)
 
 
+def predict_window_pose(prev: Camera, cur: Camera, frame_idx: jax.Array,
+                        window: int) -> Camera:
+    """``predict_pose`` with the cold-start guard: frame 0 has no real previous
+    pose, so prediction degenerates to the identity (predict from ``cur``).
+
+    This is the pose every speculative sort uses — factored out so the
+    single-viewer ``render_step`` and the cohort-scheduled serving path
+    (``repro.serve.stepper``) share one definition.
+    """
+    is_first = frame_idx == 0
+    prev = jax.tree.map(lambda p, c: jnp.where(is_first, c, p), prev, cur)
+    return predict_pose(prev, cur, window)
+
+
 def speculative_sort(scene: GaussianScene, pred_cam: Camera, *,
                      margin: int, capacity: int, method: str = 'dense',
                      max_tiles_per_gaussian: int = 16) -> SortShared:

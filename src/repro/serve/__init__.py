@@ -1,18 +1,24 @@
 """Multi-viewer batched render serving over one shared GaussianScene.
 
 Layers (bottom-up):
-  * ``repro.core.pipeline.render_step`` — the pure per-viewer frame function
-    (lives in core; vmapped here for the batched path);
-  * ``stepper``   — Batched (one vmapped call per tick) / Sequential engines;
-  * ``session``   — viewer sessions + slot-based admit/evict manager;
-  * ``telemetry`` — per-session FPS / hit-rate / latency percentiles;
+  * ``repro.core.pipeline.sort_phase`` / ``shade_phase`` — the pure two-phase
+    per-viewer frame (lives in core; the serving path schedules the phases
+    itself instead of using ``render_step``'s per-viewer ``lax.cond``);
+  * ``stepper``   — Batched (cohort sort scheduler + one vmapped shade per
+    tick, state buffers donated) / Sequential engines;
+  * ``session``   — viewer sessions + slot-based admit/evict manager
+    (keeps the per-tick ``tick_log`` of sort/shade attribution);
+  * ``telemetry`` — per-session FPS / hit-rate / latency percentiles /
+    per-phase ``sort_ms``+``shade_ms``, fleet ``tick_rollup``;
   * ``render``    — the CLI entrypoint (``python -m repro.serve.render``).
 """
 from repro.serve.session import SessionManager, ViewerSession
-from repro.serve.stepper import BatchedStepper, SequentialStepper
-from repro.serve.telemetry import (SessionTelemetry, aggregate, format_table)
+from repro.serve.stepper import BatchedStepper, SequentialStepper, TickTiming
+from repro.serve.telemetry import (SessionTelemetry, aggregate, format_table,
+                                   tick_rollup)
 
 __all__ = [
-    'BatchedStepper', 'SequentialStepper', 'SessionManager', 'ViewerSession',
-    'SessionTelemetry', 'aggregate', 'format_table',
+    'BatchedStepper', 'SequentialStepper', 'SessionManager', 'TickTiming',
+    'ViewerSession', 'SessionTelemetry', 'aggregate', 'format_table',
+    'tick_rollup',
 ]

@@ -7,8 +7,10 @@ slots, then prints per-session telemetry:
     PYTHONPATH=src python -m repro.serve.render --viewers 4 --frames 24
 
 Each viewer orbits the scene from its own start angle, so their radiance
-caches and sharing windows evolve independently while the batched stepper
-advances all of them in one vmapped render_step per tick.
+caches evolve independently while the batched stepper advances all of them
+through one vmapped shade_phase per tick; speculative sorts run only for the
+tick's due cohort (staggered across slots, at most ceil(S/window) per tick,
+plus sort-on-admit) — see repro.serve.stepper for the cadence-shift caveat.
 """
 from __future__ import annotations
 
@@ -21,7 +23,7 @@ from repro.data.scenes import structured_scene
 from repro.data.trajectory import orbit_trajectory
 from repro.serve.session import SessionManager, ViewerSession
 from repro.serve.stepper import BatchedStepper, SequentialStepper
-from repro.serve.telemetry import aggregate, format_table
+from repro.serve.telemetry import aggregate, format_table, tick_rollup
 
 
 def build_sessions(viewers: int, frames: int, *, width: int = 96,
@@ -61,12 +63,24 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     agg = aggregate(summaries)
     agg['ticks'] = mgr.tick
     agg['mode'] = 'sequential' if sequential else 'batched'
+    # Tick-level rollup keys get a tick_ prefix: aggregate()'s
+    # mean_sort_ms/mean_shade_ms are session-level means (matching the table
+    # above) and sessions ride different subsets of ticks, so the two
+    # statistics legitimately differ.
+    roll = tick_rollup(mgr.tick_log, warmup_ticks=1)
+    agg['mean_sorts_per_tick'] = roll['mean_sorts_per_tick']
+    agg['max_sorts_per_tick'] = roll['max_sorts_per_tick']
+    agg['tick_sort_ms'] = roll['mean_sort_ms']
+    agg['tick_shade_ms'] = roll['mean_shade_ms']
     print_fn(format_table(summaries))
     print_fn(f"-- {agg['mode']}: {agg['sessions']} sessions, "
              f"{agg['frames']} frames in {agg['ticks']} ticks, "
              f"mean {agg['mean_fps']:.2f} fps/viewer, "
              f"mean hit rate {agg['mean_hit_rate']:.2f}, "
-             f"worst p99 {agg['worst_p99_ms']:.0f} ms")
+             f"worst p99 {agg['worst_p99_ms']:.0f} ms, "
+             f"sort/shade {agg['mean_sort_ms']:.1f}/"
+             f"{agg['mean_shade_ms']:.1f} ms, "
+             f"max {agg['max_sorts_per_tick']} sorts/tick")
     return agg
 
 

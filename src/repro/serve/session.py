@@ -55,6 +55,9 @@ class SessionManager:
         self.pending: deque[ViewerSession] = deque()
         self.finished: list[ViewerSession] = []
         self.tick = 0
+        # Per-tick phase attribution: {'tick', 'frames', 'sorted_slots',
+        # 'sort_ms', 'shade_ms'} per rendered tick (empty ticks are skipped).
+        self.tick_log: list[dict] = []
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -102,14 +105,25 @@ class SessionManager:
         cams = {slot: self.slot_session[slot].current_cam()
                 for slot in self.active_slots()}
         outputs = self.stepper.step(cams)
-        for slot, (_image, stats, latency) in outputs.items():
+        for slot, (_image, stats, timing) in outputs.items():
             sess = self.slot_session[slot]
             sess.telemetry.observe_frame(
-                latency_s=latency,
+                latency_s=timing.latency_s,
                 hit_rate=float(stats.hit_rate),
                 saved_frac=float(stats.saved_frac),
-                sorted_flag=float(stats.sorted_this_frame))
+                sorted_flag=float(stats.sorted_this_frame),
+                sort_ms=timing.sort_ms,
+                shade_ms=timing.shade_ms)
             sess.cursor += 1
+        if outputs:
+            tick_timing = self.stepper.last_timing
+            self.tick_log.append({
+                'tick': self.tick,
+                'frames': len(outputs),
+                'sorted_slots': tick_timing.sorted_slots,
+                'sort_ms': tick_timing.sort_ms,
+                'shade_ms': tick_timing.shade_ms,
+            })
         self.tick += 1
         return len(outputs)
 

@@ -1,10 +1,14 @@
 """Per-session render telemetry for the multi-viewer server.
 
 Each viewer session accumulates per-frame observations (wall-clock latency of
-the batched tick it rode in, radiance-cache hit rate, whether its slot ran a
+the batched tick it rode in, split into the tick's **sort-phase** and
+**shade-phase** wall time, radiance-cache hit rate, whether its slot ran a
 speculative sort) and summarises them into the numbers an operator watches:
-frames/sec, mean hit rate, p50/p99 frame latency and the realised sort
-cadence (sorts per frame; 1/window when S^2 is keeping up).
+frames/sec, mean hit rate, p50/p99 frame latency, the realised sort cadence
+(sorts per frame; 1/window when S^2 is keeping up) and mean per-phase cost.
+The per-tick sorted-slot counts live on ``SessionManager.tick_log`` — see
+``tick_rollup`` for the fleet-level view the cohort scheduler is judged by
+(max sorted slots per tick <= ceil(S/window) after warmup).
 """
 from __future__ import annotations
 
@@ -25,13 +29,23 @@ class SessionTelemetry:
     hit_rates: list = dataclasses.field(default_factory=list)
     saved_fracs: list = dataclasses.field(default_factory=list)
     sorted_flags: list = dataclasses.field(default_factory=list)
+    sort_mss: list = dataclasses.field(default_factory=list)
+    shade_mss: list = dataclasses.field(default_factory=list)
 
     def observe_frame(self, latency_s: float, hit_rate: float,
-                      saved_frac: float, sorted_flag: float) -> None:
+                      saved_frac: float, sorted_flag: float,
+                      sort_ms: float = 0.0,
+                      shade_ms: float | None = None) -> None:
+        """``sort_ms``/``shade_ms`` attribute the tick's latency to its two
+        phases; ``shade_ms`` defaults to the whole tick when the engine
+        cannot split (the monolithic sequential reference)."""
         self.latencies_s.append(float(latency_s))
         self.hit_rates.append(float(hit_rate))
         self.saved_fracs.append(float(saved_frac))
         self.sorted_flags.append(float(sorted_flag))
+        self.sort_mss.append(float(sort_ms))
+        self.shade_mss.append(float(latency_s * 1e3 if shade_ms is None
+                                    else shade_ms))
 
     @property
     def frames(self) -> int:
@@ -54,6 +68,10 @@ class SessionTelemetry:
             'p99_ms': float(np.percentile(lat, 99) * 1e3) if self.frames else 0.0,
             'sorts_per_frame': (float(np.mean(self.sorted_flags))
                                 if self.sorted_flags else 0.0),
+            'sort_ms': (float(np.mean(self.sort_mss))
+                        if self.sort_mss else 0.0),
+            'shade_ms': (float(np.mean(self.shade_mss))
+                         if self.shade_mss else 0.0),
         }
 
 
@@ -85,4 +103,30 @@ def aggregate(summaries: list[dict]) -> dict:
         'mean_fps': float(np.mean([s['fps'] for s in summaries])),
         'mean_hit_rate': float(np.mean([s['hit_rate'] for s in summaries])),
         'worst_p99_ms': float(max(s['p99_ms'] for s in summaries)),
+        'mean_sort_ms': float(np.mean([s.get('sort_ms', 0.0)
+                                       for s in summaries])),
+        'mean_shade_ms': float(np.mean([s.get('shade_ms', 0.0)
+                                        for s in summaries])),
+    }
+
+
+def tick_rollup(tick_log: list[dict], warmup_ticks: int = 0) -> dict:
+    """Fleet-level per-tick view of the cohort scheduler's sort activity.
+
+    ``tick_log`` is ``SessionManager.tick_log``; ``warmup_ticks`` drops the
+    leading ticks (compile + sort-on-admit bursts sit outside the scheduled
+    per-tick cohort bound).
+    """
+    log = [t for t in tick_log if t['tick'] >= warmup_ticks]
+    if not log:
+        return {'ticks': 0, 'mean_sorts_per_tick': 0.0,
+                'max_sorts_per_tick': 0, 'mean_sort_ms': 0.0,
+                'mean_shade_ms': 0.0}
+    sorts = [t['sorted_slots'] for t in log]
+    return {
+        'ticks': len(log),
+        'mean_sorts_per_tick': float(np.mean(sorts)),
+        'max_sorts_per_tick': int(max(sorts)),
+        'mean_sort_ms': float(np.mean([t['sort_ms'] for t in log])),
+        'mean_shade_ms': float(np.mean([t['shade_ms'] for t in log])),
     }
