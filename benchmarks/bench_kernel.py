@@ -1,7 +1,12 @@
 """Kernel-level benchmark: chunk-granular compute savings of the Pallas
 rasterizer (the TPU analogue of the paper's 55%-computation-avoided claim)
 plus ref-vs-kernel agreement.  Chunks processed = the kernel's early-exit
-statistic; with RC, phase A + miss-resume chunks replace the full pass."""
+statistic; with RC, phase A + the **miss-compacted** resume replace the full
+pass.  Compaction (the software analogue of LuminCore's PE remapping) is
+what turns the savings real at chunk granularity: without it one scattered
+cache miss dragged its whole tile back through the chunk loop and
+``chunk_savings_%`` was negative.  CI gates on that metric staying positive.
+"""
 from __future__ import annotations
 
 import jax
@@ -58,15 +63,19 @@ def run(quick: bool = False) -> list[dict]:
         {'metric': 'hit_rate_mean', 'value': float(np.mean(hits[1:])),
          'note': 'paper: >50%'},
         {'metric': 'chunks_full_mean', 'value': float(fc.mean()),
-         'note': 'tile-granular passes, no RC'},
-        {'metric': 'chunks_rc_mean', 'value': float((ca + cb)[1:].mean()),
-         'note': 'phase A + miss resume'},
+         'note': 'count-capped full pass, no RC (the honest baseline: it '
+                 'shares the early-exit and per-tile chunk caps)'},
+        {'metric': 'chunks_rc_prefix_mean', 'value': float(ca[1:].mean()),
+         'note': 'phase A (stop at k): tiles exit once every pixel fills '
+                 'its record or terminates'},
+        {'metric': 'chunks_rc_resume_mean', 'value': float(cb[1:].mean()),
+         'note': 'miss-compacted phase B: scales with the miss count, not '
+                 'the tile count (PE-remap analogue)'},
         {'metric': 'chunk_savings_%',
          'value': 100 * float(1 - (ca + cb)[1:].mean() / fc[1:].mean()),
-         'note': 'tile-granular: scattered misses force full-tile resume — '
-                 'the warp-divergence analogue LuminCore fixes by PE '
-                 'remapping (modeled in hwmodel), not realizable at XLA '
-                 'tile granularity'},
+         'note': 'measured chunk-granular saving of A + compacted B vs the '
+                 'full pass — realized on-device, no longer only modeled in '
+                 'hwmodel; CI fails if this goes negative'},
     ]
     return rows
 

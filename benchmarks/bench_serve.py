@@ -1,15 +1,21 @@
-"""Serve -- multi-viewer throughput: batched vs sequential stepping.
+"""Serve -- multi-viewer throughput: batched vs sequential, reference vs pallas.
 
 Measures end-to-end frames/sec of the render-serving subsystem as the number
-of concurrent viewers grows, once with the cohort-scheduled batched stepper
-(one vmapped shade per tick, speculative sorts staggered so at most
-ceil(S/window) slots sort per tick) and once with per-slot sequential
-stepping.  The batched column is the one that matters for the ROADMAP's
-many-users goal: its per-viewer cost should fall as slots fill, while
-sequential cost stays flat.  Each row also reports the realised sort
-schedule (mean/max speculative sorts per tick after warmup) and the
-per-phase latency split — the run asserts the cohort bound, so a regression
-that reintroduces per-lane sorting fails the benchmark itself.
+of concurrent viewers grows, across two axes:
+
+* **engine** — the cohort-scheduled batched stepper (one vmapped shade per
+  tick, speculative sorts staggered so at most ceil(S/window) slots sort per
+  tick) vs per-slot sequential stepping (reference backend only; it is the
+  per-viewer-cadence baseline, not a kernel-path vehicle);
+* **backend** — the pure-JAX reference shade vs the chunked Pallas kernel
+  path (``backend='pallas'``: RC phase A -> LuminCache lookup ->
+  miss-compacted resume -> insert), so ``BENCH_serve.json`` records the
+  shade-path speedup per viewer count.
+
+Each row reports the realised sort schedule (the run asserts the cohort
+bound, so a regression that reintroduces per-lane sorting fails the
+benchmark itself) and the per-phase latency split; pallas rows add the
+sampled per-kernel breakdown (prep/prefix/lookup/resume/insert ms).
 """
 from __future__ import annotations
 
@@ -28,60 +34,96 @@ WIDTH = 64
 GAUSS = 1200
 CAPACITY = 192
 WINDOW = 4
+PROFILE_EVERY = 3   # per-kernel sampling cadence on pallas rows (odd, so
+                    # samples do not all land on sort-cohort ticks or, in
+                    # --quick runs, on the drained tail)
 
 
-def _serve_once(scene, cfg, viewers: int, frames: int, sequential: bool):
-    sessions = build_sessions(viewers, frames, width=WIDTH, stagger=0)
-    engine = SequentialStepper if sequential else BatchedStepper
-    stepper = engine(scene, cfg, sessions[0].cams[0], viewers)
-    mgr = SessionManager(stepper, viewers)
-    for s in sessions:
-        mgr.submit(s)
-    # warm-up tick compiles the step (and absorbs every sort-on-admit burst);
-    # excluded from the timed run and the per-tick sort accounting
-    mgr.run_tick()
-    t0 = time.perf_counter()
-    finished = mgr.run()
-    wall = time.perf_counter() - t0
-    rendered = sum(s.telemetry.frames for s in finished) - viewers  # warm-up
-    roll = tick_rollup(mgr.tick_log, warmup_ticks=1)
-    return rendered, wall, finished, roll
+class _Cell:
+    """One benchmark cell (viewers x engine x backend), re-runnable on its
+    compiled stepper.  The serving work is deterministic; the container's
+    wall clock is noisy in multi-second bursts, so ``run()`` interleaves
+    repetitions ACROSS cells round-robin and each cell keeps its fastest
+    repetition — a burst then taxes one repetition of every cell instead of
+    every repetition of one cell."""
+
+    def __init__(self, scene, viewers: int, frames: int, mode: str,
+                 backend: str):
+        self.viewers, self.frames = viewers, frames
+        self.mode, self.backend = mode, backend
+        cfg = LuminaConfig(capacity=CAPACITY, window=WINDOW, backend=backend)
+        engine = SequentialStepper if mode == 'sequential' else BatchedStepper
+        profile = PROFILE_EVERY if backend == 'pallas' else 0
+        cam0 = build_sessions(1, 1, width=WIDTH)[0].cams[0]
+        self.stepper = engine(scene, cfg, cam0, viewers,
+                              profile_every=profile)
+        self.best = None
+
+    def run_once(self) -> None:
+        sessions = build_sessions(self.viewers, self.frames, width=WIDTH,
+                                  stagger=0)
+        mgr = SessionManager(self.stepper, self.viewers)
+        for s in sessions:
+            mgr.submit(s)
+        # warm-up tick compiles the step on the first repetition (and
+        # absorbs every sort-on-admit burst); excluded from the timed run
+        # and the per-tick sort accounting
+        mgr.run_tick()
+        prof0 = self.stepper.profile_s
+        t0 = time.perf_counter()
+        finished = mgr.run()
+        # per-kernel profiling runs outside the serving work proper;
+        # subtract its overhead so fps compares backends, not cadences
+        wall = time.perf_counter() - t0 - (self.stepper.profile_s - prof0)
+        rendered = sum(s.telemetry.frames
+                       for s in finished) - self.viewers  # warm-up
+        roll = tick_rollup(mgr.tick_log, warmup_ticks=1)
+        if self.best is None or wall < self.best[1]:
+            self.best = (rendered, wall, finished, roll)
+
+    def row(self) -> dict:
+        rendered, wall, finished, roll = self.best
+        fps = rendered / wall if wall > 0 else float('inf')
+        cohort_bound = -(-self.viewers // WINDOW)
+        if self.mode == 'batched':
+            assert roll['max_sorts_per_tick'] <= cohort_bound, (
+                f"cohort scheduler regressed: "
+                f"{roll['max_sorts_per_tick']} speculative sorts in one "
+                f"tick with {self.viewers} viewers, window {WINDOW} "
+                f"(bound ceil(S/window) = {cohort_bound})")
+        return {
+            'viewers': self.viewers,
+            'mode': self.mode,
+            'backend': self.backend,
+            'window': WINDOW,
+            'frames': rendered,
+            'wall_s': wall,
+            'fps_total': fps,
+            'fps_per_viewer': fps / self.viewers,
+            'hit_rate': sum(s.telemetry.summary()['hit_rate']
+                            for s in finished) / self.viewers,
+            'sorts_per_tick': roll['mean_sorts_per_tick'],
+            'max_sorts_per_tick': roll['max_sorts_per_tick'],
+            'sort_ms': roll['mean_sort_ms'],
+            'shade_ms': roll['mean_shade_ms'],
+            'kernel_ms': roll['kernel_ms'],
+        }
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, reps: int = 4):
     frames = 4 if quick else 8
     counts = (1, 2) if quick else (1, 2, 4)
     scene = structured_scene(jax.random.PRNGKey(0), GAUSS)
-    cfg = LuminaConfig(capacity=CAPACITY, window=WINDOW)
-    rows = []
-    for viewers in counts:
-        for sequential in (False, True):
-            rendered, wall, finished, roll = _serve_once(
-                scene, cfg, viewers, frames, sequential)
-            fps = rendered / wall if wall > 0 else float('inf')
-            cohort_bound = -(-viewers // WINDOW)
-            if not sequential:
-                assert roll['max_sorts_per_tick'] <= cohort_bound, (
-                    f"cohort scheduler regressed: "
-                    f"{roll['max_sorts_per_tick']} speculative sorts in one "
-                    f"tick with {viewers} viewers, window {WINDOW} "
-                    f"(bound ceil(S/window) = {cohort_bound})")
-            rows.append({
-                'viewers': viewers,
-                'mode': 'sequential' if sequential else 'batched',
-                'window': WINDOW,
-                'frames': rendered,
-                'wall_s': wall,
-                'fps_total': fps,
-                'fps_per_viewer': fps / viewers,
-                'hit_rate': sum(s.telemetry.summary()['hit_rate']
-                                for s in finished) / viewers,
-                'sorts_per_tick': roll['mean_sorts_per_tick'],
-                'max_sorts_per_tick': roll['max_sorts_per_tick'],
-                'sort_ms': roll['mean_sort_ms'],
-                'shade_ms': roll['mean_shade_ms'],
-            })
-    return rows
+    # (engine, backend) axes; sequential is the per-viewer-cadence baseline
+    # and runs the reference backend only
+    variants = (('batched', 'reference'), ('batched', 'pallas'),
+                ('sequential', 'reference'))
+    cells = [_Cell(scene, viewers, frames, mode, backend)
+             for viewers in counts for mode, backend in variants]
+    for _ in range(max(1, reps)):
+        for cell in cells:
+            cell.run_once()
+    return [cell.row() for cell in cells]
 
 
 def main():

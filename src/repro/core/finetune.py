@@ -52,7 +52,10 @@ def scale_loss(scene: GaussianScene, theta: float) -> jax.Array:
 
 def total_loss(scene: GaussianScene, cam: Camera, gt: jax.Array,
                cfg: FinetuneConfig, render_cfg: LuminaConfig):
-    image, _, _, _ = render_frame_baseline(scene, cam, render_cfg)
+    # early_exit=False: the loss is differentiated, and the rasterizer's
+    # chunked early-exit while_loop has no reverse-mode rule
+    image, _, _, _ = render_frame_baseline(scene, cam, render_cfg,
+                                           early_exit=False)
     l1 = jnp.mean(jnp.abs(image - gt))
     dssim = 1.0 - metrics.ssim(image, gt)
     l_orig = (1 - cfg.lam_dssim) * l1 + cfg.lam_dssim * dssim

@@ -49,7 +49,17 @@ from repro.core.tiling import TILE, gather_tile_features, tile_grid
 
 @dataclasses.dataclass(frozen=True)
 class LuminaConfig:
-    """Algorithm configuration (paper defaults: window=6, margin=4, k=5)."""
+    """Algorithm configuration (paper defaults: window=6, margin=4, k=5).
+
+    ``backend`` selects the shade implementation: ``'reference'`` is the
+    pure-JAX rasterizer + functional cache (the oracle), ``'pallas'`` routes
+    shading through the chunked Pallas kernels (``repro.kernels.ops``) —
+    phase A/lookup/resume/insert with the ``live`` mask reaching the kernel
+    so idle serving lanes skip chunk iterations, and (with ``rc_compact``)
+    the miss-compacted phase-B resume.  The switch threads everywhere the
+    config does: ``LuminSys``, both serve steppers, and the serve CLI's
+    ``--backend`` flag.
+    """
 
     window: int = 6            # sharing window N (frames per sort)
     margin: int = 4            # expanded-viewport margin, pixels per side
@@ -62,8 +72,13 @@ class LuminaConfig:
     bg: float = 0.0
     use_s2: bool = True
     use_rc: bool = True
+    backend: str = 'reference'  # 'reference' | 'pallas'
+    shade_chunk: int = 64       # pallas backend: Gaussians per chunk iteration
+    rc_compact: bool = True     # pallas backend: miss-compacted phase B
 
     def __post_init__(self):
+        if self.backend not in ('reference', 'pallas'):
+            raise ValueError(f'unknown shade backend: {self.backend!r}')
         object.__setattr__(self, 'cache',
                            self.cache._replace(k=self.k_record))
 
@@ -86,15 +101,21 @@ from repro.core.groups import group_dims, num_groups, regroup, ungroup  # noqa: 
 # ---------------------------------------------------------------------------
 
 def render_frame_baseline(scene: GaussianScene, cam: Camera, cfg: LuminaConfig,
-                          live=None):
-    """Full 3DGS pipeline (Projection -> Sorting -> Rasterization), no reuse."""
+                          live=None, early_exit: bool = True):
+    """Full 3DGS pipeline (Projection -> Sorting -> Rasterization), no reuse.
+
+    ``early_exit=False`` selects the dense-scan rasterizer formulation —
+    required by gradient consumers (the fine-tuning loss): the chunked
+    early-exit ``while_loop`` is not reverse-mode differentiable.
+    """
     proj = project(scene, cam)
     lists = sort_scene(proj, cam.width, cam.height, cfg.capacity,
                        method=cfg.sort_method,
                        max_tiles_per_gaussian=cfg.max_tiles_per_gaussian)
     feats = gather_tile_features(proj, lists)
     colors, aux = rasterize_tiles(feats, lists.tiles_x, k_record=cfg.k_record,
-                                  bg=cfg.bg, live=live)
+                                  bg=cfg.bg, live=live,
+                                  early_exit=early_exit)
     image = assemble_image(colors, lists.tiles_x, lists.tiles_y,
                            cam.width, cam.height)
     return image, colors, aux, lists
@@ -209,26 +230,60 @@ def shade_phase(scene: GaussianScene, state: ViewerState, cam: Camera,
     input: evicted/idle lanes in the batched serving path contribute nothing
     and count zero iterations instead of burning chunk iterations.
 
+    ``cfg.backend`` picks the shade implementation: ``'reference'`` shades
+    through the pure-JAX rasterizer and applies the radiance cache after the
+    fact (RC savings *modeled*); ``'pallas'`` shades through the chunked
+    kernel pipeline — prefix / lookup / miss-compacted resume / insert —
+    where hits genuinely stop integration at the alpha-record and the
+    ``live`` mask skips chunk iterations (RC savings *measured*).  The two
+    agree on every integer cache decision; images agree to float32 ulp
+    (the kernel evaluates alpha densely per chunk, so contraction order
+    differs).  ``FrameStats.saved_frac`` keeps per-backend semantics: the
+    modeled per-pixel integration saving on ``reference``, the realized
+    chunk-level saving vs a count-capped full pass on ``pallas``.
+
     Returns ``(new_state, image, FrameStats)``.
     """
     tiles_x, tiles_y = tile_grid(cam.width, cam.height)
+    feats, lists = _prep_features(scene, state, cam, cfg)
 
-    if cfg.use_s2:
-        feats, lists = shared_features(scene, cam, state.shared)
+    if cfg.backend == 'pallas':
+        from repro.kernels import ops
+        # significance-exact list trim: entries that cannot reach
+        # alpha > 1/255 inside their tile at the *render* pose (stale S^2
+        # margin entries) are dropped and survivors compacted — images,
+        # records and cache decisions are bit-unchanged, only examined-work
+        # counters shrink (see ops.trim_features)
+        feats = ops.trim_features(feats, tiles_x)
+        if cfg.use_rc:
+            colors, cache, aux, kst = ops.rasterize_with_rc(
+                feats, tiles_x, tiles_y, state.cache, cfg.cache,
+                cfg.group_tiles, k_record=cfg.k_record,
+                chunk=cfg.shade_chunk, bg=cfg.bg, live=active,
+                compact=cfg.rc_compact)
+            hit = kst.hit
+            saved_frac = 1.0 - ((kst.chunks_prefix + kst.chunks_resume)
+                                .astype(jnp.float32)
+                                / jnp.maximum(kst.chunks_bound, 1))
+        else:
+            colors, aux, _ = ops.rasterize_full(
+                feats, tiles_x, k_record=cfg.k_record, chunk=cfg.shade_chunk,
+                bg=cfg.bg, live=active)
+            cache = state.cache
+            hit = jnp.zeros(aux.n_iterated.shape, bool)
+            saved_frac = jnp.float32(0.0)
+    else:
         colors, aux = rasterize_tiles(feats, lists.tiles_x,
                                       k_record=cfg.k_record, bg=cfg.bg,
                                       live=active)
-    else:
-        _, colors, aux, _ = render_frame_baseline(scene, cam, cfg,
-                                                  live=active)
-
-    if cfg.use_rc:
-        colors, cache, hit, saved_frac = rc_apply(state.cache, colors, aux,
-                                                  tiles_x, tiles_y, cfg)
-    else:
-        cache = state.cache
-        hit = jnp.zeros(aux.n_iterated.shape, bool)
-        saved_frac = jnp.float32(0.0)
+        if cfg.use_rc:
+            colors, cache, hit, saved_frac = rc_apply(state.cache, colors,
+                                                      aux, tiles_x, tiles_y,
+                                                      cfg)
+        else:
+            cache = state.cache
+            hit = jnp.zeros(aux.n_iterated.shape, bool)
+            saved_frac = jnp.float32(0.0)
 
     image = assemble_image(colors, tiles_x, tiles_y, cam.width, cam.height)
     stats = _stats(aux, hit, saved_frac,
@@ -282,14 +337,99 @@ def batched_render_step(scene: GaussianScene, states: ViewerState,
 def batched_shade_phase(scene: GaussianScene, states: ViewerState,
                         cams: Camera, sorted_flags: jax.Array,
                         active: jax.Array, cfg: LuminaConfig):
-    """vmap of ``shade_phase`` over a slot axis — the per-tick body of the
-    cohort-scheduled serving path.  ``sorted_flags`` [S] float32 and
-    ``active`` [S] bool are per-slot scalars from the scheduler; the cond-free
-    no-sort path stays scalar and sort-free under vmap."""
+    """The per-tick shade for all serving slots.  ``sorted_flags`` [S]
+    float32 and ``active`` [S] bool are per-slot scalars from the scheduler.
+
+    On the reference backend this is a vmap of ``shade_phase`` (the
+    cond-free no-sort path stays scalar and sort-free under vmap).  On the
+    pallas backend a vmapped ``pallas_call`` would batch by growing the
+    grid — S x T programs that interpret mode executes serially — so the
+    kernel stages run **slot-batched** instead: phase A puts every slot's
+    lanes of a tile in one program and phase B compacts misses across the
+    whole fleet (``ops.rasterize_with_rc_slots``).  Per-lane results are
+    bit-identical to the vmap; only chunk *accounting* is fleet-coupled, so
+    ``FrameStats.saved_frac`` on this path is the fleet-level measured
+    saving (same value reported to every slot)."""
+    if cfg.backend == 'pallas':
+        return _batched_shade_pallas(scene, states, cams, sorted_flags,
+                                     active, cfg)
     return jax.vmap(
         lambda st, cm, sf, ac: shade_phase(scene, st, cm, cfg,
                                            sorted_flag=sf, active=ac)
     )(states, cams, sorted_flags, active)
+
+
+def _prep_features(scene: GaussianScene, state: ViewerState, cam: Camera,
+                   cfg: LuminaConfig):
+    """Per-frame shade prep: S^2 sorting-shared feature refresh, or a fresh
+    Projection+Sorting in baseline mode.  One definition for the per-slot
+    and slot-batched paths — their bit-identity depends on it."""
+    if cfg.use_s2:
+        return shared_features(scene, cam, state.shared)
+    proj = project(scene, cam)
+    lists = sort_scene(proj, cam.width, cam.height, cfg.capacity,
+                       method=cfg.sort_method,
+                       max_tiles_per_gaussian=cfg.max_tiles_per_gaussian)
+    return gather_tile_features(proj, lists), lists
+
+
+def batched_prep_features(scene: GaussianScene, states: ViewerState,
+                          cams: Camera, cfg: LuminaConfig):
+    """Per-slot shade prep (``_prep_features``) over a slot axis:
+    [S, T, K, ...] feature stacks."""
+    return jax.vmap(
+        lambda st, cm: _prep_features(scene, st, cm, cfg)[0])(states, cams)
+
+
+def trim_features_slots(feats_b, tiles_x: int):
+    """``ops.trim_features`` over [S, T, K, ...] feature stacks (same
+    per-row math as the unbatched trim, so slot-batched and per-slot shades
+    stay bit-identical)."""
+    from repro.core.tiling import TileFeatures
+    from repro.kernels import ops
+    s, t = feats_b.ids.shape[:2]
+    flat = TileFeatures(*[x.reshape((s * t,) + x.shape[2:]) for x in feats_b])
+    flat = ops.trim_features(flat, tiles_x, t_img=t)
+    return TileFeatures(*[x.reshape((s, t) + x.shape[1:]) for x in flat])
+
+
+def _batched_shade_pallas(scene: GaussianScene, states: ViewerState,
+                          cams: Camera, sorted_flags: jax.Array,
+                          active: jax.Array, cfg: LuminaConfig):
+    """Slot-batched pallas shade (see ``batched_shade_phase``)."""
+    from repro.kernels import ops
+    tiles_x, tiles_y = tile_grid(cams.width, cams.height)
+    s = sorted_flags.shape[0]
+    feats_b = batched_prep_features(scene, states, cams, cfg)
+    feats_b = trim_features_slots(feats_b, tiles_x)
+
+    if cfg.use_rc:
+        colors, caches, aux, kst = ops.rasterize_with_rc_slots(
+            feats_b, tiles_x, tiles_y, states.cache, cfg.cache,
+            cfg.group_tiles, k_record=cfg.k_record, chunk=cfg.shade_chunk,
+            bg=cfg.bg, live=active, compact=cfg.rc_compact)
+        hit = kst.hit                                    # [S, T, P]
+        # fleet-coupled chunk accounting -> fleet-level measured saving
+        saved = 1.0 - ((kst.chunks_prefix + kst.chunks_resume)
+                       .astype(jnp.float32)
+                       / jnp.maximum(kst.chunks_bound, 1))
+        saved_b = jnp.broadcast_to(saved, (s,))
+    else:
+        colors, aux, _ = ops.rasterize_full_slots(
+            feats_b, tiles_x, k_record=cfg.k_record, chunk=cfg.shade_chunk,
+            bg=cfg.bg, live=active)
+        caches = states.cache
+        hit = jnp.zeros(aux.n_iterated.shape, bool)
+        saved_b = jnp.zeros((s,), jnp.float32)
+
+    images = jax.vmap(
+        lambda c: assemble_image(c, tiles_x, tiles_y, cams.width,
+                                 cams.height))(colors)
+    stats = jax.vmap(_stats)(aux, hit, saved_b, sorted_flags)
+    new_states = ViewerState(cache=caches, shared=states.shared,
+                             prev_cam=cams,
+                             frame_idx=states.frame_idx + 1)
+    return new_states, images, stats
 
 
 def batched_sort_phase(scene: GaussianScene, states: ViewerState,

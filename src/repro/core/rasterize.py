@@ -53,8 +53,44 @@ def _pixel_coords(tiles_x: int, num_tiles: int):
     return jnp.stack([px + 0.5, py + 0.5], axis=-1).astype(jnp.float32)
 
 
+def chunk_caps(ids: jax.Array, chunk: int) -> jax.Array:
+    """Per-tile chunk cap: the chunk index one past each tile's last valid
+    Gaussian ([T, K] ids -> [T] int32).  Robust to -1 holes mid-list.
+
+    Single source of truth for the chunk accounting shared by this
+    reference rasterizer and the Pallas kernel wrappers (re-exported as
+    ``repro.kernels.ops.chunk_caps``) — the measured savings stay comparable
+    only if both sides cap identically.
+    """
+    k = ids.shape[1]
+    pos = jnp.arange(k, dtype=jnp.int32)
+    last = jnp.max(jnp.where(ids >= 0, pos[None, :] + 1, 0), axis=1)
+    return (last + chunk - 1) // chunk
+
+
+def pad_tile_features(feats: TileFeatures, chunk: int) -> TileFeatures:
+    """Pad the per-tile list length K up to a multiple of ``chunk``.
+    Padding ids are -1 and opacity 0, so padded iterations (when reached at
+    all) touch nothing.  Shared by the reference rasterizer and the kernel
+    wrappers (``repro.kernels.ops.pad_features``)."""
+    k = feats.ids.shape[1]
+    k_pad = (k + chunk - 1) // chunk * chunk
+    if k_pad == k:
+        return feats
+    pad = k_pad - k
+
+    def pz(x, fill=0.0):
+        widths = [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2)
+        return jnp.pad(x, widths, constant_values=fill)
+
+    return TileFeatures(mean2d=pz(feats.mean2d), conic=pz(feats.conic),
+                        color=pz(feats.color), opacity=pz(feats.opacity),
+                        ids=pz(feats.ids, -1))
+
+
 def rasterize_tiles(feats: TileFeatures, tiles_x: int, *, k_record: int = 5,
-                    bg: float = 0.0, live=None) -> tuple[jax.Array, RasterAux]:
+                    bg: float = 0.0, live=None, chunk: int = 64,
+                    early_exit: bool = True) -> tuple[jax.Array, RasterAux]:
     """Integrate colors for all tiles.
 
     ``live`` mirrors the Pallas kernel's per-pixel liveness input: anything
@@ -64,16 +100,39 @@ def rasterize_tiles(feats: TileFeatures, tiles_x: int, *, k_record: int = 5,
     lanes stay out of the fleet telemetry; on the kernel fast path the same
     mask skips whole chunks.  ``None`` means all live.
 
+    With ``early_exit`` (the default) the Gaussian walk is chunked
+    (``chunk`` Gaussians per step) behind an early-exit ``while_loop``
+    mirroring the Pallas kernel's: a tile stops as soon as every live
+    pixel's transmittance bottoms out or its last valid Gaussian is behind
+    it, and a fully masked tile runs **zero** chunks — idle serving lanes
+    no longer pay for a dense scan of dead work, so the reference/
+    sequential numbers the kernel path is judged against are honest.
+    (Under ``vmap`` the loop runs to the *batch-wide* max trip count —
+    per-lane savings there come from the slot compaction in
+    ``repro.serve.stepper``.)  Skipped iterations could never contribute to
+    any output or statistic, so results are bit-identical either way.
+
+    ``early_exit=False`` keeps the single dense ``lax.scan`` over the whole
+    list: a dynamic-trip ``while_loop`` is not reverse-mode differentiable,
+    so gradient consumers (the fine-tuning loss) must take this path.
+
     Returns (tile_colors [T, P, 3], aux).
     """
     num_tiles = feats.mean2d.shape[0]
     p = TILE * TILE
+    k = feats.mean2d.shape[1]
     pix = _pixel_coords(tiles_x, num_tiles)      # [T, P, 2]
     if live is None:
         live = True
     live_tp = jnp.broadcast_to(jnp.asarray(live, bool), (num_tiles, p))
 
-    def per_tile(pix_t, mean2d, conic, color, opacity, ids, live_t):
+    if early_exit:
+        feats = pad_tile_features(feats, chunk)
+        ncap = chunk_caps(feats.ids, chunk)      # [T]
+    else:
+        ncap = jnp.zeros((num_tiles,), jnp.int32)   # unused
+
+    def per_tile(pix_t, mean2d, conic, color, opacity, ids, live_t, ncap_t):
         def step(carry, g):
             (acc, trans, rec_ids, rec_cnt, n_sig, n_iter, it_k, i) = carry
             g_mean, g_conic, g_color, g_op, g_id = g
@@ -103,7 +162,6 @@ def rasterize_tiles(feats: TileFeatures, tiles_x: int, *, k_record: int = 5,
             n_iter = n_iter + (active & (g_id >= 0)).astype(jnp.int32)
             return (acc, trans, rec_ids, new_cnt, n_sig, n_iter, it_k, i + 1), None
 
-        k = mean2d.shape[0]
         init = (
             jnp.zeros((p, 3), jnp.float32),
             jnp.ones((p,), jnp.float32),
@@ -114,14 +172,38 @@ def rasterize_tiles(feats: TileFeatures, tiles_x: int, *, k_record: int = 5,
             jnp.full((p,), k, jnp.int32),   # iter_at_k defaults to "all of them"
             jnp.int32(0),
         )
-        (acc, trans, rec_ids, rec_cnt, n_sig, n_iter, it_k, _), _ = jax.lax.scan(
-            step, init, (mean2d, conic, color, opacity, ids))
+
+        if not early_exit:
+            # dense scan over the whole list — the reverse-mode
+            # differentiable formulation (see docstring)
+            (acc, trans, rec_ids, rec_cnt, n_sig, n_iter, it_k, _), _ = \
+                jax.lax.scan(step, init,
+                             (mean2d, conic, color, opacity, ids))
+            acc = acc + trans[:, None] * bg
+            return acc, trans, rec_ids, n_sig, n_iter, it_k
+
+        def chunk_body(carry):
+            c, inner = carry
+            sl = lambda x: jax.lax.dynamic_slice_in_dim(x, c * chunk, chunk)
+            inner, _ = jax.lax.scan(
+                step, inner,
+                (sl(mean2d), sl(conic), sl(color), sl(opacity), sl(ids)))
+            return (c + 1, inner)
+
+        def chunk_cond(carry):
+            c, inner = carry
+            trans = inner[1]
+            return (c < ncap_t) & jnp.any(live_t
+                                          & (trans > TRANSMITTANCE_EPS))
+
+        _, (acc, trans, rec_ids, rec_cnt, n_sig, n_iter, it_k, _) = \
+            jax.lax.while_loop(chunk_cond, chunk_body, (jnp.int32(0), init))
         acc = acc + trans[:, None] * bg
         return acc, trans, rec_ids, n_sig, n_iter, it_k
 
     acc, trans, rec, n_sig, n_iter, it_k = jax.vmap(per_tile)(
         pix, feats.mean2d, feats.conic, feats.color, feats.opacity, feats.ids,
-        live_tp)
+        live_tp, ncap)
     aux = RasterAux(alpha_record=rec, n_significant=n_sig, n_iterated=n_iter,
                     iter_at_k=it_k, transmittance=trans)
     return acc, aux

@@ -1,4 +1,4 @@
-"""Pallas TPU rasterization kernel — the LuminCore NRU, re-expressed for TPU.
+"""Pallas rasterization kernel — the LuminCore NRU, re-expressed for TPU.
 
 One grid program = one 16x16-pixel tile.  The tile's depth-sorted Gaussian
 features live in VMEM (streamed there by the Pallas pipeline); the kernel
@@ -8,17 +8,24 @@ walks them in chunks of ``chunk`` Gaussians:
       alpha for the whole (chunk x 256 pixels) block is evaluated *densely*
       on the VPU — conic quadratic form + exp — exactly the cheap uniform
       work the paper's PE frontend does for every Gaussian;
-  backend (NRU shared backend analogue)
-      the order-sensitive color integration collapses to closed form with an
-      exclusive prefix-product of (1 - alpha) along the chunk axis
-      (associative scan) followed by ONE [P,C]x[C,3] matmul on the MXU —
-      only *significant* Gaussians contribute via masking, mirroring the
-      FIFO that feeds the paper's backend;
+  backend (NRU shared backend analogue) — two flavors via ``body``:
+      ``'dense'``: the order-sensitive color integration collapses to closed
+      form with an exclusive prefix-product of (1 - alpha) along the chunk
+      axis (associative scan) followed by ONE [P,C]x[C,3] matmul on the MXU
+      — the right shape for TPU vector/matrix units;
+      ``'seq'``: a sequential per-Gaussian update over the chunk (the
+      faithful analogue of the FIFO feeding the paper's shared backend),
+      with a branch that skips Gaussians contributing to no pixel.  On CPU /
+      interpret mode this wins big: the associative scans cost ~log(C)
+      dense passes that a scalar core pays for real, and most shared-list
+      entries are invisible at the render pose.  ops.py picks ``'seq'``
+      whenever it interprets and ``'dense'`` when compiling natively.
   early exit (sparsity harvesting)
       a `while`-loop over chunks stops as soon as every pixel in the tile is
-      terminated / its alpha-record is full / it is not live — the TPU
-      analogue of warp-divergence elimination: whole chunks of work are
-      skipped at the granularity the hardware actually schedules.
+      terminated / its alpha-record is full / it is not live / past the
+      tile's last valid Gaussian (``ncap``) — the TPU analogue of
+      warp-divergence elimination: whole chunks of work are skipped at the
+      granularity the hardware actually schedules.
 
 The same kernel serves three modes (see ops.py):
   * full      — baseline rasterization (S^2 path);
@@ -27,9 +34,13 @@ The same kernel serves three modes (see ops.py):
   * resume    — continue cache-MISS pixels from their saved state
                 (RC phase B), with per-pixel ``start_iter`` gating.
 
+``_kernel_compact`` is the fourth mode: miss-compacted resume, where the P
+lanes of a program come from *different* source tiles (LuminCore PE
+remapping in software) — see ``ops.rasterize_resume_compacted``.
+
 Exact-match contract with ``repro.kernels.ref.rasterize_ref`` (same
 floating-point semantics, including the Gamma<eps freeze rule) — verified by
-shape/dtype sweep tests.
+shape/dtype sweep tests over both body flavors.
 """
 from __future__ import annotations
 
@@ -57,15 +68,133 @@ def _exclusive_cumsum_i32(x):
     return inc - x.astype(jnp.int32)
 
 
+def _dense_chunk(alpha, sig, gid_cp, abs_pos, allowed, k_record, stop_at_k,
+                 col, carry):
+    """'dense' backend for one chunk: scan-closed-form integration + MXU
+    matmul accumulate.  ``alpha``/``sig``/``gid_cp``/``allowed`` are [C, P];
+    ``col`` is [C, 3] ([C, P, 3] in the compact kernel).
+    Returns the updated (acc, trans, rec, cnt, nsig, niter, itk).
+    """
+    acc, trans, rec, cnt, nsig, niter, itk = carry
+    if stop_at_k:
+        pos_sig = cnt[None, :] + _exclusive_cumsum_i32(sig)
+        sig = sig & (pos_sig < k_record)
+
+    beta = jnp.where(sig, 1.0 - alpha, 1.0)
+    p_inc, p_exc = _exclusive_cumprod(beta)
+    p_exc = p_exc * trans[None, :]
+    p_inc = p_inc * trans[None, :]
+    contrib = sig & (p_exc > TRANSMITTANCE_EPS)
+
+    w = jnp.where(contrib, p_exc * alpha, 0.0)             # [C, P]
+    if col.ndim == 2:   # shared per-tile colors: one MXU matmul
+        acc = acc + jax.lax.dot_general(
+            w, col, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)            # [P, 3]
+    else:               # per-lane gathered colors (compact kernel)
+        acc = acc + jnp.sum(w[..., None] * col, axis=0)
+    trans = jnp.minimum(trans, jnp.min(
+        jnp.where(contrib, p_inc, trans[None, :]), axis=0))
+
+    pos = cnt[None, :] + _exclusive_cumsum_i32(contrib)    # [C, P]
+    for kk in range(k_record):
+        m = contrib & (pos == kk)
+        sel = jnp.max(jnp.where(m, gid_cp, -1), axis=0)    # [P]
+        rec = rec.at[kk].set(jnp.where(sel >= 0, sel, rec[kk]))
+    iters = abs_pos + 1                                    # [C, 1]
+    m_k = contrib & (pos == (k_record - 1))
+    sel_it = jnp.max(jnp.where(m_k, iters, -1), axis=0)
+    itk = jnp.where(sel_it >= 0, sel_it, itk)
+
+    cnt = cnt + jnp.sum(contrib.astype(jnp.int32), axis=0)
+    nsig = nsig + jnp.sum(contrib.astype(jnp.int32), axis=0)
+    active = ((p_exc > TRANSMITTANCE_EPS) & (gid_cp >= 0) & allowed)
+    if stop_at_k:
+        # a pixel pauses right after its record fills: iterations past the
+        # fill point are not examined (hardware would hand off to lookup)
+        active = active & (pos < k_record)
+    niter = niter + jnp.sum(active.astype(jnp.int32), axis=0)
+    return acc, trans, rec, cnt, nsig, niter, itk
+
+
+def _seq_chunk(alpha, sig_pre, gid_cp, abs0, allowed, k_record, stop_at_k,
+               col, carry):
+    """'seq' backend for one chunk: per-Gaussian FIFO update (bit-identical
+    to the reference oracle's scan body), with a real branch skipping
+    Gaussians that are significant for no pixel — under S^2 sharing a large
+    fraction of a tile's list is invisible at the render pose, and a scalar
+    core should not integrate invisibility.
+
+    ``alpha``/``sig_pre``/``allowed``/``gid_cp`` are [C, P] from the dense
+    frontend (``sig_pre`` has no record-count gating — that is per-pixel
+    state and is applied inside the loop); ``col`` is [C, 3] or [C, P, 3].
+    """
+    chunk = alpha.shape[0]
+
+    def gbody(i, carry):
+        acc, trans, rec, cnt, nsig, niter, itk = carry
+        a_i = alpha[i]                                      # [P]
+        s_i = sig_pre[i] & allowed[i]
+        gid_i = gid_cp[i]                                   # [P]
+        active = trans > TRANSMITTANCE_EPS
+        # examined uses this Gaussian's *pre-update* record count, exactly
+        # like the oracle (the filling Gaussian itself is still examined)
+        examined = active & (gid_i >= 0) & allowed[i]
+        if stop_at_k:
+            examined = examined & (cnt < k_record)
+
+        def integrate(carry):
+            acc, trans, rec, cnt, nsig, itk = carry
+            sig = s_i
+            if stop_at_k:
+                sig = sig & (cnt < k_record)
+            contrib = sig & active
+            w = jnp.where(contrib, trans * a_i, 0.0)
+            col_i = col[i]                                  # [3] or [P, 3]
+            acc = acc + (w[:, None] * col_i[None, :] if col_i.ndim == 1
+                         else w[:, None] * col_i)
+            trans = jnp.where(contrib, trans * (1.0 - a_i), trans)
+            can = contrib & (cnt < k_record)
+            slot = (jax.lax.broadcasted_iota(
+                jnp.int32, (k_record, cnt.shape[0]), 0)
+                    == cnt[None, :]) & can[None, :]         # [k, lanes]
+            rec = jnp.where(slot, gid_i[None, :], rec)
+            new_cnt = cnt + contrib.astype(jnp.int32)
+            just = (new_cnt >= k_record) & (cnt < k_record) & contrib
+            itk = jnp.where(just, abs0 + i + 1, itk)
+            nsig = nsig + contrib.astype(jnp.int32)
+            return acc, trans, rec, new_cnt, nsig, itk
+
+        # skip Gaussians that can contribute to no pixel: only the examined
+        # counter can change for them, and it is updated unconditionally.
+        # In stop-at-k mode a pixel with a full record can't take
+        # contributions either — without that gate phase A would keep
+        # integrating the tail of every tile after all records filled.
+        may_contrib = s_i & active
+        if stop_at_k:
+            may_contrib = may_contrib & (cnt < k_record)
+        acc, trans, rec, cnt, nsig, itk = jax.lax.cond(
+            jnp.any(may_contrib), integrate, lambda c: c,
+            (acc, trans, rec, cnt, nsig, itk))
+        niter = niter + examined.astype(jnp.int32)
+        return acc, trans, rec, cnt, nsig, niter, itk
+
+    return jax.lax.fori_loop(0, chunk, gbody, carry)
+
+
 def _kernel(mean2d_ref, conic_ref, color_ref, opacity_ref, ids_ref,
             acc0_ref, trans0_ref, rec0_ref, cnt0_ref, start_ref, live_ref,
+            ncap_ref,
             acc_ref, trans_ref, rec_ref, cnt_ref, nsig_ref, niter_ref,
             itk_ref, chunks_ref,
             *, tiles_x: int, k_record: int, chunk: int, stop_at_k: bool,
-            bg: float):
+            bg: float, body: str = 'dense'):
     t = pl.program_id(0)
     k_total = mean2d_ref.shape[1]
-    nc = k_total // chunk
+    # per-tile chunk cap: chunks past the tile's last valid Gaussian hold only
+    # -1 padding and can never contribute — the while loop must not pay for
+    # them (they are what kept empty/short tiles from ever early-exiting)
+    nc = jnp.minimum(jnp.int32(k_total // chunk), ncap_ref[0, 0])
 
     ox = (t % tiles_x) * TILE
     oy = (t // tiles_x) * TILE
@@ -81,7 +210,7 @@ def _kernel(mean2d_ref, conic_ref, color_ref, opacity_ref, ids_ref,
     c0 = jnp.min(start_eff) // chunk
     c0 = jnp.minimum(c0, nc)
 
-    def body(carry):
+    def loop_body(carry):
         c, acc, trans, rec, cnt, nsig, niter, itk, nchunks = carry
         sl = pl.ds(c * chunk, chunk)
         gmx = mean2d_ref[0, sl, 0]             # [C]
@@ -93,6 +222,7 @@ def _kernel(mean2d_ref, conic_ref, color_ref, opacity_ref, ids_ref,
         op = opacity_ref[0, sl]                # [C]
         gid = ids_ref[0, sl]                   # [C] int32
 
+        # dense frontend: alpha for the whole chunk x tile block
         dx = px[None, :] - gmx[:, None]        # [C, P]
         dy = py[None, :] - gmy[:, None]
         power = (-0.5 * (ca[:, None] * dx * dx + cc[:, None] * dy * dy)
@@ -103,42 +233,17 @@ def _kernel(mean2d_ref, conic_ref, color_ref, opacity_ref, ids_ref,
         abs_pos = c * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
         allowed = (abs_pos >= start[None, :]) & live[None, :]
         sig = (alpha > ALPHA_SIGNIFICANT) & valid & allowed    # [C, P]
+        gid_cp = jnp.broadcast_to(gid[:, None], sig.shape)
 
-        if stop_at_k:
-            pos_sig = cnt[None, :] + _exclusive_cumsum_i32(sig)
-            sig = sig & (pos_sig < k_record)
-
-        beta = jnp.where(sig, 1.0 - alpha, 1.0)
-        p_inc, p_exc = _exclusive_cumprod(beta)
-        p_exc = p_exc * trans[None, :]
-        p_inc = p_inc * trans[None, :]
-        contrib = sig & (p_exc > TRANSMITTANCE_EPS)
-
-        w = jnp.where(contrib, p_exc * alpha, 0.0)             # [C, P]
-        acc = acc + jax.lax.dot_general(
-            w, col, (((0,), (0,)), ((), ())),
-            preferred_element_type=jnp.float32)                # [P, 3]
-        trans = jnp.minimum(trans, jnp.min(
-            jnp.where(contrib, p_inc, trans[None, :]), axis=0))
-
-        pos = cnt[None, :] + _exclusive_cumsum_i32(contrib)    # [C, P]
-        for kk in range(k_record):
-            m = contrib & (pos == kk)
-            sel = jnp.max(jnp.where(m, gid[:, None], -1), axis=0)  # [P]
-            rec = rec.at[kk].set(jnp.where(sel >= 0, sel, rec[kk]))
-        iters = abs_pos + 1                                    # [C, 1]
-        m_k = contrib & (pos == (k_record - 1))
-        sel_it = jnp.max(jnp.where(m_k, iters, -1), axis=0)
-        itk = jnp.where(sel_it >= 0, sel_it, itk)
-
-        cnt = cnt + jnp.sum(contrib.astype(jnp.int32), axis=0)
-        nsig = nsig + jnp.sum(contrib.astype(jnp.int32), axis=0)
-        active = (p_exc > TRANSMITTANCE_EPS) & (gid[:, None] >= 0) & allowed
-        if stop_at_k:
-            # a pixel pauses right after its record fills: iterations past the
-            # fill point are not examined (hardware would hand off to lookup)
-            active = active & (pos < k_record)
-        niter = niter + jnp.sum(active.astype(jnp.int32), axis=0)
+        inner = (acc, trans, rec, cnt, nsig, niter, itk)
+        if body == 'dense':
+            inner = _dense_chunk(alpha, sig, gid_cp, abs_pos, allowed,
+                                 k_record, stop_at_k, col, inner)
+        else:
+            inner = _seq_chunk(alpha, sig, gid_cp, c * chunk,
+                               jnp.broadcast_to(allowed, sig.shape),
+                               k_record, stop_at_k, col, inner)
+        acc, trans, rec, cnt, nsig, niter, itk = inner
         return (c + 1, acc, trans, rec, cnt, nsig, niter, itk, nchunks + 1)
 
     def cond(carry):
@@ -160,7 +265,7 @@ def _kernel(mean2d_ref, conic_ref, color_ref, opacity_ref, ids_ref,
         jnp.int32(0),
     )
     (c, acc, trans, rec, cnt, nsig, niter, itk, nchunks) = jax.lax.while_loop(
-        cond, body, init)
+        cond, loop_body, init)
 
     del bg  # background compositing happens once, in ops.py, after the final phase
     acc_ref[0] = acc
@@ -190,14 +295,25 @@ def rasterize_pallas(mean2d, conic, color, opacity, ids,
                      acc0, trans0, rec0, cnt0, start_iter, live,
                      *, tiles_x: int, k_record: int = 5, chunk: int = 64,
                      stop_at_k: bool = False, bg: float = 0.0,
-                     interpret: bool = True) -> RasterState:
+                     interpret: bool = True, ncap=None,
+                     body: str = 'dense') -> RasterState:
     """Invoke the kernel. Feature arrays are [T, K, ...]; K must be a
     multiple of ``chunk`` (ops.py pads).  State arrays are [T, P(=256), ...].
+
+    ``ncap`` [T] int32 optionally caps the chunks each tile may walk (the
+    chunk index of its last valid Gaussian); ``None`` means the full padded
+    list.  Chunks past the cap hold only padding and cannot change any
+    output, so the cap is a pure compute saving.  ``body`` picks the chunk
+    backend flavor ('dense' scan+matmul vs 'seq' per-Gaussian FIFO) — both
+    implement the same contract; ops.py defaults by platform.
     """
     t, k_total = ids.shape
     assert k_total % chunk == 0, (k_total, chunk)
     kr = rec0.shape[-1]
     assert kr == k_record
+    if ncap is None:
+        ncap = jnp.full((t,), k_total // chunk, jnp.int32)
+    ncap = ncap.reshape(t, 1).astype(jnp.int32)
 
     grid = (t,)
     feat = lambda *dims: pl.BlockSpec((1, *dims), lambda i: (i,) + (0,) * len(dims))
@@ -219,12 +335,333 @@ def rasterize_pallas(mean2d, conic, color, opacity, ids,
         feat(k_total, 2), feat(k_total, 3), feat(k_total, 3), feat(k_total),
         feat(k_total),
         feat(P, 3), feat(P), feat(P, k_record), feat(P), feat(P), feat(P),
+        feat(1),
     )
     kern = functools.partial(_kernel, tiles_x=tiles_x, k_record=k_record,
-                             chunk=chunk, stop_at_k=stop_at_k, bg=bg)
+                             chunk=chunk, stop_at_k=stop_at_k, bg=bg,
+                             body=body)
     outs = pl.pallas_call(
         kern, grid=grid, in_specs=in_specs, out_specs=out_specs,
         out_shape=out_shapes, interpret=interpret,
     )(mean2d, conic, color, opacity, ids,
+      acc0, trans0, rec0, cnt0, start_iter, live.astype(jnp.int32), ncap)
+    return RasterState(*outs)
+
+
+# ---------------------------------------------------------------------------
+# Miss-compacted resume — the software analogue of LuminCore's PE remapping
+# ---------------------------------------------------------------------------
+
+def _kernel_compact(mean2d_ref, conic_ref, color_ref, opacity_ref, ids_ref,
+                    px_ref, py_ref, src_ref, ncap_ref,
+                    acc0_ref, trans0_ref, rec0_ref, cnt0_ref, start_ref,
+                    live_ref,
+                    acc_ref, trans_ref, rec_ref, cnt_ref, nsig_ref,
+                    niter_ref, itk_ref, chunks_ref,
+                    *, k_record: int, chunk: int, body: str = 'dense'):
+    """Resume integration for one *compacted* tile of P cache-miss pixels.
+
+    Unlike ``_kernel``, the P pixels of a program do not share a source tile:
+    each lane carries its own pixel center (``px``/``py``), its source tile
+    id (``src``) and its per-pixel chunk cap.  Feature chunks are therefore
+    gathered per lane — ``feats[src, c*chunk:(c+1)*chunk]`` — instead of
+    broadcast from one tile's list.  This is LuminCore's PE remapping in
+    software: scattered miss pixels are regrouped into dense tiles so the
+    chunk loop pays per *miss*, not per source tile.  On TPU the per-lane
+    gather would become a scalar-prefetched DMA per source tile (cf.
+    PrefetchScalarGridSpec); in interpret mode it lowers to a jnp gather.
+
+    Per-pixel math is identical to ``_kernel``'s resume mode (no stop-at-k),
+    so gather -> resume -> scatter reproduces the full-tile resume exactly.
+    """
+    k_total = mean2d_ref.shape[1]
+    nc_total = k_total // chunk
+
+    px = px_ref[0]                             # [P] f32 pixel centers
+    py = py_ref[0]
+    src = src_ref[0]                           # [P] int32 source tile ids
+    ncap = ncap_ref[0]                         # [P] int32 per-pixel chunk cap
+    live = live_ref[0] != 0                    # [P]
+    start = start_ref[0]                       # [P] int32
+
+    start_eff = jnp.where(live, start, k_total)
+    c0 = jnp.minimum(jnp.min(start_eff) // chunk, nc_total)
+
+    def loop_body(carry):
+        c, acc, trans, rec, cnt, nsig, niter, itk, nchunks = carry
+        sl = pl.ds(c * chunk, chunk)
+        # per-lane feature gather: [T, C, ...] sliced once, indexed by src
+        gmx = mean2d_ref[:, sl, 0][src].T      # [C, P]
+        gmy = mean2d_ref[:, sl, 1][src].T
+        ca = conic_ref[:, sl, 0][src].T
+        cb = conic_ref[:, sl, 1][src].T
+        cc = conic_ref[:, sl, 2][src].T
+        col = jnp.moveaxis(color_ref[:, sl, :][src], 0, 1)   # [C, P, 3]
+        op = opacity_ref[:, sl][src].T          # [C, P]
+        gid = ids_ref[:, sl][src].T             # [C, P] int32
+
+        dx = px[None, :] - gmx
+        dy = py[None, :] - gmy
+        power = (-0.5 * (ca * dx * dx + cc * dy * dy) - cb * dx * dy)
+        alpha = jnp.minimum(ALPHA_MAX, op * jnp.exp(power))
+        valid = (power <= 0.0) & (gid >= 0)
+
+        abs_pos = c * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+        allowed = (abs_pos >= start[None, :]) & live[None, :]
+        sig = (alpha > ALPHA_SIGNIFICANT) & valid & allowed    # [C, P]
+
+        inner = (acc, trans, rec, cnt, nsig, niter, itk)
+        if body == 'dense':
+            inner = _dense_chunk(alpha, sig, gid, abs_pos, allowed,
+                                 k_record, False, col, inner)
+        else:
+            inner = _seq_chunk(alpha, sig, gid, c * chunk, allowed,
+                               k_record, False, col, inner)
+        acc, trans, rec, cnt, nsig, niter, itk = inner
+        return (c + 1, acc, trans, rec, cnt, nsig, niter, itk, nchunks + 1)
+
+    def cond(carry):
+        c, acc, trans, rec, cnt, nsig, niter, itk, nchunks = carry
+        # per-chunk early termination: a lane is done once dead, past its
+        # transmittance floor, or past its source tile's last valid chunk
+        remaining = live & (trans > TRANSMITTANCE_EPS) & (c < ncap)
+        return (c < nc_total) & jnp.any(remaining)
+
+    init = (
+        c0,
+        acc0_ref[0].astype(jnp.float32),       # [P, 3]
+        trans0_ref[0].astype(jnp.float32),     # [P]
+        rec0_ref[0].T,                          # [k, P] in-kernel layout
+        cnt0_ref[0],                            # [P]
+        jnp.zeros((P,), jnp.int32),
+        jnp.zeros((P,), jnp.int32),
+        jnp.full((P,), k_total, jnp.int32),
+        jnp.int32(0),
+    )
+    (c, acc, trans, rec, cnt, nsig, niter, itk, nchunks) = jax.lax.while_loop(
+        cond, loop_body, init)
+
+    acc_ref[0] = acc
+    trans_ref[0] = trans
+    rec_ref[0] = rec.T
+    cnt_ref[0] = cnt
+    nsig_ref[0] = nsig
+    niter_ref[0] = niter
+    itk_ref[0] = itk
+    chunks_ref[0, 0] = nchunks
+
+
+def rasterize_compact_pallas(mean2d, conic, color, opacity, ids,
+                             px, py, src, ncap,
+                             acc0, trans0, rec0, cnt0, start_iter, live,
+                             *, k_record: int = 5, chunk: int = 64,
+                             interpret: bool = True,
+                             body: str = 'dense') -> RasterState:
+    """Invoke the miss-compacted resume kernel.
+
+    Features are the *full* [T, K, ...] arrays (every program may gather from
+    any source tile); ``px``/``py``/``src``/``ncap`` and the state arrays are
+    compacted [CT, P(=256), ...] — CT compacted tiles whose lanes were packed
+    miss-first by ``ops.rasterize_resume_compacted``.
+    """
+    t, k_total = ids.shape
+    assert k_total % chunk == 0, (k_total, chunk)
+    ct = src.shape[0]
+    assert rec0.shape[-1] == k_record
+
+    grid = (ct,)
+    full = lambda *dims: pl.BlockSpec(dims, lambda i: (0,) * len(dims))
+    lane = lambda *dims: pl.BlockSpec((1, *dims), lambda i: (i,) + (0,) * len(dims))
+    out_shapes = (
+        jax.ShapeDtypeStruct((ct, P, 3), jnp.float32),
+        jax.ShapeDtypeStruct((ct, P), jnp.float32),
+        jax.ShapeDtypeStruct((ct, P, k_record), jnp.int32),
+        jax.ShapeDtypeStruct((ct, P), jnp.int32),
+        jax.ShapeDtypeStruct((ct, P), jnp.int32),
+        jax.ShapeDtypeStruct((ct, P), jnp.int32),
+        jax.ShapeDtypeStruct((ct, P), jnp.int32),
+        jax.ShapeDtypeStruct((ct, 1), jnp.int32),
+    )
+    out_specs = (
+        lane(P, 3), lane(P), lane(P, k_record), lane(P), lane(P), lane(P),
+        lane(P), lane(1),
+    )
+    in_specs = (
+        full(t, k_total, 2), full(t, k_total, 3), full(t, k_total, 3),
+        full(t, k_total), full(t, k_total),
+        lane(P), lane(P), lane(P), lane(P),
+        lane(P, 3), lane(P), lane(P, k_record), lane(P), lane(P), lane(P),
+    )
+    kern = functools.partial(_kernel_compact, k_record=k_record, chunk=chunk,
+                             body=body)
+    outs = pl.pallas_call(
+        kern, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shapes, interpret=interpret,
+    )(mean2d, conic, color, opacity, ids,
+      px, py, src.astype(jnp.int32), ncap.astype(jnp.int32),
       acc0, trans0, rec0, cnt0, start_iter, live.astype(jnp.int32))
+    return RasterState(*outs)
+
+
+# ---------------------------------------------------------------------------
+# Slot-batched kernel — all serving slots' lanes of one tile per program
+# ---------------------------------------------------------------------------
+
+def _kernel_slots(mean2d_ref, conic_ref, color_ref, opacity_ref, ids_ref,
+                  acc0_ref, trans0_ref, rec0_ref, cnt0_ref, start_ref,
+                  live_ref, ncap_ref,
+                  acc_ref, trans_ref, rec_ref, cnt_ref, nsig_ref, niter_ref,
+                  itk_ref, chunks_ref,
+                  *, tiles_x: int, k_record: int, chunk: int,
+                  stop_at_k: bool, body: str):
+    """One grid program = one tile position ACROSS ALL S serving slots.
+
+    Under ``vmap`` a pallas_call batches by growing the grid — S x T
+    programs that interpret mode executes serially, so multi-viewer serving
+    gained no vector width from batching while the pure-JAX reference
+    amortized its whole batch per op.  Here the slot axis rides *inside*
+    the block instead: refs are [S, 1(tile), ...], the chunk bodies see
+    [C, S*P] lanes, and one program does the whole fleet's work for its
+    tile.  The while-loop trip count couples slots (a tile iterates until
+    every slot's lanes are done) — pure extra *skipped* work for finished
+    slots, bit-identical outputs per lane.
+    """
+    t = pl.program_id(0)
+    s = mean2d_ref.shape[0]
+    k_total = mean2d_ref.shape[2]
+    n = s * P
+    nc_total = k_total // chunk
+
+    ox = (t % tiles_x) * TILE
+    oy = (t // tiles_x) * TILE
+    px2 = jax.lax.broadcasted_iota(jnp.float32, (TILE, TILE), 1)
+    py2 = jax.lax.broadcasted_iota(jnp.float32, (TILE, TILE), 0)
+    px = jnp.tile(px2.reshape(P) + ox + 0.5, s)        # [N]
+    py = jnp.tile(py2.reshape(P) + oy + 0.5, s)
+
+    live = (live_ref[:, 0] != 0).reshape(n)            # [N]
+    start = start_ref[:, 0].reshape(n)                 # [N]
+    ncap = jnp.repeat(jnp.minimum(ncap_ref[:, 0], nc_total), P)  # [N]
+    start_eff = jnp.where(live, start, k_total)
+    c0 = jnp.minimum(jnp.min(start_eff) // chunk, nc_total)
+
+    def loop_body(carry):
+        c, acc, trans, rec, cnt, nsig, niter, itk, nchunks = carry
+        sl = pl.ds(c * chunk, chunk)
+
+        def lanes(x):   # [S, C] per-slot scalars -> [C, N] lane layout
+            return jnp.broadcast_to(x.T[:, :, None],
+                                    (chunk, s, P)).reshape(chunk, n)
+
+        gmx = lanes(mean2d_ref[:, 0, sl, 0])
+        gmy = lanes(mean2d_ref[:, 0, sl, 1])
+        ca = lanes(conic_ref[:, 0, sl, 0])
+        cb = lanes(conic_ref[:, 0, sl, 1])
+        cc = lanes(conic_ref[:, 0, sl, 2])
+        op = lanes(opacity_ref[:, 0, sl])
+        gid = lanes(ids_ref[:, 0, sl])
+        col = jnp.broadcast_to(
+            jnp.transpose(color_ref[:, 0, sl, :], (1, 0, 2))[:, :, None, :],
+            (chunk, s, P, 3)).reshape(chunk, n, 3)
+
+        dx = px[None, :] - gmx
+        dy = py[None, :] - gmy
+        power = (-0.5 * (ca * dx * dx + cc * dy * dy) - cb * dx * dy)
+        alpha = jnp.minimum(ALPHA_MAX, op * jnp.exp(power))
+        valid = (power <= 0.0) & (gid >= 0)
+
+        abs_pos = c * chunk + jax.lax.broadcasted_iota(jnp.int32, (chunk, 1), 0)
+        allowed = (abs_pos >= start[None, :]) & live[None, :]
+        sig = (alpha > ALPHA_SIGNIFICANT) & valid & allowed    # [C, N]
+
+        inner = (acc, trans, rec, cnt, nsig, niter, itk)
+        if body == 'dense':
+            inner = _dense_chunk(alpha, sig, gid, abs_pos, allowed,
+                                 k_record, stop_at_k, col, inner)
+        else:
+            inner = _seq_chunk(alpha, sig, gid, c * chunk, allowed,
+                               k_record, stop_at_k, col, inner)
+        acc, trans, rec, cnt, nsig, niter, itk = inner
+        return (c + 1, acc, trans, rec, cnt, nsig, niter, itk, nchunks + 1)
+
+    def cond(carry):
+        c, acc, trans, rec, cnt, nsig, niter, itk, nchunks = carry
+        remaining = live & (trans > TRANSMITTANCE_EPS) & (c < ncap)
+        if stop_at_k:
+            remaining = remaining & (cnt < k_record)
+        return (c < nc_total) & jnp.any(remaining)
+
+    init = (
+        c0,
+        acc0_ref[:, 0].reshape(n, 3).astype(jnp.float32),
+        trans0_ref[:, 0].reshape(n).astype(jnp.float32),
+        rec0_ref[:, 0].reshape(n, k_record).T,          # [k, N]
+        cnt0_ref[:, 0].reshape(n),
+        jnp.zeros((n,), jnp.int32),
+        jnp.zeros((n,), jnp.int32),
+        jnp.full((n,), k_total, jnp.int32),
+        jnp.int32(0),
+    )
+    (c, acc, trans, rec, cnt, nsig, niter, itk, nchunks) = jax.lax.while_loop(
+        cond, loop_body, init)
+
+    acc_ref[:, 0] = acc.reshape(s, P, 3)
+    trans_ref[:, 0] = trans.reshape(s, P)
+    rec_ref[:, 0] = rec.T.reshape(s, P, k_record)
+    cnt_ref[:, 0] = cnt.reshape(s, P)
+    nsig_ref[:, 0] = nsig.reshape(s, P)
+    niter_ref[:, 0] = niter.reshape(s, P)
+    itk_ref[:, 0] = itk.reshape(s, P)
+    chunks_ref[0, 0] = nchunks
+
+
+def rasterize_slots_pallas(mean2d, conic, color, opacity, ids,
+                           acc0, trans0, rec0, cnt0, start_iter, live,
+                           *, tiles_x: int, k_record: int = 5,
+                           chunk: int = 64, stop_at_k: bool = False,
+                           interpret: bool = True, ncap=None,
+                           body: str = 'dense'):
+    """Slot-batched kernel invocation: features [S, T, K, ...], state
+    [S, T, P, ...], ``ncap`` [S, T].  Grid is (T,) — each program handles
+    one tile for every slot.  Returns (RasterState with [S, T, ...] leaves,
+    chunks [T, 1] — the per-tile trip count, shared by all slots).
+    """
+    s, t, k_total = ids.shape
+    assert k_total % chunk == 0, (k_total, chunk)
+    assert rec0.shape[-1] == k_record
+    if ncap is None:
+        ncap = jnp.full((s, t), k_total // chunk, jnp.int32)
+
+    grid = (t,)
+    sb = lambda *dims: pl.BlockSpec((s, 1, *dims),
+                                    lambda i: (0, i) + (0,) * len(dims))
+    out_shapes = (
+        jax.ShapeDtypeStruct((s, t, P, 3), jnp.float32),
+        jax.ShapeDtypeStruct((s, t, P), jnp.float32),
+        jax.ShapeDtypeStruct((s, t, P, k_record), jnp.int32),
+        jax.ShapeDtypeStruct((s, t, P), jnp.int32),
+        jax.ShapeDtypeStruct((s, t, P), jnp.int32),
+        jax.ShapeDtypeStruct((s, t, P), jnp.int32),
+        jax.ShapeDtypeStruct((s, t, P), jnp.int32),
+        jax.ShapeDtypeStruct((t, 1), jnp.int32),
+    )
+    out_specs = (
+        sb(P, 3), sb(P), sb(P, k_record), sb(P), sb(P), sb(P), sb(P),
+        pl.BlockSpec((1, 1), lambda i: (i, 0)),
+    )
+    in_specs = (
+        sb(k_total, 2), sb(k_total, 3), sb(k_total, 3), sb(k_total),
+        sb(k_total),
+        sb(P, 3), sb(P), sb(P, k_record), sb(P), sb(P), sb(P),
+        pl.BlockSpec((s, 1), lambda i: (0, i)),
+    )
+    kern = functools.partial(_kernel_slots, tiles_x=tiles_x,
+                             k_record=k_record, chunk=chunk,
+                             stop_at_k=stop_at_k, body=body)
+    outs = pl.pallas_call(
+        kern, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shapes, interpret=interpret,
+    )(mean2d, conic, color, opacity, ids,
+      acc0, trans0, rec0, cnt0, start_iter, live.astype(jnp.int32),
+      ncap.astype(jnp.int32))
     return RasterState(*outs)

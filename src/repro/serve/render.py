@@ -41,18 +41,24 @@ def build_sessions(viewers: int, frames: int, *, width: int = 96,
 def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
           gaussians: int = 1500, window: int = 6, capacity: int = 192,
           stagger: int = 2, sequential: bool = False, seed: int = 0,
+          backend: str = 'reference', profile_every: int = 0,
           print_fn=print) -> dict:
-    """Run the serving loop to completion; returns the aggregate rollup."""
+    """Run the serving loop to completion; returns the aggregate rollup.
+
+    ``backend`` selects the shade implementation ('reference' | 'pallas');
+    ``profile_every`` > 0 samples a per-kernel shade latency breakdown every
+    N ticks (pallas backend, batched engine).
+    """
     if viewers < 1 or frames < 1:
         raise SystemExit('--viewers and --frames must be >= 1')
     slots = slots or min(viewers, 8)
     scene = structured_scene(jax.random.PRNGKey(seed), gaussians)
-    cfg = LuminaConfig(capacity=capacity, window=window)
+    cfg = LuminaConfig(capacity=capacity, window=window, backend=backend)
     sessions = build_sessions(viewers, frames, width=width, stagger=stagger)
     cam0 = sessions[0].cams[0]
 
     engine = SequentialStepper if sequential else BatchedStepper
-    stepper = engine(scene, cfg, cam0, slots)
+    stepper = engine(scene, cfg, cam0, slots, profile_every=profile_every)
     mgr = SessionManager(stepper, slots)
     for sess in sessions:
         mgr.submit(sess)
@@ -68,12 +74,14 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     # above) and sessions ride different subsets of ticks, so the two
     # statistics legitimately differ.
     roll = tick_rollup(mgr.tick_log, warmup_ticks=1)
+    agg['backend'] = backend
     agg['mean_sorts_per_tick'] = roll['mean_sorts_per_tick']
     agg['max_sorts_per_tick'] = roll['max_sorts_per_tick']
     agg['tick_sort_ms'] = roll['mean_sort_ms']
     agg['tick_shade_ms'] = roll['mean_shade_ms']
+    agg['kernel_ms'] = roll['kernel_ms']
     print_fn(format_table(summaries))
-    print_fn(f"-- {agg['mode']}: {agg['sessions']} sessions, "
+    print_fn(f"-- {agg['mode']} ({backend}): {agg['sessions']} sessions, "
              f"{agg['frames']} frames in {agg['ticks']} ticks, "
              f"mean {agg['mean_fps']:.2f} fps/viewer, "
              f"mean hit rate {agg['mean_hit_rate']:.2f}, "
@@ -81,6 +89,9 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
              f"sort/shade {agg['mean_sort_ms']:.1f}/"
              f"{agg['mean_shade_ms']:.1f} ms, "
              f"max {agg['max_sorts_per_tick']} sorts/tick")
+    if roll['kernel_ms']:
+        parts = '  '.join(f'{k} {v:.1f}' for k, v in roll['kernel_ms'].items())
+        print_fn(f"-- shade kernels (ms/tick, sampled): {parts}")
     return agg
 
 
@@ -99,12 +110,20 @@ def main(argv=None):
                     help='ticks between viewer arrivals')
     ap.add_argument('--sequential', action='store_true',
                     help='per-slot stepping instead of one vmapped call')
+    ap.add_argument('--backend', choices=('reference', 'pallas'),
+                    default='reference',
+                    help='shade implementation: pure-JAX reference or the '
+                         'chunked Pallas kernel path')
+    ap.add_argument('--profile-every', type=int, default=0,
+                    help='sample a per-kernel shade latency breakdown every '
+                         'N ticks (pallas backend, batched engine)')
     ap.add_argument('--seed', type=int, default=0)
     args = ap.parse_args(argv)
     serve(args.viewers, args.frames, slots=args.slots, width=args.width,
           gaussians=args.gaussians, window=args.window,
           capacity=args.capacity, stagger=args.stagger,
-          sequential=args.sequential, seed=args.seed)
+          sequential=args.sequential, seed=args.seed,
+          backend=args.backend, profile_every=args.profile_every)
 
 
 if __name__ == '__main__':

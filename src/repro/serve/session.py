@@ -56,7 +56,8 @@ class SessionManager:
         self.finished: list[ViewerSession] = []
         self.tick = 0
         # Per-tick phase attribution: {'tick', 'frames', 'sorted_slots',
-        # 'sort_ms', 'shade_ms'} per rendered tick (empty ticks are skipped).
+        # 'sort_ms', 'shade_ms', 'kernel_ms'} per rendered tick (empty ticks
+        # are skipped; kernel_ms is None except on profiled pallas ticks).
         self.tick_log: list[dict] = []
 
     # -- lifecycle ---------------------------------------------------------
@@ -123,6 +124,7 @@ class SessionManager:
                 'sorted_slots': tick_timing.sorted_slots,
                 'sort_ms': tick_timing.sort_ms,
                 'shade_ms': tick_timing.shade_ms,
+                'kernel_ms': getattr(tick_timing, 'kernel_ms', None),
             })
         self.tick += 1
         return len(outputs)

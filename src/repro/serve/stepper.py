@@ -8,8 +8,8 @@ Two interchangeable engines behind one interface:
   tick): each tick gathers only the due cohort (<= ceil(S/window) slots),
   runs one small vmapped/jitted ``sort_phase`` over it, scatters the
   resulting ``SortShared`` leaves back into the batched ``ViewerState``, then
-  advances **all** slots through a vmapped ``shade_phase`` whose no-sort path
-  is scalar and sort-free.  This restores the paper's 1-in-window sort
+  advances the live slots through a vmapped ``shade_phase`` whose no-sort
+  path is scalar and sort-free.  This restores the paper's 1-in-window sort
   amortization that a per-lane ``lax.cond`` (lowered to a select under vmap)
   destroys.
 * ``SequentialStepper`` — each active slot advances through its own
@@ -26,12 +26,29 @@ engines agree on every integer cache decision.
 Both engines **donate** their ``ViewerState`` buffers into the jitted calls
 (the previous tick's state is dead the instant the step returns), so XLA
 updates the O(S*N) state in place instead of round-tripping a copy every
-tick.  Inactive lanes in the batched engine still execute, but their
-``active=False`` mask reaches the rasterizer's ``live`` input, so they
-contribute nothing and skip chunk iterations on the kernel path; their
-outputs are garbage-by-construction and fully overwritten by ``admit``
-before the slot is read again, exactly like a freed KV-cache slot in the LM
-server.
+tick.
+
+**Idle-lane compaction**: when some slots are idle, the batched engine
+gathers the active slots into a dense prefix (padded to a power-of-two
+bucket so at most log2(S) shade widths ever compile), shades only that
+sub-batch, and scatters results back — idle lanes are not shaded at all, on
+either backend, and their state (cache, frame counter) is left untouched
+instead of advancing with garbage.  Under ``vmap`` this is the only way to
+stop paying for dead lanes: a per-lane ``live=False`` mask zeroes their
+*contribution*, but XLA still executes the batch-wide max trip count.  When
+every slot is active the engine takes the full-width path unchanged.
+
+**Per-kernel latency attribution**: with ``profile_every=N`` (and the
+``pallas`` backend), every Nth tick re-runs the shade decomposed into its
+kernel stages — prep (S^2 feature refresh), prefix (RC phase A), lookup
+(LuminCache probe), resume (miss-compacted phase B), insert — on a copy of
+the pre-shade state, timing each stage with a device sync.  The breakdown
+lands in ``TickTiming.kernel_ms`` / ``SessionManager.tick_log`` and is
+rolled up by ``telemetry.tick_rollup``.  The decomposed stages are the same
+functions the fused shade composes, so the split is faithful modulo XLA
+fusion across stage boundaries; profiling runs outside the timed section
+(``sort_ms``/``shade_ms`` are unaffected; wall-clock of profiled runs is
+slightly conservative).
 
 Interface::
 
@@ -48,16 +65,19 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import radiance_cache as rc
 from repro.core.camera import Camera, stack_cameras
 from repro.core.gaussians import GaussianScene
+from repro.core.groups import regroup, ungroup
 from repro.core.pipeline import (LuminaConfig, ViewerState,
                                  batched_shade_phase, batched_sort_phase,
                                  copy_pytree, init_viewer_state, render_step)
+from repro.core.tiling import tile_grid
 
 
 class TickTiming(NamedTuple):
@@ -67,14 +87,17 @@ class TickTiming(NamedTuple):
     sort_ms: float       # wall-clock of the tick's sort-phase calls
     shade_ms: float      # wall-clock of the tick's shade-phase call
     sorted_slots: int    # speculative sorts executed this tick (incl. admits)
+    kernel_ms: Optional[dict] = None  # per-kernel shade breakdown (profiled
+                                      # ticks on the pallas backend)
 
 
 class BatchedStepper:
-    """All slots advance in one vmapped ``shade_phase`` call per tick; only
-    the due cohort runs ``sort_phase``."""
+    """All live slots advance in one vmapped ``shade_phase`` call per tick
+    (gathered to a dense prefix when some slots are idle); only the due
+    cohort runs ``sort_phase``."""
 
     def __init__(self, scene: GaussianScene, cfg: LuminaConfig,
-                 cam0: Camera, slots: int):
+                 cam0: Camera, slots: int, profile_every: int = 0):
         self.scene = scene
         self.cfg = cfg
         self.slots = slots
@@ -83,6 +106,8 @@ class BatchedStepper:
         # the gather/sort/scatter call jits once for the worst-case cohort.
         self.cohort = -(-slots // self.window)
         self.global_tick = 0
+        self.profile_every = profile_every
+        self.tiles_x, self.tiles_y = tile_grid(cam0.width, cam0.height)
         self._fresh = init_viewer_state(scene, cfg, cam0)
         self.states: ViewerState = jax.tree.map(
             lambda x: jnp.stack([x] * slots), self._fresh)
@@ -90,13 +115,18 @@ class BatchedStepper:
         self._pending_sort: set[int] = set()   # admitted, not yet sorted
         self.sort_log: list[dict] = []         # per-step sort accounting
         self.last_timing: TickTiming | None = None
+        self.profile_s = 0.0   # cumulative profiling overhead (state copy +
+                               # decomposed stage runs) — callers timing the
+                               # serving loop subtract it for honest fps
 
         self._shade = jax.jit(
             functools.partial(batched_shade_phase, cfg=cfg),
             donate_argnums=(1,))
+        self._shade_sub = jax.jit(self._shade_sub_fn, donate_argnums=(1,))
         self._sort_cohort = jax.jit(self._sort_cohort_fn,
                                     donate_argnums=(1,))
         self._admit_one = jax.jit(self._admit_fn, donate_argnums=(0,))
+        self._build_kernel_stages()
 
     # -- jitted bodies ------------------------------------------------------
 
@@ -116,10 +146,102 @@ class BatchedStepper:
             states.shared, shared)
         return dataclasses.replace(states, shared=new_shared)
 
+    def _shade_sub_fn(self, scene, states, cams, sorted_mask, idx, tgt,
+                      act_sub):
+        """Active-prefix shade: gather the ``idx`` slots, shade only them,
+        scatter the advanced states back.  ``idx`` [B] source slots (padded
+        with duplicates), ``tgt`` [B] scatter targets (``self.slots`` =
+        dropped, for padding lanes), ``act_sub`` [B] bool (False for padding,
+        which therefore contributes nothing and is dropped on scatter).
+        Idle slots' states pass through untouched.
+        """
+        sub_states = jax.tree.map(lambda x: x[idx], states)
+        sub_cams = jax.tree.map(lambda x: x[idx], cams)
+        new_sub, images, stats = batched_shade_phase(
+            scene, sub_states, sub_cams, sorted_mask[idx], act_sub, self.cfg)
+        new_states = jax.tree.map(
+            lambda full, upd: full.at[tgt].set(upd, mode='drop'),
+            states, new_sub)
+        return new_states, images, stats
+
     @staticmethod
     def _admit_fn(states, fresh, slot):
         return jax.tree.map(lambda full, one: full.at[slot].set(one),
                             states, fresh)
+
+    # -- per-kernel profiling ----------------------------------------------
+
+    def _build_kernel_stages(self) -> None:
+        """Jitted stage functions decomposing the slot-batched pallas shade
+        path for latency attribution (see module docstring).  Each stage is
+        the same function the fused ``batched_shade_phase`` composes, so the
+        split is faithful modulo XLA fusion across stage boundaries."""
+        if self.cfg.backend != 'pallas' or not self.cfg.use_rc:
+            return
+        from repro.core.pipeline import (batched_prep_features,
+                                         trim_features_slots)
+        from repro.kernels import ops
+        cfg, scene = self.cfg, self.scene
+        tx, ty = self.tiles_x, self.tiles_y
+        chunk = cfg.shade_chunk
+
+        def prep(states, cams):
+            feats_b = batched_prep_features(scene, states, cams, cfg)
+            feats_b = trim_features_slots(feats_b, tx)
+            return ops.pad_features_slots(feats_b, chunk)
+
+        def probe(caches, st_a):
+            ids_g = jax.vmap(
+                lambda r: regroup(r, tx, ty, cfg.group_tiles))(st_a.record)
+            hit_g, _, _, _ = jax.vmap(
+                lambda c, i: ops.rc_probe(c, i, cfg.cache))(caches, ids_g)
+            hit = jax.vmap(
+                lambda h: ungroup(h[..., None], tx, ty,
+                                  cfg.group_tiles)[..., 0])(hit_g)
+            return hit, ids_g, hit_g
+
+        def resume(feats_b, st_a, miss):
+            t = feats_b.ids.shape[1]
+            return ops.rasterize_resume_compacted_slots(
+                feats_b, tx, st_a, miss, t_img=t, k_record=cfg.k_record,
+                chunk=chunk, bg=cfg.bg)
+
+        def insert(caches, ids_g, colors, hit_g):
+            raw_g = jax.vmap(
+                lambda c: regroup(c, tx, ty, cfg.group_tiles))(colors)
+            return jax.vmap(
+                lambda c, i, r, h: rc.insert_all_groups(c, i, r, ~h,
+                                                        cfg.cache)
+            )(caches, ids_g, raw_g, hit_g)
+
+        self._k_prep = jax.jit(prep)
+        self._k_prefix = jax.jit(
+            lambda f, a: ops.rasterize_prefix_slots(
+                f, tx, k_record=cfg.k_record, chunk=chunk, live=a))
+        self._k_lookup = jax.jit(probe)
+        self._k_resume = jax.jit(resume)
+        self._k_insert = jax.jit(insert)
+
+    def _profile_kernels(self, states: ViewerState, cams: Camera,
+                         active_mask: jax.Array) -> dict:
+        """Time the decomposed shade stages on a pre-shade state copy."""
+        ms = {}
+
+        def timed(name, f, *args):
+            t0 = time.perf_counter()
+            out = f(*args)
+            jax.block_until_ready(out)
+            ms[name] = (time.perf_counter() - t0) * 1e3
+            return out
+
+        feats_b = timed('prep', self._k_prep, states, cams)
+        st_a = timed('prefix', self._k_prefix, feats_b, active_mask)
+        hit, ids_g, hit_g = timed('lookup', self._k_lookup,
+                                  states.cache, st_a)
+        miss = ~hit & active_mask[:, None, None]
+        colors, _, _ = timed('resume', self._k_resume, feats_b, st_a, miss)
+        timed('insert', self._k_insert, states.cache, ids_g, colors, hit_g)
+        return ms
 
     # -- scheduling ---------------------------------------------------------
 
@@ -184,24 +306,64 @@ class BatchedStepper:
         sorted_mask = jnp.asarray(
             [1.0 if i in sorted_set else 0.0 for i in range(self.slots)],
             jnp.float32)
-        active_mask = jnp.asarray(
-            [i in active for i in range(self.slots)], bool)
 
+        do_profile = (self.profile_every > 0
+                      and self.cfg.backend == 'pallas' and self.cfg.use_rc
+                      and self.global_tick % self.profile_every == 0)
+        if do_profile:
+            # the shade call donates self.states — keep a copy to profile
+            t_prof = time.perf_counter()
+            prof_states = copy_pytree(self.states)
+            jax.block_until_ready(prof_states.cache.tags)
+            self.profile_s += time.perf_counter() - t_prof
+
+        active_list = sorted(active)
         t1 = time.perf_counter()
-        self.states, images, stats = self._shade(
-            self.scene, self.states, cam_b, sorted_mask, active_mask)
+        if len(active_list) == self.slots:
+            # every slot live: full-width shade, no gather/scatter
+            active_mask = jnp.ones((self.slots,), bool)
+            self.states, images, stats = self._shade(
+                self.scene, self.states, cam_b, sorted_mask, active_mask)
+            pos = {slot: slot for slot in active_list}
+        else:
+            # idle-lane compaction: shade only the active prefix, padded to
+            # a power-of-two bucket so shade widths compile at most log2(S)
+            # times; idle slots are untouched (no work, no state advance)
+            bucket = 1
+            while bucket < len(active_list):
+                bucket *= 2
+            bucket = min(bucket, self.slots)
+            pad = bucket - len(active_list)
+            idx = jnp.asarray(active_list + [active_list[0]] * pad,
+                              jnp.int32)
+            tgt = jnp.asarray(active_list + [self.slots] * pad, jnp.int32)
+            act_sub = jnp.asarray([True] * len(active_list) + [False] * pad)
+            self.states, images, stats = self._shade_sub(
+                self.scene, self.states, cam_b, sorted_mask, idx, tgt,
+                act_sub)
+            pos = {slot: j for j, slot in enumerate(active_list)}
         jax.block_until_ready(images)
         t2 = time.perf_counter()
+
+        kernel_ms = None
+        if do_profile:
+            t_prof = time.perf_counter()
+            active_mask_full = jnp.asarray(
+                [i in active for i in range(self.slots)], bool)
+            kernel_ms = self._profile_kernels(prof_states, cam_b,
+                                              active_mask_full)
+            self.profile_s += time.perf_counter() - t_prof
 
         self.global_tick += 1
         self.sort_log.append({'scheduled': n_sched, 'admit': n_admit})
         timing = TickTiming(latency_s=t2 - t0, sort_ms=sort_s * 1e3,
                             shade_ms=(t2 - t1) * 1e3,
-                            sorted_slots=n_sched + n_admit)
+                            sorted_slots=n_sched + n_admit,
+                            kernel_ms=kernel_ms)
         self.last_timing = timing
         # every rider of the batch waited for the whole tick
-        return {slot: (images[slot],
-                       jax.tree.map(lambda x: x[slot], stats),
+        return {slot: (images[pos[slot]],
+                       jax.tree.map(lambda x: x[pos[slot]], stats),
                        timing)
                 for slot in cams}
 
@@ -211,7 +373,8 @@ class SequentialStepper:
     per-viewer sort cadence (``frame_idx % window``)."""
 
     def __init__(self, scene: GaussianScene, cfg: LuminaConfig,
-                 cam0: Camera, slots: int):
+                 cam0: Camera, slots: int, profile_every: int = 0):
+        del profile_every   # per-kernel attribution is a batched-engine tool
         self.scene = scene
         self.cfg = cfg
         self.slots = slots
@@ -224,6 +387,7 @@ class SequentialStepper:
                              donate_argnums=(1,))
         self.sort_log: list[dict] = []
         self.last_timing: TickTiming | None = None
+        self.profile_s = 0.0
 
     def admit(self, slot: int) -> None:
         self._states[slot] = copy_pytree(self._fresh)
