@@ -1,21 +1,30 @@
-"""Serve -- multi-viewer throughput: batched vs sequential, reference vs pallas.
+"""Serve -- multi-viewer throughput: batched vs sequential, reference vs pallas, private vs scene-shared state.
 
 Measures end-to-end frames/sec of the render-serving subsystem as the number
-of concurrent viewers grows, across two axes:
+of concurrent viewers grows, across three axes:
 
-* **engine** — the cohort-scheduled batched stepper (one vmapped shade per
-  tick, speculative sorts staggered so at most ceil(S/window) slots sort per
-  tick) vs per-slot sequential stepping (reference backend only; it is the
+* **engine** — the pose-cell-scheduled batched stepper (one scene-major
+  shade per tick, speculative sorts staggered and shared per pose cell) vs
+  per-slot sequential stepping (reference backend only; it is the
   per-viewer-cadence baseline, not a kernel-path vehicle);
 * **backend** — the pure-JAX reference shade vs the chunked Pallas kernel
   path (``backend='pallas'``: RC phase A -> LuminCache lookup ->
   miss-compacted resume -> insert), so ``BENCH_serve.json`` records the
-  shade-path speedup per viewer count.
+  shade-path speedup per viewer count;
+* **viewers_per_scene** — fully private state (vps=1, one cache + sort
+  buffer per slot) vs scene-shared state (vps=S: one radiance cache and a
+  pose-cell sort pool for the whole fleet).  Shared rows come in two
+  scenarios: **co-located** (stagger=0, identical trajectories — gates the
+  sort-pool collapse: live buffers must drop to the distinct-cell count,
+  i.e. 1) and **staggered** (stagger=2 — gates the cache-sharing win: a
+  viewer admitted into a warm scene cache must beat the same-stagger
+  private baseline's hit rate).
 
 Each row reports the realised sort schedule (the run asserts the cohort
 bound, so a regression that reintroduces per-lane sorting fails the
-benchmark itself) and the per-phase latency split; pallas rows add the
-sampled per-kernel breakdown (prep/prefix/lookup/resume/insert ms).
+benchmark itself), the per-phase latency split, cache occupancy and the
+state-memory footprint (live sort-pool entries x entry bytes + cache
+bytes); pallas rows add the sampled per-kernel breakdown.
 """
 from __future__ import annotations
 
@@ -40,28 +49,37 @@ PROFILE_EVERY = 3   # per-kernel sampling cadence on pallas rows (odd, so
 
 
 class _Cell:
-    """One benchmark cell (viewers x engine x backend), re-runnable on its
-    compiled stepper.  The serving work is deterministic; the container's
-    wall clock is noisy in multi-second bursts, so ``run()`` interleaves
-    repetitions ACROSS cells round-robin and each cell keeps its fastest
-    repetition — a burst then taxes one repetition of every cell instead of
-    every repetition of one cell."""
+    """One benchmark cell (viewers x engine x backend x viewers_per_scene),
+    re-runnable on its compiled stepper.  The serving work is deterministic;
+    the container's wall clock is noisy in multi-second bursts, so ``run()``
+    interleaves repetitions ACROSS cells round-robin and each cell keeps its
+    fastest repetition — a burst then taxes one repetition of every cell
+    instead of every repetition of one cell."""
 
     def __init__(self, scene, viewers: int, frames: int, mode: str,
-                 backend: str):
+                 backend: str, vps: int = 1, stagger: int = 0):
         self.viewers, self.frames = viewers, frames
         self.mode, self.backend = mode, backend
+        self.vps, self.stagger = vps, stagger
         cfg = LuminaConfig(capacity=CAPACITY, window=WINDOW, backend=backend)
-        engine = SequentialStepper if mode == 'sequential' else BatchedStepper
         profile = PROFILE_EVERY if backend == 'pallas' else 0
         cam0 = build_sessions(1, 1, width=WIDTH)[0].cams[0]
-        self.stepper = engine(scene, cfg, cam0, viewers,
-                              profile_every=profile)
+        if mode == 'sequential':
+            self.stepper = SequentialStepper(scene, cfg, cam0, viewers,
+                                             profile_every=profile)
+        else:
+            self.stepper = BatchedStepper(scene, cfg, cam0, viewers,
+                                          profile_every=profile,
+                                          viewers_per_scene=vps)
         self.best = None
 
     def run_once(self) -> None:
+        # fresh state on the compiled stepper: shared-mode admits keep scene
+        # caches warm by design, so repetitions must reset explicitly
+        self.stepper.reset()
         sessions = build_sessions(self.viewers, self.frames, width=WIDTH,
-                                  stagger=0)
+                                  stagger=self.stagger,
+                                  viewers_per_scene=self.vps)
         mgr = SessionManager(self.stepper, self.viewers)
         for s in sessions:
             mgr.submit(s)
@@ -75,8 +93,8 @@ class _Cell:
         # per-kernel profiling runs outside the serving work proper;
         # subtract its overhead so fps compares backends, not cadences
         wall = time.perf_counter() - t0 - (self.stepper.profile_s - prof0)
-        rendered = sum(s.telemetry.frames
-                       for s in finished) - self.viewers  # warm-up
+        rendered = sum(s.telemetry.frames for s in finished) - mgr.tick_log[
+            0]['frames'] if mgr.tick_log else 0
         roll = tick_rollup(mgr.tick_log, warmup_ticks=1)
         if self.best is None or wall < self.best[1]:
             self.best = (rendered, wall, finished, roll)
@@ -85,16 +103,29 @@ class _Cell:
         rendered, wall, finished, roll = self.best
         fps = rendered / wall if wall > 0 else float('inf')
         cohort_bound = -(-self.viewers // WINDOW)
-        if self.mode == 'batched':
+        if self.mode == 'batched' and self.stagger == 0:
+            # steady-state bound: sort-on-admit is outside the scheduled
+            # cohort by design, so staggered-arrival rows (admits landing
+            # after the warm-up tick) are exempt
             assert roll['max_sorts_per_tick'] <= cohort_bound, (
-                f"cohort scheduler regressed: "
+                f"sort scheduler regressed: "
                 f"{roll['max_sorts_per_tick']} speculative sorts in one "
                 f"tick with {self.viewers} viewers, window {WINDOW} "
                 f"(bound ceil(S/window) = {cohort_bound})")
-        return {
+        if self.mode == 'batched' and self.vps > 1 and self.stagger == 0:
+            # co-located viewers of one scene must collapse to one live
+            # sort buffer per scene — the pool holds O(distinct cells)
+            scenes = -(-self.viewers // self.vps)
+            assert roll['max_sort_pool_live'] <= scenes, (
+                f"sort pool regressed: {roll['max_sort_pool_live']} live "
+                f"buffers for {self.viewers} co-located viewers over "
+                f"{scenes} scene(s)")
+        row = {
             'viewers': self.viewers,
             'mode': self.mode,
             'backend': self.backend,
+            'viewers_per_scene': self.vps,
+            'stagger': self.stagger,
             'window': WINDOW,
             'frames': rendered,
             'wall_s': wall,
@@ -108,11 +139,20 @@ class _Cell:
             'shade_ms': roll['mean_shade_ms'],
             'kernel_ms': roll['kernel_ms'],
         }
+        # uniform columns across engines (fmt_rows wants one schema); the
+        # sequential baseline reports no occupancy scan (see its
+        # state_metrics docstring)
+        for key in ('last_occupancy', 'max_sort_pool_live',
+                    'sort_pool_bytes', 'sort_pool_alloc_bytes',
+                    'cache_bytes', 'state_bytes', 'state_alloc_bytes'):
+            row[key] = roll.get(key)
+        return row
 
 
 def run(quick: bool = False, reps: int = 4):
     frames = 4 if quick else 8
     counts = (1, 2) if quick else (1, 2, 4)
+    shared_at = counts[-1]      # the viewer count carrying the vps axis
     scene = structured_scene(jax.random.PRNGKey(0), GAUSS)
     # (engine, backend) axes; sequential is the per-viewer-cadence baseline
     # and runs the reference backend only
@@ -120,10 +160,38 @@ def run(quick: bool = False, reps: int = 4):
                 ('sequential', 'reference'))
     cells = [_Cell(scene, viewers, frames, mode, backend)
              for viewers in counts for mode, backend in variants]
+    # the viewers_per_scene axis at the largest viewer count:
+    #  - co-located shared rows (stagger 0) gate the sort-pool collapse
+    #  - staggered shared-vs-private pairs gate the cache-sharing hit rate
+    for backend in ('reference', 'pallas'):
+        cells.append(_Cell(scene, shared_at, frames, 'batched', backend,
+                           vps=shared_at, stagger=0))
+    cells.append(_Cell(scene, shared_at, frames, 'batched', 'reference',
+                       vps=shared_at, stagger=2))
+    cells.append(_Cell(scene, shared_at, frames, 'batched', 'reference',
+                       vps=1, stagger=2))
     for _ in range(max(1, reps)):
         for cell in cells:
             cell.run_once()
-    return [cell.row() for cell in cells]
+    rows = [cell.row() for cell in cells]
+
+    # cross-row gate: shared scene caches must serve staggered arrivals at
+    # least as well as private ones (the warm-admission win); CI re-asserts
+    # this from BENCH_serve.json
+    for r in rows:
+        if r['viewers_per_scene'] > 1 and r['stagger'] > 0:
+            base = [b for b in rows
+                    if b['viewers'] == r['viewers']
+                    and b['mode'] == r['mode']
+                    and b['backend'] == r['backend']
+                    and b['stagger'] == r['stagger']
+                    and b['viewers_per_scene'] == 1]
+            assert base and r['hit_rate'] > base[0]['hit_rate'], (
+                f"scene-shared cache lost its hit-rate edge: "
+                f"{r['hit_rate']:.3f} (shared) vs "
+                f"{base[0]['hit_rate'] if base else float('nan'):.3f} "
+                f"(private) at {r['viewers']} viewers")
+    return rows
 
 
 def main():

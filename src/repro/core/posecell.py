@@ -1,0 +1,99 @@
+"""Pose cells — quantized camera poses for scene-level sort sharing.
+
+The S^2 speculative sort is built with an expanded viewport whose ``margin``
+(pixels per side, rounded up to whole tiles) absorbs the pose drift of one
+sharing window.  The same margin headroom lets *different viewers* of one
+scene consume one sort, provided their poses are close enough that the
+projection error between them stays inside it.  A **pose cell** is the
+bucket of poses the scheduler treats as "close enough": position quantized
+on a world-space grid of pitch ``cell_size`` and view direction quantized
+into ``ang_bins`` azimuth/elevation (and roll) buckets.
+
+Margin safety is a small-angle budget, not a proof: two cameras in one cell
+differ by at most the cell diagonal ``sqrt(3) * cell_size`` in position and
+one angular bin in orientation.  A position error ``d`` at scene depth ``z``
+shifts projections by ~``f * d / z`` pixels and an orientation error
+``theta`` by ~``f * theta``; with the repo defaults (f ~= 55 px at 64 px /
+60 deg fov, z >~ 1, margin = 4 px rounded up to a 16 px tile) the defaults
+below keep the combined shift a fraction of the *tile-rounded* margin the
+expanded grid actually allocates.  Scenes with extreme close-ups should
+shrink ``cell_size`` (the scheduler degrades gracefully: smaller cells just
+mean less sharing, never wrong tiles beyond what the single-viewer window
+drift already permits).
+
+Keys are computed host-side (the sort scheduler is host-driven and a camera
+is seven floats); they are plain non-negative ``int32`` values so they can
+ride in the device-side ``SceneShared.pool_cell`` bookkeeping.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+CELL_SIZE = 0.05     # world-units position quantum (see margin budget above)
+ANG_BINS = 256       # direction buckets per axis (360/256 ~= 1.4 deg)
+
+
+def _fwd_up(quat: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Camera forward (+z) and up (-y, since image y grows down) axes in
+    world coordinates, from a (w,x,y,z) world-from-camera quaternion."""
+    w, x, y, z = quat / (np.linalg.norm(quat) + 1e-12)
+    fwd = np.array([2 * (x * z + w * y),
+                    2 * (y * z - w * x),
+                    1 - 2 * (x * x + y * y)])
+    down = np.array([2 * (x * y - w * z),
+                     1 - 2 * (x * x + z * z),
+                     2 * (y * z + w * x)])
+    return fwd, -down
+
+
+def pose_cell_key(cam, *, cell_size: float = CELL_SIZE,
+                  ang_bins: int = ANG_BINS) -> int:
+    """Quantize a camera pose into a deterministic pose-cell key.
+
+    Two cameras get the same key iff their quantized position cells and
+    direction buckets (forward azimuth/elevation plus an up-vector roll
+    bucket) all coincide.  Returns a non-negative python int < 2**31.
+    """
+    p = np.asarray(cam.position, np.float64).reshape(3)
+    q = np.asarray(cam.quat, np.float64).reshape(4)
+    fwd, up = _fwd_up(q)
+
+    az = np.arctan2(fwd[0], fwd[2])
+    el = np.arcsin(np.clip(fwd[1], -1.0, 1.0))
+    # roll: angle of the up vector around the forward axis, measured against
+    # a forward-orthogonal reference frame
+    ref = np.array([0.0, 1.0, 0.0])
+    if abs(fwd[1]) > 0.9:                       # forward ~ vertical
+        ref = np.array([1.0, 0.0, 0.0])
+    e1 = np.cross(ref, fwd)
+    e1 /= np.linalg.norm(e1) + 1e-12
+    e2 = np.cross(fwd, e1)
+    roll = np.arctan2(float(up @ e1), float(up @ e2))
+
+    two_pi = 2.0 * np.pi
+
+    def ang_bucket(x, lo, span, periodic=True):
+        # half-bin offset: a bin CENTER sits at zero, so the ubiquitous
+        # upright-camera roll ~= 0 (and axis-aligned headings) cannot
+        # flip buckets on float noise around a floor boundary
+        b = int(np.floor((x - lo) / span * ang_bins + 0.5))
+        if periodic:
+            return b % ang_bins
+        # elevation is NOT periodic: wrapping would fuse straight-up
+        # (el = +pi/2) with straight-down (el = -pi/2)
+        return min(ang_bins - 1, max(0, b))
+
+    buckets = (
+        int(np.floor(p[0] / cell_size)),
+        int(np.floor(p[1] / cell_size)),
+        int(np.floor(p[2] / cell_size)),
+        ang_bucket(az, -np.pi, two_pi),
+        ang_bucket(el, -np.pi / 2, np.pi, periodic=False),
+        ang_bucket(roll, -np.pi, two_pi),
+    )
+    # FNV-1a over the bucket tuple -> stable 31-bit key (non-negative, so -1
+    # stays free as the "empty pool entry" sentinel)
+    h = 2166136261
+    for b in buckets:
+        h = ((h ^ (b & 0xFFFFFFFF)) * 16777619) & 0xFFFFFFFF
+    return int(h & 0x7FFFFFFF)

@@ -100,9 +100,16 @@ def _match(tags_at_set: jax.Array, ids: jax.Array) -> jax.Array:
 
 
 def lookup(cache: CacheState, group: int | jax.Array, ids: jax.Array,
-           cfg: CacheConfig):
+           cfg: CacheConfig, live: jax.Array | None = None):
     """Query one group's cache with B records. Returns (hit [B], value [B,3],
-    set_idx [B], way [B], cache-with-updated-LRU-age)."""
+    set_idx [B], way [B], cache-with-updated-LRU-age).
+
+    ``live`` ([B] bool, optional) suppresses the LRU touch for dead records
+    (idle serving lanes probing a *shared* cache must not age-bump entries);
+    hit/value outputs are unaffected — callers mask them.  The clock still
+    advances by the full batch so the age sequence is independent of which
+    lanes happen to be live.
+    """
     tags, values, age, clock = (cache.tags[group], cache.values[group],
                                 cache.age[group], cache.clock[group])
     sidx = set_index(ids, cfg)                    # [B]
@@ -113,8 +120,9 @@ def lookup(cache: CacheState, group: int | jax.Array, ids: jax.Array,
     val = values[sidx, way]
     # LRU touch for hits (deterministic: later pixels touch later).
     b = ids.shape[0]
+    touched = hit if live is None else hit & live
     touch_age = clock + 1 + jnp.arange(b, dtype=jnp.int32)
-    age = age.at[sidx, way].max(jnp.where(hit, touch_age, -1))
+    age = age.at[sidx, way].max(jnp.where(touched, touch_age, -1))
     new_clock = clock + b
     new_cache = CacheState(cache.tags,
                            cache.values,
@@ -154,20 +162,25 @@ def _insert_round(tags, values, age, clock, sidx, ids, rgb, do_insert):
 
 
 def touch_all_groups(cache: CacheState, ids: jax.Array, hit: jax.Array,
-                     way: jax.Array, cfg: CacheConfig) -> CacheState:
+                     way: jax.Array, cfg: CacheConfig,
+                     live: jax.Array | None = None) -> CacheState:
     """Apply the LRU side effect of a lookup (age bump for hits) without
     re-probing — used by the kernel fast path, whose Pallas lookup returns
     (hit, way) but leaves cache state untouched.  Matches ``lookup``'s age
-    and clock evolution exactly so both paths stay bit-identical."""
-    def one(tags, values, age, clock, gids, ghit, gway):
+    and clock evolution exactly so both paths stay bit-identical.
+    ``live`` ([G, B] bool, optional) masks dead records out of the touch
+    (see ``lookup``)."""
+    def one(tags, values, age, clock, gids, ghit, gway, glive):
         b = gids.shape[0]
         sidx = set_index(gids, cfg)
         touch_age = clock + 1 + jnp.arange(b, dtype=jnp.int32)
-        age = age.at[sidx, gway].max(jnp.where(ghit, touch_age, -1))
+        age = age.at[sidx, gway].max(jnp.where(ghit & glive, touch_age, -1))
         return age, clock + b
 
+    if live is None:
+        live = jnp.ones(hit.shape, bool)
     age, clock = jax.vmap(one)(cache.tags, cache.values, cache.age,
-                               cache.clock, ids, hit, way)
+                               cache.clock, ids, hit, way, live)
     return CacheState(cache.tags, cache.values, age, clock)
 
 
@@ -196,14 +209,18 @@ def insert(cache: CacheState, group: int | jax.Array, ids: jax.Array,
                       cache.clock.at[group].set(clock))
 
 
-def lookup_all_groups(cache: CacheState, ids: jax.Array, cfg: CacheConfig):
-    """vmapped lookup over all groups. ids: [G, B, k]."""
-    def one(tags, values, age, clock, gids):
+def lookup_all_groups(cache: CacheState, ids: jax.Array, cfg: CacheConfig,
+                      live: jax.Array | None = None):
+    """vmapped lookup over all groups. ids: [G, B, k]; live: [G, B] bool
+    (optional, masks dead records out of the LRU touch)."""
+    def one(tags, values, age, clock, gids, glive):
         sub = CacheState(tags[None], values[None], age[None], clock[None])
-        hit, val, sidx, way, new = lookup(sub, 0, gids, cfg)
+        hit, val, sidx, way, new = lookup(sub, 0, gids, cfg, live=glive)
         return hit, val, sidx, way, (new.tags[0], new.values[0], new.age[0], new.clock[0])
+    if live is None:
+        live = jnp.ones(ids.shape[:-1], bool)
     hit, val, sidx, way, (t, v, a, c) = jax.vmap(one)(
-        cache.tags, cache.values, cache.age, cache.clock, ids)
+        cache.tags, cache.values, cache.age, cache.clock, ids, live)
     return hit, val, sidx, way, CacheState(t, v, a, c)
 
 
@@ -217,3 +234,59 @@ def insert_all_groups(cache: CacheState, ids: jax.Array, rgb: jax.Array,
     t, v, a, c = jax.vmap(one)(cache.tags, cache.values, cache.age, cache.clock,
                                ids, rgb, do_insert)
     return CacheState(t, v, a, c)
+
+
+# ---------------------------------------------------------------------------
+# Multi-viewer (scene-shared) forms
+# ---------------------------------------------------------------------------
+# One cache serves every viewer of a scene.  The batched forms flatten the
+# viewer axis *slot-major* into the record batch, so the whole fleet's probes
+# and inserts evolve the cache exactly as if one sequential stream had issued
+# them in (slot, pixel) order: cross-viewer insert conflicts resolve by that
+# order (lowest slot, then lowest pixel, wins — the multi-viewer extension of
+# the hardware's sequential insert), duplicate records across viewers dedupe
+# through the insert rounds' re-probe, and the result depends only on the
+# slot -> records mapping, never on host-side iteration order.  With V == 1
+# the flatten is the identity, so the shared path is bit-identical to the
+# per-viewer functions — the parity anchor for single-viewer serving.
+
+def slot_major(x: jax.Array) -> jax.Array:
+    """[V, G, B, ...] per-viewer grouped records -> [G, V*B, ...] one
+    slot-major batch per group (viewer 0's pixels first)."""
+    v, g, b = x.shape[:3]
+    return jnp.moveaxis(x, 0, 1).reshape(g, v * b, *x.shape[3:])
+
+
+def slot_split(x: jax.Array, v: int) -> jax.Array:
+    """Inverse of ``slot_major``: [G, V*B, ...] -> [V, G, B, ...]."""
+    g, vb = x.shape[:2]
+    return jnp.moveaxis(x.reshape(g, v, vb // v, *x.shape[2:]), 0, 1)
+
+
+def lookup_all_groups_multi(cache: CacheState, ids: jax.Array,
+                            cfg: CacheConfig,
+                            live: jax.Array | None = None):
+    """Shared-cache lookup for V viewers: ids [V, G, B, k], live [V] bool.
+
+    Returns (hit [V, G, B], val [V, G, B, 3], sidx, way, new cache).  LRU
+    touches land in (slot, pixel) order; dead viewers (``live`` False) probe
+    without touching."""
+    v = ids.shape[0]
+    live_f = None
+    if live is not None:
+        live_f = slot_major(jnp.broadcast_to(live[:, None, None],
+                                             ids.shape[:3]))
+    hit, val, sidx, way, cache = lookup_all_groups(cache, slot_major(ids),
+                                                   cfg, live=live_f)
+    return (slot_split(hit, v), slot_split(val, v), slot_split(sidx, v),
+            slot_split(way, v), cache)
+
+
+def insert_all_groups_multi(cache: CacheState, ids: jax.Array,
+                            rgb: jax.Array, do_insert: jax.Array,
+                            cfg: CacheConfig) -> CacheState:
+    """Shared-cache insert for V viewers: ids [V, G, B, k], rgb [V, G, B, 3],
+    do_insert [V, G, B].  Conflicts resolve deterministically by
+    (slot, pixel) order; duplicate tags across viewers land once."""
+    return insert_all_groups(cache, slot_major(ids), slot_major(rgb),
+                             slot_major(do_insert), cfg)

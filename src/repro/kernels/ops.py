@@ -318,6 +318,36 @@ def rc_probe(cache: rc.CacheState, ids_g: jax.Array, cfg: rc.CacheConfig,
     return hit_g, val_g, way_g, cache
 
 
+def rc_probe_multi(cache: rc.CacheState, ids: jax.Array, cfg: rc.CacheConfig,
+                   live: jax.Array | None = None,
+                   *, interpret: bool | None = None):
+    """Shared-cache probe for V viewers of one scene: ids [V, G, B, k],
+    live [V] bool.  Returns (hit [V,G,B], val [V,G,B,3], way [V,G,B],
+    cache-with-touch-applied).
+
+    The viewer axis flattens slot-major into each group's record batch, so
+    LRU evolution is the deterministic (slot, pixel) serial order and V == 1
+    is bit-identical to ``rc_probe``.  Dead viewers probe without touching.
+    On TPU the flattened batch goes through the one-hot-matmul Pallas lookup
+    and the (masked) touch runs as a separate step — identical evolution.
+    """
+    interp = default_interpret() if interpret is None else interpret
+    if interp:
+        hit, val, _, way, cache = rc.lookup_all_groups_multi(cache, ids, cfg,
+                                                             live=live)
+        return hit, val, way, cache
+    v = ids.shape[0]
+    ids_f = rc.slot_major(ids)
+    live_f = None
+    if live is not None:
+        live_f = rc.slot_major(jnp.broadcast_to(live[:, None, None],
+                                                ids.shape[:3]))
+    hit_f, val_f, _, way_f = rc_lookup(cache, ids_f, cfg, interpret=interp)
+    cache = rc.touch_all_groups(cache, ids_f, hit_f, way_f, cfg, live=live_f)
+    return (rc.slot_split(hit_f, v), rc.slot_split(val_f, v),
+            rc.slot_split(way_f, v), cache)
+
+
 class RCStats(NamedTuple):
     """Kernel-path statistics. True compute savings are chunk-granular:
     compare (chunks_prefix + chunks_resume) against ``chunks_bound`` (what a
@@ -483,20 +513,28 @@ def rasterize_resume_compacted_slots(feats_b: TileFeatures, tiles_x: int,
 def rasterize_with_rc_slots(feats_b: TileFeatures, tiles_x: int,
                             tiles_y: int, caches: rc.CacheState,
                             cfg: rc.CacheConfig, group_tiles: int, *,
+                            viewers_per_scene: int = 1,
                             k_record: int = 5, chunk: int = 64,
                             bg: float = 0.0, live=None,
                             compact: bool = True,
                             interpret: bool | None = None):
     """Slot-batched cached rasterization: phase A in one slot-batched
-    kernel, per-slot cache probe, cross-slot miss-compacted resume, per-slot
-    insert.  ``caches`` leaves carry a leading [S] axis; ``live`` is [S]
-    bool.  Per-lane results are bit-identical to mapping
-    ``rasterize_with_rc`` over slots; only the *chunk accounting* differs
-    (phase-A trips are slot-coupled, so ``chunks_prefix``/``chunks_bound``
-    are fleet totals and ``hit_rate`` is per-slot [S]).
+    kernel, scene-major shared-cache probe, cross-slot miss-compacted
+    resume, scene-major insert.  ``caches`` leaves carry a leading [C] axis
+    with ``C = S // viewers_per_scene`` (slot ``i`` probes scene ``i // V``'s
+    cache; slots of one scene share it, conflicts resolving in deterministic
+    (slot, pixel) order — see ``rc_probe_multi``); ``live`` is [S] bool and
+    masks idle slots out of LRU touches and inserts as well as the chunk
+    loops.  With ``viewers_per_scene == 1`` every slot owns a private cache
+    and per-lane results are bit-identical to mapping ``rasterize_with_rc``
+    over slots; only the *chunk accounting* differs (phase-A trips are
+    slot-coupled, so ``chunks_prefix``/``chunks_bound`` are fleet totals and
+    ``hit_rate`` is per-slot [S]).
     """
     feats_b = pad_features_slots(feats_b, chunk)
     s, t = feats_b.ids.shape[:2]
+    v = viewers_per_scene
+    c = s // v
     if live is None:
         live = jnp.ones((s,), bool)
     live = jnp.asarray(live, bool).reshape(s)
@@ -507,13 +545,19 @@ def rasterize_with_rc_slots(feats_b: TileFeatures, tiles_x: int,
 
     ids_g = jax.vmap(
         lambda r: regroup(r, tiles_x, tiles_y, group_tiles))(st_a.record)
-    hit_g, val_g, way_g, caches = jax.vmap(
-        lambda c, i: rc_probe(c, i, cfg, interpret=interpret))(caches, ids_g)
+    ids_cv = ids_g.reshape(c, v, *ids_g.shape[1:])       # [C, V, G, B, k]
+    live_cv = live.reshape(c, v)
+    hit_cv, val_cv, way_cv, caches = jax.vmap(
+        lambda cc, ii, lv: rc_probe_multi(cc, ii, cfg, live=lv,
+                                          interpret=interpret)
+    )(caches, ids_cv, live_cv)
+    hit_g = hit_cv.reshape(s, *hit_cv.shape[2:])         # [S, G, B]
+    val_g = val_cv.reshape(s, *val_cv.shape[2:])
     hit = jax.vmap(
         lambda h: ungroup(h[..., None], tiles_x, tiles_y,
                           group_tiles)[..., 0])(hit_g)
     cached = jax.vmap(
-        lambda v: ungroup(v, tiles_x, tiles_y, group_tiles))(val_g)
+        lambda vv: ungroup(vv, tiles_x, tiles_y, group_tiles))(val_g)
 
     miss = ~hit & live[:, None, None]
     if compact:
@@ -532,10 +576,11 @@ def rasterize_with_rc_slots(feats_b: TileFeatures, tiles_x: int,
     final = jnp.where(hit[..., None], cached, colors)
 
     raw_g = jax.vmap(
-        lambda c: regroup(c, tiles_x, tiles_y, group_tiles))(colors)
+        lambda cl: regroup(cl, tiles_x, tiles_y, group_tiles))(colors)
+    raw_cv = raw_g.reshape(c, v, *raw_g.shape[1:])
     caches = jax.vmap(
-        lambda c, i, r, h: rc.insert_all_groups(c, i, r, ~h, cfg)
-    )(caches, ids_g, raw_g, hit_g)
+        lambda cc, ii, rr, dd: rc.insert_all_groups_multi(cc, ii, rr, dd, cfg)
+    )(caches, ids_cv, raw_cv, ~hit_cv & live_cv[:, :, None, None])
 
     ncap = chunk_caps(feats_b.ids.reshape(s * t, -1), chunk)
     stats = RCStats(

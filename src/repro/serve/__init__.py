@@ -2,12 +2,15 @@
 
 Layers (bottom-up):
   * ``repro.core.pipeline.sort_phase`` / ``shade_phase`` — the pure two-phase
-    per-viewer frame (lives in core; the serving path schedules the phases
-    itself instead of using ``render_step``'s per-viewer ``lax.cond``);
-  * ``stepper``   — Batched (cohort sort scheduler + one vmapped shade per
-    tick, state buffers donated) / Sequential engines;
-  * ``session``   — viewer sessions + slot-based admit/evict manager
-    (keeps the per-tick ``tick_log`` of sort/shade attribution);
+    frame over ``SceneShared``/``ViewerPrivate`` state (lives in core; the
+    serving path schedules the phases itself instead of using
+    ``render_step``'s per-viewer ``lax.cond``);
+  * ``stepper``   — Batched (pose-cell sort scheduler + one scene-major
+    shade per tick, scene-shared caches, state buffers donated) /
+    Sequential engines;
+  * ``session``   — viewer sessions (with ``scene_id``) + slot-based
+    admit/evict manager routing sessions to scene blocks (keeps the
+    per-tick ``tick_log`` of sort/shade attribution + state metrics);
   * ``telemetry`` — per-session FPS / hit-rate / latency percentiles /
     per-phase ``sort_ms``+``shade_ms``, fleet ``tick_rollup``;
   * ``render``    — the CLI entrypoint (``python -m repro.serve.render``).

@@ -27,14 +27,25 @@ from repro.serve.telemetry import aggregate, format_table, tick_rollup
 
 
 def build_sessions(viewers: int, frames: int, *, width: int = 96,
-                   stagger: int = 2, fps: float = 90.0) -> list[ViewerSession]:
-    """One session per viewer: own orbit start angle, staggered arrival."""
+                   stagger: int = 2, fps: float = 90.0,
+                   viewers_per_scene: int = 1) -> list[ViewerSession]:
+    """One session per viewer, grouped into scenes of ``viewers_per_scene``.
+
+    Scenes get distinct orbit start angles; viewers of one scene ride the
+    *same* trajectory (the co-watching scenario — broadcast spectators at
+    near-identical poses), so they land in one pose cell and exercise the
+    scene-shared sort pool and radiance cache.  With one viewer per scene
+    this reduces to the original one-orbit-per-viewer layout.
+    """
     sessions = []
+    n_scenes = -(-viewers // viewers_per_scene)
     for sid in range(viewers):
+        scene_id = sid // viewers_per_scene
         cams = orbit_trajectory(frames, fps=fps, width=width, height_px=width,
-                                start_deg=360.0 * sid / max(viewers, 1))
+                                start_deg=360.0 * scene_id / max(n_scenes, 1))
         sessions.append(ViewerSession(sid=sid, cams=cams,
-                                      arrival_tick=sid * stagger))
+                                      arrival_tick=sid * stagger,
+                                      scene_id=scene_id))
     return sessions
 
 
@@ -42,23 +53,38 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
           gaussians: int = 1500, window: int = 6, capacity: int = 192,
           stagger: int = 2, sequential: bool = False, seed: int = 0,
           backend: str = 'reference', profile_every: int = 0,
-          print_fn=print) -> dict:
+          viewers_per_scene: int = 1, print_fn=print) -> dict:
     """Run the serving loop to completion; returns the aggregate rollup.
 
     ``backend`` selects the shade implementation ('reference' | 'pallas');
     ``profile_every`` > 0 samples a per-kernel shade latency breakdown every
-    N ticks (pallas backend, batched engine).
+    N ticks (pallas backend, batched engine); ``viewers_per_scene`` > 1
+    groups that many slots per scene so co-scene viewers share one radiance
+    cache and pose-cell sort pool (batched engine only).
     """
     if viewers < 1 or frames < 1:
         raise SystemExit('--viewers and --frames must be >= 1')
+    if viewers_per_scene < 1:
+        raise SystemExit('--viewers-per-scene must be >= 1')
+    if sequential and viewers_per_scene > 1:
+        raise SystemExit('--viewers-per-scene > 1 needs the batched engine '
+                         '(the sequential baseline is fully private state)')
     slots = slots or min(viewers, 8)
+    # scene blocks are static: round slots up to whole blocks
+    slots = -(-slots // viewers_per_scene) * viewers_per_scene
     scene = structured_scene(jax.random.PRNGKey(seed), gaussians)
     cfg = LuminaConfig(capacity=capacity, window=window, backend=backend)
-    sessions = build_sessions(viewers, frames, width=width, stagger=stagger)
+    sessions = build_sessions(viewers, frames, width=width, stagger=stagger,
+                              viewers_per_scene=viewers_per_scene)
     cam0 = sessions[0].cams[0]
 
-    engine = SequentialStepper if sequential else BatchedStepper
-    stepper = engine(scene, cfg, cam0, slots, profile_every=profile_every)
+    if sequential:
+        stepper = SequentialStepper(scene, cfg, cam0, slots,
+                                    profile_every=profile_every)
+    else:
+        stepper = BatchedStepper(scene, cfg, cam0, slots,
+                                 profile_every=profile_every,
+                                 viewers_per_scene=viewers_per_scene)
     mgr = SessionManager(stepper, slots)
     for sess in sessions:
         mgr.submit(sess)
@@ -75,11 +101,17 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     # statistics legitimately differ.
     roll = tick_rollup(mgr.tick_log, warmup_ticks=1)
     agg['backend'] = backend
+    agg['viewers_per_scene'] = viewers_per_scene
     agg['mean_sorts_per_tick'] = roll['mean_sorts_per_tick']
     agg['max_sorts_per_tick'] = roll['max_sorts_per_tick']
     agg['tick_sort_ms'] = roll['mean_sort_ms']
     agg['tick_shade_ms'] = roll['mean_shade_ms']
     agg['kernel_ms'] = roll['kernel_ms']
+    for key in ('last_occupancy', 'max_sort_pool_live', 'sort_pool_bytes',
+                'sort_pool_alloc_bytes', 'cache_bytes', 'state_bytes',
+                'state_alloc_bytes'):
+        if key in roll:
+            agg[key] = roll[key]
     print_fn(format_table(summaries))
     print_fn(f"-- {agg['mode']} ({backend}): {agg['sessions']} sessions, "
              f"{agg['frames']} frames in {agg['ticks']} ticks, "
@@ -89,6 +121,16 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
              f"sort/shade {agg['mean_sort_ms']:.1f}/"
              f"{agg['mean_shade_ms']:.1f} ms, "
              f"max {agg['max_sorts_per_tick']} sorts/tick")
+    if 'max_sort_pool_live' in agg:
+        occ = agg.get('last_occupancy')
+        occ_s = f", cache occupancy {occ:.2f}" if occ is not None else ''
+        print_fn(f"-- state ({viewers_per_scene} viewers/scene): "
+                 f"{agg['max_sort_pool_live']} live sort buffers peak, "
+                 f"{agg['state_bytes'] / 1e6:.1f} MB live state "
+                 f"(cache {agg['cache_bytes'] / 1e6:.1f} MB + sort pool "
+                 f"{agg['sort_pool_bytes'] / 1e6:.1f} MB; "
+                 f"{agg['state_alloc_bytes'] / 1e6:.1f} MB allocated)"
+                 f"{occ_s}")
     if roll['kernel_ms']:
         parts = '  '.join(f'{k} {v:.1f}' for k, v in roll['kernel_ms'].items())
         print_fn(f"-- shade kernels (ms/tick, sampled): {parts}")
@@ -117,13 +159,18 @@ def main(argv=None):
     ap.add_argument('--profile-every', type=int, default=0,
                     help='sample a per-kernel shade latency breakdown every '
                          'N ticks (pallas backend, batched engine)')
+    ap.add_argument('--viewers-per-scene', type=int, default=1,
+                    help='slots per scene block: viewers of one scene share '
+                         'its radiance cache and pose-cell sort pool '
+                         '(batched engine only)')
     ap.add_argument('--seed', type=int, default=0)
     args = ap.parse_args(argv)
     serve(args.viewers, args.frames, slots=args.slots, width=args.width,
           gaussians=args.gaussians, window=args.window,
           capacity=args.capacity, stagger=args.stagger,
           sequential=args.sequential, seed=args.seed,
-          backend=args.backend, profile_every=args.profile_every)
+          backend=args.backend, profile_every=args.profile_every,
+          viewers_per_scene=args.viewers_per_scene)
 
 
 if __name__ == '__main__':

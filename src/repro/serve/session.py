@@ -6,6 +6,14 @@ viewers with arrival times, admit-on-free-slot, evict-on-completion.  A
 viewer session is a camera trajectory (one camera per frame) plus its
 telemetry; slots hold whichever sessions are currently live, and the
 stepper advances every live slot one frame per tick.
+
+Scene-centric serving: sessions carry a ``scene_id`` and the manager groups
+slots by scene — when the stepper serves ``viewers_per_scene > 1`` slots per
+scene block, a session is only admitted into a free slot of *its* scene's
+block, so co-scene viewers land on the block whose ``SceneShared`` (radiance
+cache + sort pool) they are meant to share.  With one viewer per scene (the
+default) scene identity does not constrain placement and admission is plain
+FIFO over all free slots, exactly the pre-split behavior.
 """
 from __future__ import annotations
 
@@ -19,13 +27,18 @@ from repro.serve.telemetry import SessionTelemetry
 
 @dataclasses.dataclass
 class ViewerSession:
-    """One viewer's camera stream: frames are consumed front-to-back."""
+    """One viewer's camera stream: frames are consumed front-to-back.
+
+    ``scene_id`` names the scene this viewer watches; viewers sharing it are
+    eligible to share that scene's radiance cache and speculative sorts.
+    """
 
     sid: int
     cams: list          # list[Camera], one per frame
     arrival_tick: int = 0
     cursor: int = 0
-    telemetry: SessionTelemetry = None
+    scene_id: int = 0
+    telemetry: Optional[SessionTelemetry] = None
 
     def __post_init__(self):
         if self.telemetry is None:
@@ -45,19 +58,25 @@ class SessionManager:
 
     ``stepper`` is any object with the ``admit(slot)`` / ``step({slot: cam})``
     interface of ``repro.serve.stepper``; the manager owns which sessions sit
-    in which slots and feeds their per-frame stats into telemetry.
+    in which slots and feeds their per-frame stats into telemetry.  When the
+    stepper exposes ``viewers_per_scene > 1``, slots are grouped into scene
+    blocks and sessions are placed by ``scene_id`` (see module docstring).
     """
 
     def __init__(self, stepper, slots: int):
         self.stepper = stepper
         self.slots = slots
+        self.viewers_per_scene = getattr(stepper, 'viewers_per_scene', 1)
+        self.num_scenes = max(1, slots // self.viewers_per_scene)
         self.slot_session: list[Optional[ViewerSession]] = [None] * slots
         self.pending: deque[ViewerSession] = deque()
         self.finished: list[ViewerSession] = []
         self.tick = 0
         # Per-tick phase attribution: {'tick', 'frames', 'sorted_slots',
         # 'sort_ms', 'shade_ms', 'kernel_ms'} per rendered tick (empty ticks
-        # are skipped; kernel_ms is None except on profiled pallas ticks).
+        # are skipped; kernel_ms is None except on profiled pallas ticks),
+        # plus the stepper's state metrics (cache occupancy, live sort-pool
+        # entries, state bytes) when it exposes ``state_metrics()``.
         self.tick_log: list[dict] = []
 
     # -- lifecycle ---------------------------------------------------------
@@ -71,17 +90,45 @@ class SessionManager:
     def active_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slot_session) if s is not None]
 
+    def _scene_block(self, scene_id: int) -> range:
+        """Slot range of a session's scene block (scene ids beyond the
+        stepper's scene count wrap — the block is a cache domain, not a
+        registry of world scenes)."""
+        c = scene_id % self.num_scenes
+        v = self.viewers_per_scene
+        return range(c * v, (c + 1) * v)
+
+    def _admit_into(self, slot: int, sess: ViewerSession) -> None:
+        sess.telemetry.admitted_tick = self.tick
+        self.slot_session[slot] = sess
+        self.stepper.admit(slot)
+
     def admit_ready(self) -> list[int]:
-        """Admit arrived pending sessions into free slots (FIFO)."""
+        """Admit arrived pending sessions into free slots (FIFO; with scene
+        blocks, FIFO per admissible session — a session whose block is full
+        waits without blocking later sessions bound for other scenes)."""
         admitted = []
-        for slot in self.free_slots():
-            if not self.pending or self.pending[0].arrival_tick > self.tick:
-                break
+        if self.viewers_per_scene == 1:
+            for slot in self.free_slots():
+                if not self.pending or self.pending[0].arrival_tick > self.tick:
+                    break
+                self._admit_into(slot, self.pending.popleft())
+                admitted.append(slot)
+            return admitted
+        waiting = deque()
+        while self.pending:
             sess = self.pending.popleft()
-            sess.telemetry.admitted_tick = self.tick
-            self.slot_session[slot] = sess
-            self.stepper.admit(slot)
-            admitted.append(slot)
+            if sess.arrival_tick > self.tick:
+                waiting.append(sess)
+                continue
+            free = [i for i in self._scene_block(sess.scene_id)
+                    if self.slot_session[i] is None]
+            if free:
+                self._admit_into(free[0], sess)
+                admitted.append(free[0])
+            else:
+                waiting.append(sess)
+        self.pending = waiting
         return admitted
 
     def evict_finished(self) -> list[int]:
@@ -118,14 +165,18 @@ class SessionManager:
             sess.cursor += 1
         if outputs:
             tick_timing = self.stepper.last_timing
-            self.tick_log.append({
+            entry = {
                 'tick': self.tick,
                 'frames': len(outputs),
                 'sorted_slots': tick_timing.sorted_slots,
                 'sort_ms': tick_timing.sort_ms,
                 'shade_ms': tick_timing.shade_ms,
                 'kernel_ms': getattr(tick_timing, 'kernel_ms', None),
-            })
+            }
+            metrics = getattr(self.stepper, 'state_metrics', None)
+            if metrics is not None:
+                entry.update(metrics())
+            self.tick_log.append(entry)
         self.tick += 1
         return len(outputs)
 

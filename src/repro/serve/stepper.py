@@ -2,63 +2,71 @@
 
 Two interchangeable engines behind one interface:
 
-* ``BatchedStepper``    — the serving fast path.  A **cohort sort scheduler**
-  staggers speculative sorts across slots (slot ``i`` sorts when
-  ``global_tick % window == i % window``, plus sort-on-admit outside the
-  tick): each tick gathers only the due cohort (<= ceil(S/window) slots),
-  runs one small vmapped/jitted ``sort_phase`` over it, scatters the
-  resulting ``SortShared`` leaves back into the batched ``ViewerState``, then
-  advances the live slots through a vmapped ``shade_phase`` whose no-sort
-  path is scalar and sort-free.  This restores the paper's 1-in-window sort
-  amortization that a per-lane ``lax.cond`` (lowered to a select under vmap)
-  destroys.
+* ``BatchedStepper``    — the serving fast path over **scene-centric**
+  state: slots are partitioned into scenes (``viewers_per_scene`` slots per
+  scene, a static block layout), each scene holding ONE shared radiance
+  cache and a pose-cell-keyed pool of speculative-sort entries
+  (``SceneShared``), while per-slot state shrinks to a ``ViewerPrivate``.
+  A **pose-cell sort scheduler** generalizes the PR-2 cohort scheduler:
+  slot ``i`` comes due when ``global_tick % window == i % window`` (plus
+  sort-on-admit outside the tick), due slots are grouped by (scene,
+  pose cell), and each group elects one **leader** (lowest slot) to run the
+  speculative sort — co-located viewers share one ``SortShared`` buffer, so
+  the pool holds O(distinct cells) live entries instead of one per slot.
+  A due slot whose cell already has a *fresh* entry (sorted within the
+  window, by a still-active owner still in that cell) adopts it without
+  sorting at all.  Each tick then advances all live slots through one
+  ``batched_shade_phase``, whose cache stages run scene-major: every
+  viewer of a scene probes and fills the scene's single cache, conflicts
+  resolving in deterministic (slot, pixel) order.
 * ``SequentialStepper`` — each active slot advances through its own
   single-viewer jitted ``render_step`` (the reference/baseline the benchmark
-  compares against; per-viewer sort cadence, exact ``LuminSys`` semantics).
+  compares against; per-viewer sort cadence, exact ``LuminSys`` semantics,
+  fully private state).
 
-Cadence-shift caveat: the cohort scheduler intentionally shifts *when* each
-slot sorts relative to an independent per-viewer run (cadence-shift, not
-result-change — every frame still renders from a sort no older than
-``window`` frames, and a slot admitted mid-window sorts immediately).  For a
-single viewer in slot 0 admitted at tick 0 the cadences coincide and the two
-engines agree on every integer cache decision.
+With ``viewers_per_scene == 1`` (the default) every slot is its own scene:
+private cache, singleton pose-cell groups, the exact PR-2 cohort cadence —
+single-viewer behavior is bit-identical to the pre-split engine, preserved
+by the parity oracles in ``tests/test_serve.py``.
 
-Both engines **donate** their ``ViewerState`` buffers into the jitted calls
-(the previous tick's state is dead the instant the step returns), so XLA
-updates the O(S*N) state in place instead of round-tripping a copy every
-tick.
+Cadence caveats: the scheduler shifts *when* each slot sorts relative to an
+independent per-viewer run (every frame still renders from a sort no older
+than ``window`` frames in private mode; a shared entry adopted from another
+viewer's leader can be up to ``2*window - 1`` ticks old across an ownership
+handoff).  For a single viewer in slot 0 admitted at tick 0 the cadences
+coincide and the engines agree on every integer cache decision.
 
-**Idle-lane compaction**: when some slots are idle, the batched engine
-gathers the active slots into a dense prefix (padded to a power-of-two
-bucket so at most log2(S) shade widths ever compile), shades only that
-sub-batch, and scatters results back — idle lanes are not shaded at all, on
-either backend, and their state (cache, frame counter) is left untouched
-instead of advancing with garbage.  Under ``vmap`` this is the only way to
-stop paying for dead lanes: a per-lane ``live=False`` mask zeroes their
-*contribution*, but XLA still executes the batch-wide max trip count.  When
-every slot is active the engine takes the full-width path unchanged.
+Both engines **donate** their state buffers into the jitted calls (the
+previous tick's state is dead the instant the step returns), so XLA updates
+the O(S*N) state in place instead of round-tripping a copy every tick.
+
+**Idle-lane compaction**: when whole scenes are idle, the batched engine
+gathers the active scene blocks into a dense prefix (padded to a
+power-of-two bucket so at most log2(C) shade widths ever compile), shades
+only that sub-batch, and scatters results back — idle scenes are not shaded
+at all and their state is left untouched.  Idle slots *within* an active
+scene ride the shade with ``active=False``: they contribute nothing, touch
+no LRU state and insert nothing into the shared cache.  With one slot per
+scene this reduces exactly to the PR-3 per-slot compaction.
 
 **Per-kernel latency attribution**: with ``profile_every=N`` (and the
 ``pallas`` backend), every Nth tick re-runs the shade decomposed into its
 kernel stages — prep (S^2 feature refresh), prefix (RC phase A), lookup
-(LuminCache probe), resume (miss-compacted phase B), insert — on a copy of
-the pre-shade state, timing each stage with a device sync.  The breakdown
-lands in ``TickTiming.kernel_ms`` / ``SessionManager.tick_log`` and is
-rolled up by ``telemetry.tick_rollup``.  The decomposed stages are the same
-functions the fused shade composes, so the split is faithful modulo XLA
-fusion across stage boundaries; profiling runs outside the timed section
-(``sort_ms``/``shade_ms`` are unaffected; wall-clock of profiled runs is
-slightly conservative).
+(scene-major LuminCache probe), resume (miss-compacted phase B), insert —
+on a copy of the pre-shade state, timing each stage with a device sync.
+The breakdown lands in ``TickTiming.kernel_ms`` / ``SessionManager.
+tick_log`` and is rolled up by ``telemetry.tick_rollup``.
 
 Interface::
 
     stepper.admit(slot)                  # reset a slot to cold-start state
     out = stepper.step({slot: cam, ..})  # advance the given slots one frame
     # out: {slot: (image, FrameStats, TickTiming)}
-    stepper.sort_log                     # per-step {'scheduled','admit'} counts
+    stepper.sort_log                     # per-step {'scheduled','admit',
+                                         #           'joined'} counts
     stepper.last_timing                  # tick-level TickTiming of the last
-                                         # non-empty step (SessionManager
-                                         # reads it for its tick_log)
+                                         # non-empty step
+    stepper.state_metrics()              # occupancy + state-memory bytes
 """
 from __future__ import annotations
 
@@ -69,14 +77,20 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import posecell
 from repro.core import radiance_cache as rc
 from repro.core.camera import Camera, stack_cameras
 from repro.core.gaussians import GaussianScene
 from repro.core.groups import regroup, ungroup
-from repro.core.pipeline import (LuminaConfig, ViewerState,
+from repro.core.pipeline import (LuminaConfig, SceneShared, ViewerPrivate,
+                                 ViewerState, batched_prep_features,
                                  batched_shade_phase, batched_sort_phase,
-                                 copy_pytree, init_viewer_state, render_step)
+                                 copy_pytree, init_fleet, init_scene_shared,
+                                 init_viewer_private, init_viewer_state,
+                                 pytree_nbytes, render_step,
+                                 trim_features_slots)
 from repro.core.tiling import tile_grid
 
 
@@ -91,26 +105,70 @@ class TickTiming(NamedTuple):
                                       # ticks on the pallas backend)
 
 
+class _SortGroup(NamedTuple):
+    """One due (scene, cell) group resolved by the pose-cell scheduler."""
+
+    scene: int
+    cell: int
+    leader: int          # lowest due slot; runs the sort if one is needed
+    members: tuple       # all due slots adopting the entry
+    riders: tuple        # non-due co-located slots consolidated onto it
+    entry: int           # pool index the group lands in
+    sorts: bool          # False = adopted a fresh entry, no sort executed
+
+
 class BatchedStepper:
-    """All live slots advance in one vmapped ``shade_phase`` call per tick
-    (gathered to a dense prefix when some slots are idle); only the due
-    cohort runs ``sort_phase``."""
+    """All live slots advance in one scene-major ``batched_shade_phase``
+    call per tick (gathered to a dense scene prefix when some scenes are
+    idle); speculative sorts run once per due (scene, pose-cell) group."""
 
     def __init__(self, scene: GaussianScene, cfg: LuminaConfig,
-                 cam0: Camera, slots: int, profile_every: int = 0):
+                 cam0: Camera, slots: int, profile_every: int = 0,
+                 viewers_per_scene: int = 1, pool_size: int | None = None,
+                 cell_size: float = posecell.CELL_SIZE,
+                 cell_ang_bins: int = posecell.ANG_BINS):
+        if slots % viewers_per_scene:
+            raise ValueError(f'slots ({slots}) must be a multiple of '
+                             f'viewers_per_scene ({viewers_per_scene})')
         self.scene = scene
         self.cfg = cfg
         self.slots = slots
+        self.viewers_per_scene = viewers_per_scene
+        self.num_scenes = slots // viewers_per_scene
+        self.pool_size = (viewers_per_scene if pool_size is None
+                          else pool_size)
+        self.cell_size = cell_size
+        self.cell_ang_bins = cell_ang_bins
         self.window = max(1, cfg.window) if cfg.use_s2 else 1
-        # Fixed cohort width: ceil(S/window) slots share each sort tick, so
-        # the gather/sort/scatter call jits once for the worst-case cohort.
+        # Fixed sort-call width: at most ceil(S/window) groups are due per
+        # scheduled tick, so the gather/sort/scatter call jits once for the
+        # worst-case cohort (admit bursts are chunked to the same width).
         self.cohort = -(-slots // self.window)
         self.global_tick = 0
         self.profile_every = profile_every
         self.tiles_x, self.tiles_y = tile_grid(cam0.width, cam0.height)
-        self._fresh = init_viewer_state(scene, cfg, cam0)
-        self.states: ViewerState = jax.tree.map(
-            lambda x: jnp.stack([x] * slots), self._fresh)
+
+        self.shared: SceneShared
+        self.priv: ViewerPrivate
+        self.shared, self.priv = init_fleet(
+            scene, cfg, cam0, slots, viewers_per_scene=viewers_per_scene,
+            pool_size=self.pool_size)
+        self._fresh_shared = init_scene_shared(scene, cfg, cam0,
+                                               pool_size=self.pool_size)
+        self._fresh_priv = init_viewer_private(cam0)
+
+        # slot -> scene (static block layout) and host-side scheduler
+        # mirrors of the device pool bookkeeping
+        self._scene_of = np.arange(slots) // viewers_per_scene
+        self._pool_cell = np.full((self.num_scenes, self.pool_size), -1,
+                                  np.int64)
+        self._pool_tick = np.full((self.num_scenes, self.pool_size),
+                                  -self.window, np.int64)
+        self._pool_owner = np.full((self.num_scenes, self.pool_size), -1,
+                                   np.int64)
+        self._slot_pool = np.zeros((slots,), np.int64)
+        self._refs = np.zeros((self.num_scenes, self.pool_size), np.int64)
+
         self._slot_cams: list[Camera] = [cam0] * slots
         self._pending_sort: set[int] = set()   # admitted, not yet sorted
         self.sort_log: list[dict] = []         # per-step sort accounting
@@ -120,54 +178,89 @@ class BatchedStepper:
                                # serving loop subtract it for honest fps
 
         self._shade = jax.jit(
-            functools.partial(batched_shade_phase, cfg=cfg),
-            donate_argnums=(1,))
-        self._shade_sub = jax.jit(self._shade_sub_fn, donate_argnums=(1,))
-        self._sort_cohort = jax.jit(self._sort_cohort_fn,
-                                    donate_argnums=(1,))
-        self._admit_one = jax.jit(self._admit_fn, donate_argnums=(0,))
+            functools.partial(batched_shade_phase, cfg=cfg,
+                              viewers_per_scene=viewers_per_scene),
+            donate_argnums=(1, 2))
+        self._shade_sub = jax.jit(self._shade_sub_fn, donate_argnums=(1, 2))
+        self._sort_pool = jax.jit(self._sort_pool_fn, donate_argnums=(1,))
+        self._admit_scene = jax.jit(self._admit_scene_fn,
+                                    donate_argnums=(0, 1))
+        self._admit_priv = jax.jit(self._admit_priv_fn, donate_argnums=(0,))
+        self._occupancy = jax.jit(rc.occupancy)
         self._build_kernel_stages()
+        # static byte accounting for state_metrics()
+        self._pool_entry_bytes = (pytree_nbytes(self.shared.pool)
+                                  // (self.num_scenes * self.pool_size))
+        self._cache_bytes = pytree_nbytes(self.shared.cache)
 
     # -- jitted bodies ------------------------------------------------------
 
-    def _sort_cohort_fn(self, scene, states, cams, idx, tgt):
-        """Gather the due cohort, sort it, scatter the SortShared back.
+    def _sort_pool_fn(self, scene, shared, priv, cams, slot_idx, scene_tgt,
+                      pool_tgt, cells, tick):
+        """Run the elected leaders' sorts and scatter the entries into the
+        scene pools.
 
-        ``idx`` [C] int32 source slots (padded with duplicates of a real
-        slot); ``tgt`` [C] int32 scatter targets — ``self.slots`` (out of
-        bounds, dropped) for padding lanes.  States are donated: all leaves
-        except the updated ``shared`` alias straight through.
+        ``slot_idx`` [W] int32 leader slots (padded with duplicates of a
+        real slot); ``scene_tgt``/``pool_tgt`` [W] int32 scatter targets —
+        ``num_scenes`` (out of bounds, dropped) for padding lanes.  Shared
+        state is donated: all leaves except the updated pool alias straight
+        through; privates are read-only (pose prediction inputs).
         """
-        sub_states = jax.tree.map(lambda x: x[idx], states)
-        sub_cams = jax.tree.map(lambda x: x[idx], cams)
-        shared = batched_sort_phase(scene, sub_states, sub_cams, self.cfg)
-        new_shared = jax.tree.map(
-            lambda full, upd: full.at[tgt].set(upd, mode='drop'),
-            states.shared, shared)
-        return dataclasses.replace(states, shared=new_shared)
+        sub_priv = jax.tree.map(lambda x: x[slot_idx], priv)
+        sub_cams = jax.tree.map(lambda x: x[slot_idx], cams)
+        entries = batched_sort_phase(scene, sub_priv, sub_cams, self.cfg)
+        pool = jax.tree.map(
+            lambda full, upd: full.at[scene_tgt, pool_tgt].set(upd,
+                                                               mode='drop'),
+            shared.pool, entries)
+        return dataclasses.replace(
+            shared, pool=pool,
+            pool_cell=shared.pool_cell.at[scene_tgt, pool_tgt].set(
+                cells, mode='drop'),
+            pool_tick=shared.pool_tick.at[scene_tgt, pool_tgt].set(
+                tick, mode='drop'))
 
-    def _shade_sub_fn(self, scene, states, cams, sorted_mask, idx, tgt,
-                      act_sub):
-        """Active-prefix shade: gather the ``idx`` slots, shade only them,
-        scatter the advanced states back.  ``idx`` [B] source slots (padded
-        with duplicates), ``tgt`` [B] scatter targets (``self.slots`` =
-        dropped, for padding lanes), ``act_sub`` [B] bool (False for padding,
-        which therefore contributes nothing and is dropped on scatter).
-        Idle slots' states pass through untouched.
+    def _shade_sub_fn(self, scene, shared, priv, cams, sorted_mask,
+                      scene_idx, scene_tgt, slot_idx, slot_tgt, act_sub):
+        """Active-scene-prefix shade: gather the ``scene_idx`` scene blocks
+        (and their ``slot_idx`` slots), shade only them, scatter the
+        advanced state back.  ``scene_tgt``/``slot_tgt`` use
+        ``num_scenes``/``slots`` (= dropped) for padding lanes; ``act_sub``
+        [B*V] bool is False for padding and for idle slots inside active
+        scenes.  Untouched scenes' state passes through unchanged.
         """
-        sub_states = jax.tree.map(lambda x: x[idx], states)
-        sub_cams = jax.tree.map(lambda x: x[idx], cams)
-        new_sub, images, stats = batched_shade_phase(
-            scene, sub_states, sub_cams, sorted_mask[idx], act_sub, self.cfg)
-        new_states = jax.tree.map(
-            lambda full, upd: full.at[tgt].set(upd, mode='drop'),
-            states, new_sub)
-        return new_states, images, stats
+        sub_shared = jax.tree.map(lambda x: x[scene_idx], shared)
+        sub_priv = jax.tree.map(lambda x: x[slot_idx], priv)
+        sub_cams = jax.tree.map(lambda x: x[slot_idx], cams)
+        new_sh, new_pr, images, stats = batched_shade_phase(
+            scene, sub_shared, sub_priv, sub_cams, sorted_mask[slot_idx],
+            act_sub, self.cfg, self.viewers_per_scene)
+        shared2 = jax.tree.map(
+            lambda full, upd: full.at[scene_tgt].set(upd, mode='drop'),
+            shared, new_sh)
+        priv2 = jax.tree.map(
+            lambda full, upd: full.at[slot_tgt].set(upd, mode='drop'),
+            priv, new_pr)
+        return shared2, priv2, images, stats
 
     @staticmethod
-    def _admit_fn(states, fresh, slot):
+    def _admit_scene_fn(shared, priv, fresh_shared, fresh_priv, scene_i,
+                        slot):
+        """Private-mode admit: cold-start the slot's whole scene (cache +
+        pool) and its private state — exactly the pre-split semantics."""
+        shared = jax.tree.map(
+            lambda full, one: full.at[scene_i].set(one), shared, fresh_shared)
+        priv = jax.tree.map(
+            lambda full, one: full.at[slot].set(one), priv, fresh_priv)
+        return shared, priv
+
+    @staticmethod
+    def _admit_priv_fn(priv, fresh_priv, slot):
+        """Shared-mode admit: only the viewer's private state resets; the
+        scene's cache (and any live pool entries) persist — that is the
+        cross-viewer reuse this engine exists for."""
         return jax.tree.map(lambda full, one: full.at[slot].set(one),
-                            states, fresh)
+                            priv, fresh_priv)
 
     # -- per-kernel profiling ----------------------------------------------
 
@@ -178,27 +271,33 @@ class BatchedStepper:
         split is faithful modulo XLA fusion across stage boundaries."""
         if self.cfg.backend != 'pallas' or not self.cfg.use_rc:
             return
-        from repro.core.pipeline import (batched_prep_features,
-                                         trim_features_slots)
         from repro.kernels import ops
-        cfg, scene = self.cfg, self.scene
+        cfg = self.cfg
+        gauss = self.scene
         tx, ty = self.tiles_x, self.tiles_y
         chunk = cfg.shade_chunk
+        v = self.viewers_per_scene
+        c = self.num_scenes
 
-        def prep(states, cams):
-            feats_b = batched_prep_features(scene, states, cams, cfg)
+        def prep(shared, priv, cams):
+            feats_b = batched_prep_features(gauss, shared, priv, cams, cfg, v)
             feats_b = trim_features_slots(feats_b, tx)
             return ops.pad_features_slots(feats_b, chunk)
 
-        def probe(caches, st_a):
+        def probe(caches, st_a, live):
             ids_g = jax.vmap(
                 lambda r: regroup(r, tx, ty, cfg.group_tiles))(st_a.record)
-            hit_g, _, _, _ = jax.vmap(
-                lambda c, i: ops.rc_probe(c, i, cfg.cache))(caches, ids_g)
+            ids_cv = ids_g.reshape(c, v, *ids_g.shape[1:])
+            live_cv = live.reshape(c, v)
+            hit_cv, _, _, _ = jax.vmap(
+                lambda cc, ii, lv: ops.rc_probe_multi(cc, ii, cfg.cache,
+                                                      live=lv)
+            )(caches, ids_cv, live_cv)
             hit = jax.vmap(
                 lambda h: ungroup(h[..., None], tx, ty,
-                                  cfg.group_tiles)[..., 0])(hit_g)
-            return hit, ids_g, hit_g
+                                  cfg.group_tiles)[..., 0]
+            )(hit_cv.reshape(len(live), *hit_cv.shape[2:]))
+            return hit, ids_cv, hit_cv, live_cv
 
         def resume(feats_b, st_a, miss):
             t = feats_b.ids.shape[1]
@@ -206,13 +305,14 @@ class BatchedStepper:
                 feats_b, tx, st_a, miss, t_img=t, k_record=cfg.k_record,
                 chunk=chunk, bg=cfg.bg)
 
-        def insert(caches, ids_g, colors, hit_g):
+        def insert(caches, ids_cv, colors, hit_cv, live_cv):
             raw_g = jax.vmap(
-                lambda c: regroup(c, tx, ty, cfg.group_tiles))(colors)
+                lambda cl: regroup(cl, tx, ty, cfg.group_tiles))(colors)
+            raw_cv = raw_g.reshape(c, v, *raw_g.shape[1:])
             return jax.vmap(
-                lambda c, i, r, h: rc.insert_all_groups(c, i, r, ~h,
-                                                        cfg.cache)
-            )(caches, ids_g, raw_g, hit_g)
+                lambda cc, ii, rr, dd: rc.insert_all_groups_multi(
+                    cc, ii, rr, dd, cfg.cache)
+            )(caches, ids_cv, raw_cv, ~hit_cv & live_cv[:, :, None, None])
 
         self._k_prep = jax.jit(prep)
         self._k_prefix = jax.jit(
@@ -222,8 +322,8 @@ class BatchedStepper:
         self._k_resume = jax.jit(resume)
         self._k_insert = jax.jit(insert)
 
-    def _profile_kernels(self, states: ViewerState, cams: Camera,
-                         active_mask: jax.Array) -> dict:
+    def _profile_kernels(self, shared: SceneShared, priv: ViewerPrivate,
+                         cams: Camera, active_mask: jax.Array) -> dict:
         """Time the decomposed shade stages on a pre-shade state copy."""
         ms = {}
 
@@ -234,36 +334,199 @@ class BatchedStepper:
             ms[name] = (time.perf_counter() - t0) * 1e3
             return out
 
-        feats_b = timed('prep', self._k_prep, states, cams)
+        feats_b = timed('prep', self._k_prep, shared, priv, cams)
         st_a = timed('prefix', self._k_prefix, feats_b, active_mask)
-        hit, ids_g, hit_g = timed('lookup', self._k_lookup,
-                                  states.cache, st_a)
+        hit, ids_cv, hit_cv, live_cv = timed('lookup', self._k_lookup,
+                                             shared.cache, st_a, active_mask)
         miss = ~hit & active_mask[:, None, None]
         colors, _, _ = timed('resume', self._k_resume, feats_b, st_a, miss)
-        timed('insert', self._k_insert, states.cache, ids_g, colors, hit_g)
+        timed('insert', self._k_insert, shared.cache, ids_cv, colors,
+              hit_cv, live_cv)
         return ms
 
     # -- scheduling ---------------------------------------------------------
 
+    def reset(self) -> None:
+        """Cold-start every scene and viewer WITHOUT recompiling: fresh
+        fleet state, pool bookkeeping and tick counter on the already-jitted
+        callables.  Benchmarks use this between repetitions — in shared mode
+        ``admit`` deliberately keeps scene caches warm, so only a reset
+        separates repetitions honestly."""
+        self.shared, self.priv = init_fleet(
+            self.scene, self.cfg, self._fresh_priv.prev_cam, self.slots,
+            viewers_per_scene=self.viewers_per_scene,
+            pool_size=self.pool_size)
+        self._pool_cell[:] = -1
+        self._pool_tick[:] = -self.window
+        self._pool_owner[:] = -1
+        self._slot_pool[:] = 0
+        self._refs[:] = 0
+        self._pending_sort.clear()
+        self.global_tick = 0
+        self.sort_log = []
+        self.last_timing = None
+
     def admit(self, slot: int) -> None:
-        self.states = self._admit_one(self.states, self._fresh,
-                                      jnp.int32(slot))
+        # fresh templates are read (not donated) by the admit scatters, so
+        # they stay valid across admits without copies
+        if self.viewers_per_scene == 1:
+            scene_i = int(self._scene_of[slot])
+            self.shared, self.priv = self._admit_scene(
+                self.shared, self.priv, self._fresh_shared,
+                self._fresh_priv, jnp.int32(scene_i), jnp.int32(slot))
+            self._pool_cell[scene_i] = -1
+            self._pool_tick[scene_i] = -self.window
+            self._pool_owner[scene_i] = -1
+        else:
+            self.priv = self._admit_priv(self.priv, self._fresh_priv,
+                                         jnp.int32(slot))
+        self._slot_pool[slot] = 0
         # The slot's camera is only known at the next step(): run its
         # sort-on-admit there, outside the scheduled per-tick cohort.
         self._pending_sort.add(slot)
 
-    def _due_cohort(self, active: set, exclude: set) -> list[int]:
+    def _due_scheduled(self, active: set, exclude: set) -> list[int]:
         r = self.global_tick % self.window
         return [i for i in range(self.slots)
                 if i % self.window == r and i in active
                 and i not in exclude]
 
-    def _run_sort(self, cams_b: Camera, due: list[int]) -> None:
-        pad = self.cohort - len(due)
-        idx = jnp.asarray(due + [due[0]] * pad, jnp.int32)
-        tgt = jnp.asarray(due + [self.slots] * pad, jnp.int32)
-        self.states = self._sort_cohort(self.scene, self.states, cams_b,
-                                        idx, tgt)
+    def _plan_groups(self, due: list[int], active: set,
+                     cells: dict[int, int]) -> list[_SortGroup]:
+        """Group the due slots by (scene, pose cell), elect leaders, pick
+        pool entries, and decide which groups actually sort.
+
+        Deterministic given (slot -> cell, pool bookkeeping): groups are
+        processed in (scene, leader) order, entry allocation prefers the
+        entry already holding the cell, then the lowest-index free entry
+        (refs counted over active non-due slots plus earlier groups).  A
+        group *adopts* without sorting iff its cell's entry is fresh
+        (sorted within the window) and owned by a still-active slot outside
+        the group that is still in that cell — so a lone viewer (or any
+        private-mode slot) always sorts on its own cadence, bit-identical
+        to the cohort scheduler.
+
+        Non-due active slots of the same scene whose *current* cell matches
+        a group's ride along onto its entry ("riders"): they were going to
+        render this cell from an older buffer of their own; consolidating
+        them onto the freshly sorted (strictly fresher, same-cell, so
+        margin-equivalent) entry keeps co-located fleets at one live buffer
+        per cell instead of one per cadence phase.  Riders do not count as
+        sorted — their cadence is untouched.
+        """
+        groups: dict[tuple[int, int], list[int]] = {}
+        for i in due:
+            groups.setdefault((int(self._scene_of[i]), cells[i]),
+                              []).append(i)
+        rider_pool: dict[tuple[int, int], list[int]] = {}
+        for i in sorted(active):
+            key = (int(self._scene_of[i]), cells[i])
+            if i not in due and key in groups:
+                rider_pool.setdefault(key, []).append(i)
+
+        refs = np.zeros((self.num_scenes, self.pool_size), np.int64)
+        for i in active:
+            if i not in due and (int(self._scene_of[i]), cells[i]) \
+                    not in groups:
+                refs[self._scene_of[i], self._slot_pool[i]] += 1
+        claimed: set[tuple[int, int]] = set()
+        planned = []
+        for (scene_i, cell), members in sorted(groups.items(),
+                                               key=lambda kv: min(kv[1])):
+            leader = min(members)
+            riders = tuple(rider_pool.get((scene_i, cell), ()))
+            # an entry still tagged with this cell is only reusable if no
+            # earlier group claimed it this tick (a stale held entry with
+            # zero refs is fair game for another group's free-entry search;
+            # reusing it anyway would scatter two sorts into one slot)
+            held = [int(p)
+                    for p in np.flatnonzero(self._pool_cell[scene_i] == cell)
+                    if (scene_i, int(p)) not in claimed]
+            entry = held[0] if held else -1
+            if entry >= 0:
+                owner = int(self._pool_owner[scene_i, entry])
+                fresh = (self.global_tick - self._pool_tick[scene_i, entry]
+                         < self.window)
+                owner_ok = (owner in active and owner not in members
+                            and cells.get(owner) == cell)
+                if fresh and owner_ok:
+                    planned.append(_SortGroup(scene_i, cell, leader,
+                                              tuple(members), riders,
+                                              entry, False))
+                    claimed.add((scene_i, entry))
+                    refs[scene_i, entry] += len(members) + len(riders)
+                    continue
+            if entry < 0:
+                free = [p for p in range(self.pool_size)
+                        if refs[scene_i, p] == 0
+                        and (scene_i, p) not in claimed]
+                # a free entry always exists (each slot references at most
+                # one entry and the pool holds one per slot); fall back to
+                # overwriting the leader's current entry defensively
+                entry = free[0] if free else int(self._slot_pool[leader])
+            planned.append(_SortGroup(scene_i, cell, leader, tuple(members),
+                                      riders, entry, True))
+            claimed.add((scene_i, entry))
+            refs[scene_i, entry] += len(members) + len(riders)
+        return planned
+
+    def _run_sorts(self, cam_b: Camera, groups: list[_SortGroup]) -> None:
+        """Execute the sorting groups' leader sorts, ``cohort`` at a time."""
+        tick = jnp.int32(self.global_tick)
+        for i in range(0, len(groups), self.cohort):
+            batch = groups[i:i + self.cohort]
+            pad = self.cohort - len(batch)
+            slot_idx = jnp.asarray([g.leader for g in batch]
+                                   + [batch[0].leader] * pad, jnp.int32)
+            scene_tgt = jnp.asarray([g.scene for g in batch]
+                                    + [self.num_scenes] * pad, jnp.int32)
+            pool_tgt = jnp.asarray([g.entry for g in batch] + [0] * pad,
+                                   jnp.int32)
+            cell_keys = jnp.asarray([g.cell for g in batch] + [0] * pad,
+                                    jnp.int32)
+            self.shared = self._sort_pool(self.scene, self.shared, self.priv,
+                                          cam_b, slot_idx, scene_tgt,
+                                          pool_tgt, cell_keys, tick)
+        for g in groups:
+            self._pool_cell[g.scene, g.entry] = g.cell
+            self._pool_tick[g.scene, g.entry] = self.global_tick
+            self._pool_owner[g.scene, g.entry] = g.leader
+
+    def _apply_assignments(self, groups: list[_SortGroup],
+                           active: set) -> None:
+        """Point every group member at its entry (host mirrors + device
+        ``ViewerPrivate``) and refresh the pool refcounts."""
+        slots, pools, cellv = [], [], []
+        for g in groups:
+            for m in g.members + g.riders:
+                self._slot_pool[m] = g.entry
+                slots.append(m)
+                pools.append(g.entry)
+                cellv.append(g.cell)
+        if slots:
+            idx = jnp.asarray(slots, jnp.int32)
+            self.priv = dataclasses.replace(
+                self.priv,
+                pool_idx=self.priv.pool_idx.at[idx].set(
+                    jnp.asarray(pools, jnp.int32)),
+                cell_id=self.priv.cell_id.at[idx].set(
+                    jnp.asarray(cellv, jnp.int32)))
+        refs = np.zeros((self.num_scenes, self.pool_size), np.int64)
+        for i in active:
+            refs[self._scene_of[i], self._slot_pool[i]] += 1
+        self._refs = refs
+        self.shared = dataclasses.replace(
+            self.shared, pool_refs=jnp.asarray(refs, jnp.int32))
+
+    def _slot_cell_key(self, slot: int) -> int:
+        """Pose-cell key for a slot's current camera.  In private mode
+        (one viewer per scene) cells are moot — the slot id keys its own
+        singleton group, sparing the quantization work."""
+        if self.viewers_per_scene == 1:
+            return slot
+        return posecell.pose_cell_key(self._slot_cams[slot],
+                                      cell_size=self.cell_size,
+                                      ang_bins=self.cell_ang_bins)
 
     def step(self, cams: dict[int, Camera]) -> dict:
         if not cams:
@@ -274,25 +537,36 @@ class BatchedStepper:
         active = set(cams)
 
         t0 = time.perf_counter()
-        n_admit = n_sched = 0
+        n_admit = n_sched = n_joined = 0
         if self.cfg.use_s2:
-            # Sort-on-admit, outside the tick's scheduled cohort: newly
-            # admitted slots must not render the zero-filled SortShared.
+            cells = {i: self._slot_cell_key(i) for i in active}
+            # Sort-on-admit outside the tick's scheduled cohort: newly
+            # admitted slots must not render a stale or zero-filled entry.
             admits = sorted(self._pending_sort & active)
-            for i in range(0, len(admits), self.cohort):
-                self._run_sort(cam_b, admits[i:i + self.cohort])
+            sched = self._due_scheduled(active, exclude=set(admits))
+            due = sorted(set(admits) | set(sched))
+            groups = self._plan_groups(due, active, cells)
+            sorting = [g for g in groups if g.sorts]
+            if sorting:
+                self._run_sorts(cam_b, sorting)
+            self._apply_assignments(groups, active)
             self._pending_sort -= active
-            n_admit = len(admits)
-            # The scheduled cohort: slot i sorts when tick % window == i %
-            # window — at most ceil(S/window) slots, one small jitted call.
-            # Slots that just sorted on admit skip their scheduled turn.
-            due = self._due_cohort(active, exclude=set(admits))
-            if due:
-                self._run_sort(cam_b, due)
-            n_sched = len(due)
-            sorted_set = set(admits) | set(due)
-            if sorted_set:
-                jax.block_until_ready(self.states.shared.lists.indices)
+            admit_set = set(admits)
+            n_admit = sum(1 for g in sorting if g.leader in admit_set)
+            n_sched = len(sorting) - n_admit
+            n_joined = (sum(len(g.members) for g in groups if not g.sorts)
+                        + sum(len(g.riders) for g in groups))
+            # Two deliberately different telemetry views of "sorted":
+            # per-session ``sorted_this_frame`` flags every DUE slot — it
+            # reached its cadence point and renders from a sort refreshed
+            # for its cell this window (executed by it or adopted from the
+            # group leader), so per-viewer sorts_per_frame stays ~1/window.
+            # Tick-level ``sorted_slots``/sort_log count only EXECUTED
+            # sorts — the fleet's cost.  Their ratio IS the sharing win.
+            # (Riders are not due and not flagged: cadence untouched.)
+            sorted_set = set(due)
+            if sorting:
+                jax.block_until_ready(self.shared.pool.lists.indices)
         else:
             # Baseline mode runs Projection+Sorting for every active lane
             # every frame (inside shade_phase, so its cost lands in
@@ -311,37 +585,51 @@ class BatchedStepper:
                       and self.cfg.backend == 'pallas' and self.cfg.use_rc
                       and self.global_tick % self.profile_every == 0)
         if do_profile:
-            # the shade call donates self.states — keep a copy to profile
+            # the shade call donates the state — keep a copy to profile
             t_prof = time.perf_counter()
-            prof_states = copy_pytree(self.states)
-            jax.block_until_ready(prof_states.cache.tags)
+            prof_shared = copy_pytree(self.shared)
+            prof_priv = copy_pytree(self.priv)
+            jax.block_until_ready(prof_shared.cache.tags)
             self.profile_s += time.perf_counter() - t_prof
 
-        active_list = sorted(active)
+        v = self.viewers_per_scene
+        active_scenes = sorted({int(self._scene_of[i]) for i in active})
         t1 = time.perf_counter()
-        if len(active_list) == self.slots:
-            # every slot live: full-width shade, no gather/scatter
-            active_mask = jnp.ones((self.slots,), bool)
-            self.states, images, stats = self._shade(
-                self.scene, self.states, cam_b, sorted_mask, active_mask)
-            pos = {slot: slot for slot in active_list}
+        if len(active_scenes) == self.num_scenes:
+            # every scene live: full-width shade, no gather/scatter (idle
+            # slots inside a scene still pass active=False)
+            active_mask = jnp.asarray([i in active
+                                       for i in range(self.slots)], bool)
+            self.shared, self.priv, images, stats = self._shade(
+                self.scene, self.shared, self.priv, cam_b, sorted_mask,
+                active_mask)
+            pos = {slot: slot for slot in active}
         else:
-            # idle-lane compaction: shade only the active prefix, padded to
-            # a power-of-two bucket so shade widths compile at most log2(S)
-            # times; idle slots are untouched (no work, no state advance)
+            # idle-scene compaction: shade only the active scene blocks,
+            # padded to a power-of-two bucket so shade widths compile at
+            # most log2(C) times; idle scenes are untouched
             bucket = 1
-            while bucket < len(active_list):
+            while bucket < len(active_scenes):
                 bucket *= 2
-            bucket = min(bucket, self.slots)
-            pad = bucket - len(active_list)
-            idx = jnp.asarray(active_list + [active_list[0]] * pad,
-                              jnp.int32)
-            tgt = jnp.asarray(active_list + [self.slots] * pad, jnp.int32)
-            act_sub = jnp.asarray([True] * len(active_list) + [False] * pad)
-            self.states, images, stats = self._shade_sub(
-                self.scene, self.states, cam_b, sorted_mask, idx, tgt,
-                act_sub)
-            pos = {slot: j for j, slot in enumerate(active_list)}
+            bucket = min(bucket, self.num_scenes)
+            pad = bucket - len(active_scenes)
+            scenes_g = active_scenes + [active_scenes[0]] * pad
+            slots_g = [c * v + j for c in scenes_g for j in range(v)]
+            scene_idx = jnp.asarray(scenes_g, jnp.int32)
+            scene_tgt = jnp.asarray(active_scenes + [self.num_scenes] * pad,
+                                    jnp.int32)
+            slot_idx = jnp.asarray(slots_g, jnp.int32)
+            slot_tgt = jnp.asarray(
+                [c * v + j for c in active_scenes for j in range(v)]
+                + [self.slots] * (pad * v), jnp.int32)
+            act_sub = jnp.asarray(
+                [i < len(active_scenes) * v and slots_g[i] in active
+                 for i in range(bucket * v)])
+            self.shared, self.priv, images, stats = self._shade_sub(
+                self.scene, self.shared, self.priv, cam_b, sorted_mask,
+                scene_idx, scene_tgt, slot_idx, slot_tgt, act_sub)
+            pos = {slot: j for j, slot in enumerate(slots_g[:len(
+                active_scenes) * v]) if slot in active}
         jax.block_until_ready(images)
         t2 = time.perf_counter()
 
@@ -350,12 +638,13 @@ class BatchedStepper:
             t_prof = time.perf_counter()
             active_mask_full = jnp.asarray(
                 [i in active for i in range(self.slots)], bool)
-            kernel_ms = self._profile_kernels(prof_states, cam_b,
+            kernel_ms = self._profile_kernels(prof_shared, prof_priv, cam_b,
                                               active_mask_full)
             self.profile_s += time.perf_counter() - t_prof
 
         self.global_tick += 1
-        self.sort_log.append({'scheduled': n_sched, 'admit': n_admit})
+        self.sort_log.append({'scheduled': n_sched, 'admit': n_admit,
+                              'joined': n_joined})
         timing = TickTiming(latency_s=t2 - t0, sort_ms=sort_s * 1e3,
                             shade_ms=(t2 - t1) * 1e3,
                             sorted_slots=n_sched + n_admit,
@@ -367,10 +656,43 @@ class BatchedStepper:
                        timing)
                 for slot in cams}
 
+    # -- telemetry ----------------------------------------------------------
+
+    def state_metrics(self) -> dict:
+        """Occupancy and state-memory footprint of the shared state.
+
+        ``sort_pool_live`` counts entries with live referencing viewers
+        (the number of distinct (scene, pose-cell) sorts actually held);
+        the ``*_bytes`` figures charge live pool entries plus the scene
+        caches, while ``*_alloc_bytes`` report what the device actually
+        allocates — the pool still reserves ``pool_size`` entries per scene
+        (the every-viewer-its-own-cell worst case; see ROADMAP), so only
+        the cache share of the collapse is an allocation saving today."""
+        live = int((self._refs > 0).sum())
+        pool_bytes = live * self._pool_entry_bytes
+        pool_alloc = (self.num_scenes * self.pool_size
+                      * self._pool_entry_bytes)
+        return {
+            # dispatched async, NOT synced here: the serving tick must not
+            # block on a telemetry reduction (tick_rollup converts to float
+            # after the timed loop)
+            'occupancy': self._occupancy(self.shared.cache),
+            'sort_pool_live': live,
+            'sort_pool_total': self.num_scenes * self.pool_size,
+            'sort_pool_bytes': pool_bytes,
+            'sort_pool_alloc_bytes': pool_alloc,
+            'cache_bytes': self._cache_bytes,
+            'state_bytes': pool_bytes + self._cache_bytes,
+            'state_alloc_bytes': pool_alloc + self._cache_bytes,
+        }
+
 
 class SequentialStepper:
     """Reference engine: one single-viewer jitted step per active slot,
-    per-viewer sort cadence (``frame_idx % window``)."""
+    per-viewer sort cadence (``frame_idx % window``), fully private state
+    (each slot carries its own scene: cache + pool-of-one)."""
+
+    viewers_per_scene = 1
 
     def __init__(self, scene: GaussianScene, cfg: LuminaConfig,
                  cam0: Camera, slots: int, profile_every: int = 0):
@@ -388,9 +710,19 @@ class SequentialStepper:
         self.sort_log: list[dict] = []
         self.last_timing: TickTiming | None = None
         self.profile_s = 0.0
+        self._last_active = 0
+        self._pool_entry_bytes = pytree_nbytes(self._fresh.scene_shared.pool)
+        self._cache_bytes = pytree_nbytes(self._fresh.scene_shared.cache)
 
     def admit(self, slot: int) -> None:
         self._states[slot] = copy_pytree(self._fresh)
+
+    def reset(self) -> None:
+        """Cold-start every slot (see ``BatchedStepper.reset``)."""
+        self._states = [copy_pytree(self._fresh) for _ in range(self.slots)]
+        self.sort_log = []
+        self.last_timing = None
+        self._last_active = 0
 
     def step(self, cams: dict[int, Camera]) -> dict:
         out = {}
@@ -411,9 +743,29 @@ class SequentialStepper:
                          TickTiming(latency_s=dt, sort_ms=0.0,
                                     shade_ms=dt * 1e3,
                                     sorted_slots=sorted_flag))
-        self.sort_log.append({'scheduled': sorts, 'admit': 0})
+        self.sort_log.append({'scheduled': sorts, 'admit': 0, 'joined': 0})
         self.last_timing = TickTiming(
             latency_s=time.perf_counter() - t_start, sort_ms=0.0,
             shade_ms=(time.perf_counter() - t_start) * 1e3,
             sorted_slots=sorts)
+        self._last_active = len(cams)
         return out
+
+    def state_metrics(self) -> dict:
+        """Private-state footprint: every occupied slot holds a full sort
+        buffer and a full cache — the O(S) memory the scene-shared engine
+        exists to collapse; the engine allocates all ``slots`` copies up
+        front (``*_alloc_bytes``).  (No occupancy scan: S separate device
+        reductions per tick would tax the baseline's own timing.)"""
+        live = self._last_active
+        pool_bytes = live * self._pool_entry_bytes
+        per_slot = self._pool_entry_bytes + self._cache_bytes
+        return {
+            'sort_pool_live': live,
+            'sort_pool_total': self.slots,
+            'sort_pool_bytes': pool_bytes,
+            'sort_pool_alloc_bytes': self._pool_entry_bytes * self.slots,
+            'cache_bytes': self._cache_bytes * live,
+            'state_bytes': pool_bytes + self._cache_bytes * live,
+            'state_alloc_bytes': per_slot * self.slots,
+        }

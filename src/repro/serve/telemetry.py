@@ -5,7 +5,11 @@ the batched tick it rode in, split into the tick's **sort-phase** and
 **shade-phase** wall time, radiance-cache hit rate, whether its slot ran a
 speculative sort) and summarises them into the numbers an operator watches:
 frames/sec, mean hit rate, p50/p99 frame latency, the realised sort cadence
-(sorts per frame; 1/window when S^2 is keeping up) and mean per-phase cost.
+(sorts per frame; 1/window when S^2 is keeping up — this counts sort
+*refreshes the viewer consumed*, scheduled or adopted from a pose-cell
+leader, so it stays ~1/window even when scene-sharing means far fewer
+sorts *executed*; the executed count lives in the tick rollup) and mean
+per-phase cost.
 The per-tick sorted-slot counts live on ``SessionManager.tick_log`` — see
 ``tick_rollup`` for the fleet-level view the cohort scheduler is judged by
 (max sorted slots per tick <= ceil(S/window) after warmup).
@@ -122,6 +126,13 @@ def tick_rollup(tick_log: list[dict], warmup_ticks: int = 0) -> dict:
     rollup's ``kernel_ms`` maps each kernel stage — prep / prefix / lookup /
     resume / insert — to its mean milliseconds over the profiled ticks, so
     the operator sees *where* shade time goes, not just its total.
+
+    When ticks carry the stepper's state metrics (scene-shared serving) the
+    rollup adds the radiance-cache warm-up view (``mean_occupancy`` /
+    ``last_occupancy``) and the state-memory footprint: the peak number of
+    live sort-pool entries (``max_sort_pool_live`` — the O(distinct pose
+    cells) figure the scene-shared pool exists to shrink below O(S)) and
+    the final cache/sort-pool byte split.
     """
     log = [t for t in tick_log if t['tick'] >= warmup_ticks]
     if not log:
@@ -134,7 +145,7 @@ def tick_rollup(tick_log: list[dict], warmup_ticks: int = 0) -> dict:
     if profiled:
         for key in profiled[0]:
             kernel_ms[key] = float(np.mean([p[key] for p in profiled]))
-    return {
+    roll = {
         'ticks': len(log),
         'mean_sorts_per_tick': float(np.mean(sorts)),
         'max_sorts_per_tick': int(max(sorts)),
@@ -142,3 +153,21 @@ def tick_rollup(tick_log: list[dict], warmup_ticks: int = 0) -> dict:
         'mean_shade_ms': float(np.mean([t['shade_ms'] for t in log])),
         'kernel_ms': kernel_ms,
     }
+    # occupancy values may still be unsynced device scalars (the stepper
+    # defers the host transfer out of the timed serving loop) — float()
+    # here is where they land
+    occ = [float(t['occupancy']) for t in log if 'occupancy' in t]
+    if occ:
+        roll['mean_occupancy'] = float(np.mean(occ))
+        roll['last_occupancy'] = occ[-1]
+    pool = [t['sort_pool_live'] for t in log if 'sort_pool_live' in t]
+    if pool:
+        roll['max_sort_pool_live'] = int(max(pool))
+    # byte figures are PEAKS over the run (staggered workloads drain toward
+    # the end; the final-tick snapshot would understate the footprint)
+    for key in ('sort_pool_bytes', 'sort_pool_alloc_bytes', 'cache_bytes',
+                'state_bytes', 'state_alloc_bytes'):
+        vals = [t[key] for t in log if key in t]
+        if vals:
+            roll[key] = int(max(vals))
+    return roll

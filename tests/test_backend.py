@@ -20,7 +20,7 @@ import pytest
 from repro.core import radiance_cache as rc
 from repro.core.gaussians import TRANSMITTANCE_EPS
 from repro.core.pipeline import (LuminaConfig, LuminSys, batched_shade_phase,
-                                 init_viewer_state)
+                                 init_fleet)
 from repro.core.projection import project
 from repro.core.sorting import sort_scene
 from repro.core.tiling import gather_tile_features
@@ -76,19 +76,15 @@ def test_live_mask_idle_lane_contributes_nothing(small_scene, backend):
     cfg = LuminaConfig(capacity=128, window=3, backend=backend)
     traj = orbit_trajectory(2, width=64, height_px=64)
     s = 3
-    states = jax.tree.map(
-        lambda *x: jnp.stack(x),
-        *[init_viewer_state(small_scene, cfg, traj[0]) for _ in range(s)])
+    shared, priv = init_fleet(small_scene, cfg, traj[0], slots=s)
     cams = stack_cameras([traj[0]] * s)
     shade = jax.jit(functools.partial(batched_shade_phase, cfg=cfg))
     ones = jnp.ones((s,), jnp.float32)
-    _, img_all, _ = shade(small_scene, states, cams, ones,
-                          jnp.ones((s,), bool))
-    states2 = jax.tree.map(
-        lambda *x: jnp.stack(x),
-        *[init_viewer_state(small_scene, cfg, traj[0]) for _ in range(s)])
-    _, img_mask, stats = shade(small_scene, states2, cams, ones,
-                               jnp.asarray([True, False, True]))
+    _, _, img_all, _ = shade(small_scene, shared, priv, cams, ones,
+                             jnp.ones((s,), bool))
+    shared2, priv2 = init_fleet(small_scene, cfg, traj[0], slots=s)
+    _, _, img_mask, stats = shade(small_scene, shared2, priv2, cams, ones,
+                                  jnp.asarray([True, False, True]))
     # dead lane: zero iterated work, zero hits
     assert float(stats.mean_iterated[1]) == 0.0
     assert float(stats.sig_frac[1]) == 0.0
@@ -230,9 +226,7 @@ def test_slot_batched_shade_matches_per_slot(small_scene):
     cfg = LuminaConfig(capacity=128, window=2, backend='pallas')
     trajs = [orbit_trajectory(frames, width=64, height_px=64,
                               start_deg=120.0 * i) for i in range(s)]
-    states = jax.tree.map(
-        lambda *x: jnp.stack(x),
-        *[init_viewer_state(small_scene, cfg, t[0]) for t in trajs])
+    shared, priv = init_fleet(small_scene, cfg, trajs[0][0], slots=s)
     refs = [LuminSys(small_scene, cfg, t[0]) for t in trajs]
     from repro.core.pipeline import batched_sort_phase
     sortp = jax.jit(functools.partial(batched_sort_phase, cfg=cfg))
@@ -242,17 +236,18 @@ def test_slot_batched_shade_matches_per_slot(small_scene):
     for f in range(frames):
         cams = stack_cameras([t[f] for t in trajs])
         if f % cfg.window == 0:
-            states = dataclasses.replace(states,
-                                         shared=sortp(small_scene, states,
-                                                      cams))
-        states, images, stats = shade(small_scene, states, cams, sm, am)
+            entries = sortp(small_scene, priv, cams)       # [S, ...]
+            shared = dataclasses.replace(shared, pool=jax.tree.map(
+                lambda p, e: p.at[:, 0].set(e), shared.pool, entries))
+        shared, priv, images, stats = shade(small_scene, shared, priv, cams,
+                                            sm, am)
         for v in range(s):
             img_r, st_r = refs[v].step(trajs[v][f])
             _ulp_close(images[v], img_r, msg=f'slot {v} frame {f}')
             assert float(stats.hit_rate[v]) == float(st_r.hit_rate)
     for v in range(s):
         np.testing.assert_array_equal(
-            np.asarray(jax.tree.map(lambda x: x[v], states.cache).tags),
+            np.asarray(jax.tree.map(lambda x: x[v], shared.cache).tags),
             np.asarray(refs[v].state.cache.tags), err_msg=f'slot {v}')
 
 

@@ -1,0 +1,348 @@
+"""Scene-centric serving: shared radiance caches, the pose-cell sort pool,
+and cross-viewer determinism.
+
+Contracts under test:
+
+* the multi-viewer cache forms (``lookup_all_groups_multi`` /
+  ``insert_all_groups_multi``) evolve one shared cache in deterministic
+  (slot, pixel) order — independent of host-side presentation order, with
+  cross-viewer conflicts won by the lowest slot and duplicate tags landing
+  once — and reduce bit-identically to the private per-viewer functions at
+  V == 1 (tags, values, LRU ages, clock);
+* pose-cell keys quantize deterministically (co-located cameras share a
+  cell, distant ones do not);
+* the scene-shared ``BatchedStepper``: co-located viewers collapse to ONE
+  live sort buffer and one speculative sort per window; a shared scene
+  cache yields a hit rate at least as high as private caches for staggered
+  arrivals; final shared-cache tags are invariant to session submission
+  order.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import posecell
+from repro.core import radiance_cache as rc
+from repro.core.pipeline import LuminaConfig, init_fleet
+from repro.data.trajectory import orbit_trajectory
+from repro.serve.render import build_sessions
+from repro.serve.session import SessionManager, ViewerSession
+from repro.serve.stepper import BatchedStepper
+from repro.serve.telemetry import tick_rollup
+
+CFG = rc.CacheConfig(n_sets=16, n_ways=2, k=3)
+
+
+def _records(key, v, g, b, k, lo=0, hi=400):
+    return jax.random.randint(jax.random.PRNGKey(key), (v, g, b, k), lo, hi,
+                              dtype=jnp.int32)
+
+
+def _rgb_like(ids):
+    v, g, b, _ = ids.shape
+    base = jnp.arange(v * g * b, dtype=jnp.float32).reshape(v, g, b, 1)
+    return jnp.concatenate([base, base + 0.25, base + 0.5], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# radiance_cache multi-viewer forms
+# ---------------------------------------------------------------------------
+
+def test_multi_v1_bitwise_matches_private_forms():
+    """V == 1 shared-cache ops ARE the private ops: tags, values, LRU ages
+    and clock bitwise — the parity anchor for single-viewer serving."""
+    ids = _records(0, 1, 2, 8, CFG.k)
+    rgb = _rgb_like(ids)
+    do = jnp.ones(ids.shape[:3], bool)
+
+    c_priv = rc.init_cache(2, CFG)
+    c_multi = rc.init_cache(2, CFG)
+    c_priv = rc.insert_all_groups(c_priv, ids[0], rgb[0], do[0], CFG)
+    c_multi = rc.insert_all_groups_multi(c_multi, ids, rgb, do, CFG)
+    for field in ('tags', 'values', 'age', 'clock'):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(c_multi, field)),
+            np.asarray(getattr(c_priv, field)), err_msg=field)
+
+    hit_p, val_p, _, _, c_priv = rc.lookup_all_groups(c_priv, ids[0], CFG)
+    hit_m, val_m, _, _, c_multi = rc.lookup_all_groups_multi(
+        c_multi, ids, CFG, live=jnp.ones((1,), bool))
+    np.testing.assert_array_equal(np.asarray(hit_m[0]), np.asarray(hit_p))
+    np.testing.assert_array_equal(np.asarray(val_m[0]), np.asarray(val_p))
+    for field in ('tags', 'values', 'age', 'clock'):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(c_multi, field)),
+            np.asarray(getattr(c_priv, field)), err_msg=f'post-touch {field}')
+
+
+def test_multi_insert_conflict_lowest_slot_wins():
+    """Cross-viewer conflicts resolve by (slot, pixel) order: when two
+    viewers' different records map to the same victim way, the lower slot's
+    record lands — the multi-viewer extension of lowest-pixel-wins."""
+    cfg = rc.CacheConfig(n_sets=1, n_ways=1, k=2, insert_rounds=1)
+    cache = rc.init_cache(1, cfg)
+    ids = jnp.asarray([[[[5, 5]]], [[[6, 6]]]], jnp.int32)   # [V=2,G=1,B=1,k]
+    rgb = _rgb_like(ids)
+    cache = rc.insert_all_groups_multi(cache, ids, rgb,
+                                       jnp.ones((2, 1, 1), bool), cfg)
+    hit, _, _, _, _ = rc.lookup_all_groups_multi(cache, ids, cfg)
+    assert bool(hit[0, 0, 0]) and not bool(hit[1, 0, 0])
+
+
+def test_multi_insert_duplicate_tags_land_once():
+    """Co-located viewers emit identical records; the shared cache stores
+    one entry (insert-round re-probe dedupe), not one per viewer."""
+    cache = rc.init_cache(1, CFG)
+    row = jnp.asarray([[[9, 9, 9]]], jnp.int32)              # [G=1,B=1,k]
+    ids = jnp.stack([row, row, row])                         # [V=3,...]
+    cache = rc.insert_all_groups_multi(cache, ids, _rgb_like(ids),
+                                       jnp.ones((3, 1, 1), bool), CFG)
+    tags = np.asarray(cache.tags[0])
+    n_present = (np.all(tags == np.asarray([9, 9, 9]), axis=-1)).sum()
+    assert n_present == 1
+    # and the stored value is slot 0's (the (slot, pixel)-order winner)
+    hit, val, _, _, _ = rc.lookup_all_groups_multi(cache, ids, CFG)
+    assert bool(np.asarray(hit).all())
+    np.testing.assert_array_equal(np.asarray(val[1, 0, 0]),
+                                  np.asarray(_rgb_like(ids)[0, 0, 0]))
+
+
+def test_multi_insert_deterministic_vs_presentation_order():
+    """The shared-cache result depends only on the slot -> records mapping:
+    feeding the slot-major flattened batch through the plain insert (the
+    documented serial semantics) reproduces the multi form exactly, and
+    repeated evaluation is stable."""
+    ids = _records(7, 3, 2, 8, CFG.k)
+    rgb = _rgb_like(ids)
+    do = jnp.ones(ids.shape[:3], bool)
+    a = rc.insert_all_groups_multi(rc.init_cache(2, CFG), ids, rgb, do, CFG)
+    b = rc.insert_all_groups(rc.init_cache(2, CFG), rc.slot_major(ids),
+                             rc.slot_major(rgb), rc.slot_major(do), CFG)
+    c = rc.insert_all_groups_multi(rc.init_cache(2, CFG), ids, rgb, do, CFG)
+    for field in ('tags', 'values', 'age', 'clock'):
+        np.testing.assert_array_equal(np.asarray(getattr(a, field)),
+                                      np.asarray(getattr(b, field)),
+                                      err_msg=field)
+        np.testing.assert_array_equal(np.asarray(getattr(a, field)),
+                                      np.asarray(getattr(c, field)),
+                                      err_msg=f'restability {field}')
+
+
+def test_multi_lookup_dead_viewer_probes_without_touching():
+    """A dead viewer (idle slot) still reports hits but must not age-bump
+    shared entries — its LRU influence would survive its eviction."""
+    ids = _records(3, 2, 1, 4, CFG.k)
+    rgb = _rgb_like(ids)
+    cache = rc.insert_all_groups_multi(rc.init_cache(1, CFG), ids, rgb,
+                                       jnp.ones(ids.shape[:3], bool), CFG)
+    live = jnp.asarray([True, False])
+    hit_l, _, _, _, c_live = rc.lookup_all_groups_multi(cache, ids, CFG,
+                                                        live=live)
+    hit_a, _, _, _, c_all = rc.lookup_all_groups_multi(cache, ids, CFG)
+    np.testing.assert_array_equal(np.asarray(hit_l), np.asarray(hit_a))
+    # the dead viewer's touches are the only difference
+    assert bool(hit_a[1].any())
+    assert not np.array_equal(np.asarray(c_live.age), np.asarray(c_all.age))
+    # clocks advance identically (age sequence independent of liveness)
+    np.testing.assert_array_equal(np.asarray(c_live.clock),
+                                  np.asarray(c_all.clock))
+
+
+# ---------------------------------------------------------------------------
+# pose cells
+# ---------------------------------------------------------------------------
+
+def test_pose_cell_key_quantizes():
+    traj = orbit_trajectory(2, width=64, height_px=64)
+    far = orbit_trajectory(1, width=64, height_px=64, start_deg=120.0)[0]
+    k0 = posecell.pose_cell_key(traj[0])
+    assert k0 == posecell.pose_cell_key(traj[0])          # deterministic
+    assert 0 <= k0 < 2 ** 31
+    # a sub-cell positive position jitter stays in the cell (keys quantize,
+    # they don't hash raw floats); a 120-degree-away viewer never shares one
+    near = dataclasses.replace(traj[0],
+                               position=traj[0].position + 1e-6)
+    assert posecell.pose_cell_key(near) == k0
+    assert posecell.pose_cell_key(far) != k0
+    # widening the quantum merges consecutive VR-rate frames into one cell
+    assert posecell.pose_cell_key(traj[1], cell_size=1.0, ang_bins=16) == \
+        posecell.pose_cell_key(traj[0], cell_size=1.0, ang_bins=16)
+
+
+def test_pose_cell_poles_do_not_wrap():
+    """Elevation is not periodic: straight-up and straight-down cameras at
+    one position must land in different cells (a modulo wrap would hand one
+    the other's sort — a 180-degree orientation error no margin absorbs)."""
+    from repro.core.camera import look_at, make_camera
+    pos = (0.0, 0.0, 0.0)
+    p_up, q_up = look_at(pos, (0.0, 1.0, 0.0), up=(0.0, 0.0, 1.0))
+    p_dn, q_dn = look_at(pos, (0.0, -1.0, 0.0), up=(0.0, 0.0, 1.0))
+    up = make_camera(p_up, q_up, 60.0, 64, 64)
+    down = make_camera(p_dn, q_dn, 60.0, 64, 64)
+    assert posecell.pose_cell_key(up) != posecell.pose_cell_key(down)
+
+
+# ---------------------------------------------------------------------------
+# the scene-shared serving engine
+# ---------------------------------------------------------------------------
+
+def _run_manager(scene, cfg, sessions, slots, vps):
+    stepper = BatchedStepper(scene, cfg, sessions[0].cams[0], slots,
+                             viewers_per_scene=vps)
+    mgr = SessionManager(stepper, slots)
+    for s in sessions:
+        mgr.submit(s)
+    finished = mgr.run()
+    return stepper, mgr, finished
+
+
+def test_colocated_viewers_share_one_sort_buffer(small_scene):
+    """Four co-located viewers of one scene: ONE live SortShared entry at
+    every tick (vs four under private state), at most one speculative sort
+    per window after warmup, and everyone still renders every frame."""
+    s, frames = 4, 9
+    cfg = LuminaConfig(capacity=256, window=3)
+    sessions = build_sessions(s, frames, width=64, stagger=0,
+                              viewers_per_scene=s)
+    stepper, mgr, finished = _run_manager(small_scene, cfg, sessions, s, s)
+    assert sorted(f.sid for f in finished) == list(range(s))
+    assert all(f.telemetry.frames == frames for f in finished)
+    lives = [t['sort_pool_live'] for t in mgr.tick_log]
+    assert max(lives) == 1, lives
+    # one sort per window for the whole fleet (the sharing win: the private
+    # cohort scheduler would run ceil(S/window) + admit sorts)
+    executed = [e['scheduled'] + e['admit'] for e in stepper.sort_log]
+    assert executed[0] == 1                       # one admit sort for all 4
+    assert sum(executed) <= 1 + (frames // cfg.window) + 1
+    assert max(executed) <= 1
+    joined = sum(e['joined'] for e in stepper.sort_log)
+    assert joined > 0
+    roll = tick_rollup(mgr.tick_log, warmup_ticks=1)
+    assert roll['max_sort_pool_live'] == 1
+    assert roll['state_bytes'] == (roll['cache_bytes']
+                                   + roll['sort_pool_bytes'])
+
+
+def test_shared_cache_hit_rate_beats_private_on_staggered_arrivals(
+        small_scene):
+    """A viewer admitted into a warm scene cache hits immediately; under
+    private state it pays a cold start.  Same workload, same engine, only
+    viewers_per_scene differs."""
+    viewers, frames, stagger = 3, 6, 2
+    cfg = LuminaConfig(capacity=256, window=3)
+
+    def mean_hit(vps):
+        sessions = []
+        for sid in range(viewers):
+            cams = orbit_trajectory(frames, width=64, height_px=64)
+            sessions.append(ViewerSession(sid=sid, cams=cams,
+                                          arrival_tick=sid * stagger,
+                                          scene_id=0))
+        _, _, finished = _run_manager(small_scene, cfg, sessions, viewers,
+                                      vps)
+        return np.mean([f.telemetry.summary()['hit_rate'] for f in finished])
+
+    assert mean_hit(viewers) > mean_hit(1) + 0.05
+
+
+def test_shared_cache_tags_invariant_to_submission_order(small_scene):
+    """Cross-viewer determinism at the engine level: permuting the order
+    co-located sessions are submitted (hence which slots they land in)
+    leaves the final shared-cache tags and values bitwise identical —
+    the (slot, pixel) insert order plus duplicate dedupe make the cache a
+    function of the rendered content, not the admission history."""
+    s, frames = 3, 5
+    cfg = LuminaConfig(capacity=256, window=3)
+
+    def final_cache(order):
+        cams = orbit_trajectory(frames, width=64, height_px=64)
+        sessions = [ViewerSession(sid=sid, cams=list(cams), scene_id=0)
+                    for sid in order]
+        stepper, _, _ = _run_manager(small_scene, cfg, sessions, s, s)
+        return stepper.shared.cache
+
+    a = final_cache([0, 1, 2])
+    b = final_cache([2, 0, 1])
+    np.testing.assert_array_equal(np.asarray(a.tags), np.asarray(b.tags))
+    np.testing.assert_array_equal(np.asarray(a.values),
+                                  np.asarray(b.values))
+
+
+def test_shared_mode_admit_preserves_scene_cache(small_scene):
+    """Shared-mode slot reuse: a new viewer admitted into a warm scene
+    keeps the scene cache (that is the feature); its private state still
+    cold-starts (fresh frame counter -> sort-on-admit)."""
+    cfg = LuminaConfig(capacity=256, window=3)
+    traj = orbit_trajectory(6, width=64, height_px=64)
+    stepper = BatchedStepper(small_scene, cfg, traj[0], slots=2,
+                             viewers_per_scene=2)
+    stepper.admit(0)
+    stepper.admit(1)
+    for f in range(3):
+        stepper.step({0: traj[f], 1: traj[f]})
+    occ_before = float(jax.jit(rc.occupancy)(stepper.shared.cache))
+    assert occ_before > 0.0
+    stepper.admit(0)          # slot reuse mid-flight
+    out = stepper.step({0: traj[0], 1: traj[3]})
+    _, st0, _ = out[0]
+    assert float(st0.sorted_this_frame) == 1.0      # sort-on-admit ran
+    assert float(st0.hit_rate) > 0.5                # warm cache served it
+    occ_after = float(jax.jit(rc.occupancy)(stepper.shared.cache))
+    assert occ_after >= occ_before - 1e-6
+
+
+def test_scene_blocked_admission(small_scene):
+    """Sessions land only in their scene's slot block; a full block queues
+    its sessions without blocking other scenes' admissions."""
+    cfg = LuminaConfig(capacity=256, window=3)
+    cams = orbit_trajectory(4, width=64, height_px=64)
+    # scene 0: three sessions for a two-slot block; scene 1: one session
+    sessions = [ViewerSession(sid=i, cams=list(cams), scene_id=0)
+                for i in range(3)]
+    sessions.append(ViewerSession(sid=3, cams=list(cams), scene_id=1))
+    stepper = BatchedStepper(small_scene, cfg, cams[0], slots=4,
+                             viewers_per_scene=2)
+    mgr = SessionManager(stepper, 4)
+    for s in sessions:
+        mgr.submit(s)
+    mgr.admit_ready()
+    by_slot = {i: s.sid for i, s in enumerate(mgr.slot_session)
+               if s is not None}
+    assert by_slot == {0: 0, 1: 1, 2: 3}     # sid 2 waits for block 0
+    assert [s.sid for s in mgr.pending] == [2]
+    finished = mgr.run()
+    assert sorted(f.sid for f in finished) == [0, 1, 2, 3]
+    assert all(f.telemetry.frames == 4 for f in finished)
+
+
+def test_fleet_rejects_ragged_blocks(small_scene):
+    cams = orbit_trajectory(1, width=64, height_px=64)
+    with pytest.raises(ValueError):
+        BatchedStepper(small_scene, LuminaConfig(), cams[0], slots=3,
+                       viewers_per_scene=2)
+
+
+def test_plan_groups_never_doubles_up_pool_entries(small_scene):
+    """Two sorting groups of one scene must land in distinct pool entries
+    even when a stale held entry (owner evicted, zero refs) is grabbed as
+    free by an earlier group: the later group whose cell the entry still
+    tags must NOT reuse it — two sorts scattered into one slot would leave
+    one group rendering the other cell's tiles."""
+    cams = orbit_trajectory(1, width=64, height_px=64)
+    stepper = BatchedStepper(small_scene, LuminaConfig(window=4), cams[0],
+                             slots=2, viewers_per_scene=2)
+    cell_x, cell_y = 111, 222
+    # entry 0 still tags cell X from an evicted owner; both slots are due:
+    # slot 0 now in cell Y (processed first, lower leader), slot 1 back in X
+    stepper._pool_cell[0, 0] = cell_x
+    stepper._pool_tick[0, 0] = 0
+    stepper._pool_owner[0, 0] = -1
+    stepper.global_tick = 4
+    groups = stepper._plan_groups(due=[0, 1], active={0, 1},
+                                  cells={0: cell_y, 1: cell_x})
+    assert len(groups) == 2 and all(g.sorts for g in groups)
+    entries = [(g.scene, g.entry) for g in groups]
+    assert len(set(entries)) == 2, entries

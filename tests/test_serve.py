@@ -10,9 +10,9 @@ import numpy as np
 import pytest
 
 from repro.core.camera import stack_cameras
-from repro.core.pipeline import (LuminaConfig, LuminSys, batched_render_step,
-                                 init_viewer_state, render_step, shade_phase,
-                                 sort_phase)
+from repro.core.pipeline import (LuminaConfig, LuminSys, ViewerState,
+                                 batched_render_step, init_viewer_state,
+                                 render_step, shade_phase, sort_phase)
 from repro.data.trajectory import orbit_trajectory
 from repro.serve.session import SessionManager, ViewerSession
 from repro.serve.stepper import BatchedStepper, SequentialStepper
@@ -74,10 +74,11 @@ def test_two_phase_composition_matches_render_step(small_scene, cams64):
     shadep = jax.jit(functools.partial(shade_phase, cfg=CFG))
     for f, cam in enumerate(cams64):
         state_m, img_m, st_m = step(small_scene, state_m, cam)
+        shared, priv = state_p.scene_shared, state_p.viewer
         if f % CFG.window == 0:
-            shared = sortp(small_scene, state_p, cam)
-            state_p = dataclasses.replace(state_p, shared=shared)
-        state_p, img_p, st_p = shadep(small_scene, state_p, cam)
+            shared = sortp(small_scene, shared, priv, cam)
+        shared, priv, img_p, st_p = shadep(small_scene, shared, priv, cam)
+        state_p = ViewerState(scene_shared=shared, viewer=priv)
         np.testing.assert_allclose(np.asarray(img_m), np.asarray(img_p),
                                    atol=1e-6, err_msg=f'frame {f}')
         assert float(st_m.hit_rate) == pytest.approx(float(st_p.hit_rate),
@@ -144,7 +145,7 @@ def test_cohort_single_viewer_matches_sequential(small_scene):
         assert_images_ulp_close(img_b, img_s, err_msg=f'frame {f}')
         assert float(st_b.hit_rate) == pytest.approx(float(st_s.hit_rate),
                                                      abs=1e-6)
-    cache_b = jax.tree.map(lambda x: x[0], bat.states.cache)
+    cache_b = jax.tree.map(lambda x: x[0], bat.shared.cache)
     cache_s = seq._states[0].cache
     for field in ('tags', 'age', 'clock'):
         np.testing.assert_array_equal(np.asarray(getattr(cache_b, field)),
@@ -174,13 +175,15 @@ def test_cohort_multi_viewer_matches_replayed_cadence(small_scene):
         out = bat.step({i: trajs[i][tick] for i in range(s)})
         for i in range(s):
             cam = trajs[i][tick]
+            shared_o, priv_o = oracle[i].scene_shared, oracle[i].viewer
             if tick == 0 or tick % cfg.window == i % cfg.window:
-                shared = sortp(small_scene, oracle[i], cam)
-                oracle[i] = dataclasses.replace(oracle[i], shared=shared)
+                shared_o = sortp(small_scene, shared_o, priv_o, cam)
                 expect_sorted = 1.0
             else:
                 expect_sorted = 0.0
-            oracle[i], img_o, st_o = shadep(small_scene, oracle[i], cam)
+            shared_o, priv_o, img_o, st_o = shadep(small_scene, shared_o,
+                                                   priv_o, cam)
+            oracle[i] = ViewerState(scene_shared=shared_o, viewer=priv_o)
             img_b, st_b, _ = out[i]
             assert float(st_b.sorted_this_frame) == expect_sorted, \
                 f'slot {i} tick {tick}'
@@ -189,7 +192,7 @@ def test_cohort_multi_viewer_matches_replayed_cadence(small_scene):
             assert float(st_b.hit_rate) == pytest.approx(float(st_o.hit_rate),
                                                          abs=1e-6)
     for i in range(s):
-        cache_b = jax.tree.map(lambda x: x[i], bat.states.cache)
+        cache_b = jax.tree.map(lambda x: x[i], bat.shared.cache)
         for field in ('tags', 'age', 'clock'):
             np.testing.assert_array_equal(
                 np.asarray(getattr(cache_b, field)),
