@@ -18,7 +18,13 @@ of concurrent viewers grows, across three axes:
   sort-pool collapse: live buffers must drop to the distinct-cell count,
   i.e. 1) and **staggered** (stagger=2 — gates the cache-sharing win: a
   viewer admitted into a warm scene cache must beat the same-stagger
-  private baseline's hit rate).
+  private baseline's hit rate);
+* **driver** — the synchronous virtual-clock host loop vs the threaded
+  host pipeline (``repro.serve.events``: admission/eviction/pose-cell
+  planning on a worker thread, double-buffered against the async device
+  dispatch).  Threaded rows gate ``host_overlap > 0`` — host planning must
+  actually hide behind the device step — and report the per-frame p50/p95
+  latency an open-loop client sees.
 
 Each row reports the realised sort schedule (the run asserts the cohort
 bound, so a regression that reintroduces per-lane sorting fails the
@@ -57,10 +63,12 @@ class _Cell:
     instead of every repetition of one cell."""
 
     def __init__(self, scene, viewers: int, frames: int, mode: str,
-                 backend: str, vps: int = 1, stagger: int = 0):
+                 backend: str, vps: int = 1, stagger: int = 0,
+                 driver: str = 'sync'):
         self.viewers, self.frames = viewers, frames
         self.mode, self.backend = mode, backend
         self.vps, self.stagger = vps, stagger
+        self.driver = driver
         cfg = LuminaConfig(capacity=CAPACITY, window=WINDOW, backend=backend)
         profile = PROFILE_EVERY if backend == 'pallas' else 0
         cam0 = build_sessions(1, 1, width=WIDTH)[0].cams[0]
@@ -89,7 +97,7 @@ class _Cell:
         mgr.run_tick()
         prof0 = self.stepper.profile_s
         t0 = time.perf_counter()
-        finished = mgr.run()
+        finished = mgr.run(driver=self.driver)
         # per-kernel profiling runs outside the serving work proper;
         # subtract its overhead so fps compares backends, not cadences
         wall = time.perf_counter() - t0 - (self.stepper.profile_s - prof0)
@@ -120,11 +128,20 @@ class _Cell:
                 f"sort pool regressed: {roll['max_sort_pool_live']} live "
                 f"buffers for {self.viewers} co-located viewers over "
                 f"{scenes} scene(s)")
+        if self.driver == 'threaded':
+            # the async host pipeline must actually hide host planning
+            # behind the device step: zero overlap means admission/eviction
+            # /pose-cell work serialized back into the render tick
+            assert roll.get('host_overlap', 0.0) > 0.0, (
+                f"threaded host pipeline overlapped nothing at "
+                f"{self.viewers} viewers (host {roll.get('host_ms')} "
+                f"ms/tick)")
         row = {
             'viewers': self.viewers,
             'mode': self.mode,
             'backend': self.backend,
             'viewers_per_scene': self.vps,
+            'driver': self.driver,
             'stagger': self.stagger,
             'window': WINDOW,
             'frames': rendered,
@@ -144,7 +161,9 @@ class _Cell:
         # state_metrics docstring)
         for key in ('last_occupancy', 'max_sort_pool_live',
                     'sort_pool_bytes', 'sort_pool_alloc_bytes',
-                    'cache_bytes', 'state_bytes', 'state_alloc_bytes'):
+                    'cache_bytes', 'state_bytes', 'state_alloc_bytes',
+                    'p50_frame_ms', 'p95_frame_ms', 'host_ms',
+                    'host_overlap'):
             row[key] = roll.get(key)
         return row
 
@@ -160,6 +179,12 @@ def run(quick: bool = False, reps: int = 4):
                 ('sequential', 'reference'))
     cells = [_Cell(scene, viewers, frames, mode, backend)
              for viewers in counts for mode, backend in variants]
+    # the driver axis: the threaded host pipeline vs the sync virtual clock
+    # at every viewer count (batched reference engine — the overlap story
+    # is host planning vs the async device dispatch, not the kernel path)
+    cells += [_Cell(scene, viewers, frames, 'batched', 'reference',
+                    driver='threaded')
+              for viewers in counts]
     # the viewers_per_scene axis at the largest viewer count:
     #  - co-located shared rows (stagger 0) gate the sort-pool collapse
     #  - staggered shared-vs-private pairs gate the cache-sharing hit rate

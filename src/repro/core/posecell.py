@@ -46,13 +46,33 @@ def _fwd_up(quat: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
     return fwd, -down
 
 
-def pose_cell_key(cam, *, cell_size: float = CELL_SIZE,
-                  ang_bins: int = ANG_BINS) -> int:
-    """Quantize a camera pose into a deterministic pose-cell key.
+def angle_bucket(x: float, lo: float, span: float, ang_bins: int,
+                 periodic: bool = True) -> int:
+    """Quantize an angle into one of ``ang_bins`` buckets over [lo, lo+span).
 
-    Two cameras get the same key iff their quantized position cells and
-    direction buckets (forward azimuth/elevation plus an up-vector roll
-    bucket) all coincide.  Returns a non-negative python int < 2**31.
+    Bins are **zero-centered**: a bin CENTER sits at every ``lo + k * span /
+    ang_bins`` (half-bin offset before the floor), so the ubiquitous
+    upright-camera roll ~= 0 (and axis-aligned headings) cannot flip buckets
+    on float noise around a floor boundary.  Periodic axes wrap modulo
+    ``ang_bins``; non-periodic axes clamp — elevation must NOT wrap, or
+    straight-up (el = +pi/2) would fuse with straight-down (el = -pi/2).
+    """
+    b = int(np.floor((x - lo) / span * ang_bins + 0.5))
+    if periodic:
+        return b % ang_bins
+    return min(ang_bins - 1, max(0, b))
+
+
+def pose_cell_buckets(cam, *, cell_size: float = CELL_SIZE,
+                      ang_bins: int = ANG_BINS) -> tuple:
+    """The raw quantization a pose-cell key hashes: ``(ix, iy, iz, az, el,
+    roll)`` — three integer position-grid coordinates (floor at pitch
+    ``cell_size``) and three ``angle_bucket`` indices.
+
+    Two cameras share a pose cell iff these six coordinates all coincide;
+    neighboring position cells differ in exactly one coordinate by exactly
+    one.  Exposed separately from ``pose_cell_key`` so tests (and any future
+    adaptive-cell logic) can reason about the geometry instead of a hash.
     """
     p = np.asarray(cam.position, np.float64).reshape(3)
     q = np.asarray(cam.quat, np.float64).reshape(4)
@@ -71,26 +91,26 @@ def pose_cell_key(cam, *, cell_size: float = CELL_SIZE,
     roll = np.arctan2(float(up @ e1), float(up @ e2))
 
     two_pi = 2.0 * np.pi
-
-    def ang_bucket(x, lo, span, periodic=True):
-        # half-bin offset: a bin CENTER sits at zero, so the ubiquitous
-        # upright-camera roll ~= 0 (and axis-aligned headings) cannot
-        # flip buckets on float noise around a floor boundary
-        b = int(np.floor((x - lo) / span * ang_bins + 0.5))
-        if periodic:
-            return b % ang_bins
-        # elevation is NOT periodic: wrapping would fuse straight-up
-        # (el = +pi/2) with straight-down (el = -pi/2)
-        return min(ang_bins - 1, max(0, b))
-
-    buckets = (
+    return (
         int(np.floor(p[0] / cell_size)),
         int(np.floor(p[1] / cell_size)),
         int(np.floor(p[2] / cell_size)),
-        ang_bucket(az, -np.pi, two_pi),
-        ang_bucket(el, -np.pi / 2, np.pi, periodic=False),
-        ang_bucket(roll, -np.pi, two_pi),
+        angle_bucket(az, -np.pi, two_pi, ang_bins),
+        angle_bucket(el, -np.pi / 2, np.pi, ang_bins, periodic=False),
+        angle_bucket(roll, -np.pi, two_pi, ang_bins),
     )
+
+
+def pose_cell_key(cam, *, cell_size: float = CELL_SIZE,
+                  ang_bins: int = ANG_BINS) -> int:
+    """Quantize a camera pose into a deterministic pose-cell key.
+
+    Two cameras get the same key iff their quantized position cells and
+    direction buckets (forward azimuth/elevation plus an up-vector roll
+    bucket) all coincide — see ``pose_cell_buckets``.  Returns a
+    non-negative python int < 2**31.
+    """
+    buckets = pose_cell_buckets(cam, cell_size=cell_size, ang_bins=ang_bins)
     # FNV-1a over the bucket tuple -> stable 31-bit key (non-negative, so -1
     # stays free as the "empty pool entry" sentinel)
     h = 2166136261

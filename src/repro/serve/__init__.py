@@ -7,21 +7,34 @@ Layers (bottom-up):
     ``render_step``'s per-viewer ``lax.cond``);
   * ``stepper``   — Batched (pose-cell sort scheduler + one scene-major
     shade per tick, scene-shared caches, state buffers donated) /
-    Sequential engines;
-  * ``session``   — viewer sessions (with ``scene_id``) + slot-based
-    admit/evict manager routing sessions to scene blocks (keeps the
-    per-tick ``tick_log`` of sort/shade attribution + state metrics);
+    Sequential engines, each split into ``plan_step`` / ``step_dispatch`` /
+    ``step_finish`` for the async host loop;
+  * ``session``   — viewer sessions (with ``scene_id`` and frame ``pace``)
+    + slot-based admit/evict manager whose tick decomposes into
+    ``plan_tick`` / ``apply_plan`` / ``observe_tick`` (keeps the per-tick
+    ``tick_log`` of sort/shade/host attribution + state metrics);
+  * ``events``    — the host-pipeline seam: ``TickPlan`` and the two
+    drivers — ``SyncDriver`` (virtual clock, deterministic replay, the
+    parity oracle) and ``ThreadedDriver`` (host planning double-buffered
+    against the device step behind a command/completion queue);
+  * ``traffic``   — replayable open-loop arrival traces (stagger / poisson
+    / bursty) with per-viewer frame pacing;
   * ``telemetry`` — per-session FPS / hit-rate / latency percentiles /
-    per-phase ``sort_ms``+``shade_ms``, fleet ``tick_rollup``;
+    per-phase ``sort_ms``+``shade_ms``, fleet ``tick_rollup`` (now with
+    per-frame p50/p95 latency and the host-overlap fraction);
   * ``render``    — the CLI entrypoint (``python -m repro.serve.render``).
 """
+from repro.serve.events import (HostTiming, SyncDriver, ThreadedDriver,
+                                TickPlan)
 from repro.serve.session import SessionManager, ViewerSession
 from repro.serve.stepper import BatchedStepper, SequentialStepper, TickTiming
 from repro.serve.telemetry import (SessionTelemetry, aggregate, format_table,
                                    tick_rollup)
+from repro.serve.traffic import TrafficTrace, make_trace
 
 __all__ = [
     'BatchedStepper', 'SequentialStepper', 'SessionManager', 'TickTiming',
     'ViewerSession', 'SessionTelemetry', 'aggregate', 'format_table',
-    'tick_rollup',
+    'tick_rollup', 'TickPlan', 'HostTiming', 'SyncDriver', 'ThreadedDriver',
+    'TrafficTrace', 'make_trace',
 ]

@@ -1,0 +1,212 @@
+"""The serving host pipeline's event seam: tick plans and drivers.
+
+The ``SessionManager`` tick decomposes into three operations (see
+``repro.serve.session``):
+
+  * ``plan_tick``    — pure host planning: which slots evict, which pending
+    sessions admit where, which slots render which cameras, plus the
+    stepper's pose-cell sort plan.  Numpy/python only — safe to run off the
+    main thread;
+  * ``apply_plan``   — atomic commit of the plan's admissions/evictions
+    (holds the manager lock, so no observer ever sees a half-admitted tick);
+  * ``observe_tick`` — per-frame telemetry + cursor advance once the device
+    outputs land.
+
+This module provides the two drivers that sequence those operations through
+an explicit command/completion queue:
+
+  * ``SyncDriver``     — the **virtual-clock** driver: processes the command
+    protocol inline, one tick at a time, on a tick counter that IS the
+    clock.  It replays any arrival/departure trace (sessions with
+    ``arrival_tick``/trajectory lengths, e.g. from ``repro.serve.traffic``)
+    deterministically and is bit-identical to the pre-pipeline synchronous
+    engine — the parity oracle every async test leans on
+    (``tests/test_serve_async.py``).
+  * ``ThreadedDriver`` — the **real-time** driver: a host worker thread
+    computes tick ``t+1``'s plan behind the command queue while the device
+    executes tick ``t`` (the stepper's ``step_dispatch`` returns as soon as
+    the jitted shade is dispatched; ``step_finish`` blocks).  Host admission
+    /eviction/pose-cell planning thus overlaps device work instead of
+    serializing into the render tick.  Control flow is identical to the
+    sync driver — the plan for ``t+1`` is a pure function of post-dispatch
+    host state plus the deterministic "active slots advanced one frame"
+    adjustment — so images, cache tags and sort cadence stay bit-identical;
+    only wall-clock telemetry (and the new ``host_ms``/``overlap_ms``
+    attribution) differs.
+
+Worker-thread safety contract: ``plan_tick`` touches manager state (pending
+queue, slot sessions, cursors) and the stepper's host-side scheduler mirrors
+(pose-cell pool bookkeeping, ``_pending_sort``), never device arrays.  The
+threaded driver only requests a plan AFTER ``step_dispatch`` returns (all of
+the stepper's host mutations for tick ``t`` are complete by then) and only
+observes/applies AFTER the plan completion arrives — so the worker always
+reads quiescent state; the queue pair is the synchronization.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class TickPlan:
+    """One tick's host decisions, computed ahead of (and apart from) the
+    device step.
+
+    evict : slots whose (finished) sessions leave before this tick
+    admit : ``(slot, sid)`` placements, in the order the pending queue
+            releases them
+    cams  : ``{slot: Camera}`` for the slots that render this tick (a paced
+            session skips ticks between its due frames; its slot stays
+            occupied but renders nothing)
+    sort_plan : the stepper's precomputed pose-cell sort plan
+            (``BatchedStepper.plan_step``), or None for steppers without a
+            host planning phase
+    """
+
+    tick: int
+    evict: tuple
+    admit: tuple
+    cams: dict
+    sort_plan: object = None
+
+
+@dataclasses.dataclass(frozen=True)
+class HostTiming:
+    """Host-side cost attribution for one tick.
+
+    host_ms    : wall-clock of the tick's host planning work
+    overlap_ms : portion of ``host_ms`` that ran while the device window of
+                 the concurrent tick was open (dispatch -> outputs ready).
+                 Zero by construction in the sync driver — planning
+                 serializes into the tick there, which is exactly what the
+                 threaded driver exists to hide.
+    """
+
+    host_ms: float = 0.0
+    overlap_ms: float = 0.0
+
+
+def _step_split(stepper):
+    """The stepper's (dispatch, finish) pair; monolithic steppers fall back
+    to doing all work in dispatch (their finish is a no-op), which keeps the
+    protocol uniform at zero overlap."""
+    dispatch = getattr(stepper, 'step_dispatch', None)
+    finish = getattr(stepper, 'step_finish', None)
+    if dispatch is not None and finish is not None:
+        return dispatch, finish
+    return (lambda cams, plan=None: stepper.step(cams)), (lambda out: out)
+
+
+class SyncDriver:
+    """Virtual-clock driver: the command/completion protocol executed inline.
+
+    ``run`` drives plan -> apply -> step -> observe on a pure tick counter
+    until every submitted session has completed.  Replaying the same
+    arrival/departure trace (same sessions, same arrival ticks, same
+    trajectories) reproduces the same images, cache tags, LRU ages and sort
+    cadence bit-for-bit — there is no wall clock anywhere in the control
+    path.
+    """
+
+    def __init__(self, mgr):
+        self.mgr = mgr
+
+    def run_tick(self) -> int:
+        return self.mgr.run_tick()
+
+    def run(self, max_ticks: int = 100_000):
+        mgr = self.mgr
+        while not mgr.drained():
+            self.run_tick()
+            mgr.evict_finished()
+            if mgr.tick >= max_ticks:
+                raise RuntimeError('serve loop did not drain')
+        return mgr.finished
+
+
+class ThreadedDriver:
+    """Real-time driver: host planning double-buffered against device steps.
+
+    Main-thread loop per tick ``t``::
+
+        apply_plan(plan_t)                  # atomic admissions/evictions
+        inflight = step_dispatch(cams_t)    # host scheduling + async dispatch
+        cmd_q.put(plan request for t+1)     # worker plans while device runs
+        outputs = step_finish(inflight)     # blocks on the device
+        plan_{t+1} = out_q.get()            # completion (usually ready)
+        observe_tick(plan_t, outputs)       # telemetry + cursor advance
+
+    The worker's planning interval is intersected with the tick's device
+    window ``[dispatch_start, outputs_ready]`` to report ``overlap_ms`` —
+    the host work genuinely hidden behind the device step.
+    """
+
+    def __init__(self, mgr):
+        self.mgr = mgr
+
+    def run(self, max_ticks: int = 100_000):
+        mgr = self.mgr
+        dispatch, finish = _step_split(mgr.stepper)
+        cmd_q: queue.Queue = queue.Queue()
+        out_q: queue.Queue = queue.Queue()
+
+        def worker():
+            while True:
+                msg = cmd_q.get()
+                if msg is None:
+                    return
+                tick, advanced = msg
+                t0 = time.perf_counter()
+                try:
+                    plan = mgr.plan_tick(tick, advanced=advanced)
+                    out_q.put(('plan', plan, t0, time.perf_counter()))
+                except BaseException as exc:  # surfaced on the main thread
+                    out_q.put(('error', exc, t0, time.perf_counter()))
+
+        th = threading.Thread(target=worker, name='serve-host-planner',
+                              daemon=True)
+        th.start()
+        try:
+            t0 = time.perf_counter()
+            plan = mgr.plan_tick()
+            host0 = HostTiming(host_ms=(time.perf_counter() - t0) * 1e3)
+            while True:
+                mgr.apply_plan(plan)
+                if mgr.drained():
+                    break
+                t_disp = time.perf_counter()
+                inflight = dispatch(plan.cams, plan=plan.sort_plan)
+                # all host mutations for tick t are committed by now; hand
+                # the worker tick t+1 while the device crunches tick t
+                cmd_q.put((plan.tick + 1, frozenset(plan.cams)))
+                outputs = finish(inflight)
+                t_ready = time.perf_counter()
+                kind, nxt, p0, p1 = out_q.get()
+                if kind == 'error':
+                    raise nxt
+                overlap_s = max(0.0, min(p1, t_ready) - max(p0, t_disp))
+                mgr.observe_tick(plan, outputs, host=host0)
+                host0 = HostTiming(host_ms=(p1 - p0) * 1e3,
+                                   overlap_ms=overlap_s * 1e3)
+                plan = nxt
+                if mgr.tick >= max_ticks:
+                    raise RuntimeError('serve loop did not drain')
+        finally:
+            cmd_q.put(None)
+            th.join(timeout=5.0)
+        return mgr.finished
+
+
+DRIVERS = {'sync': SyncDriver, 'threaded': ThreadedDriver}
+
+
+def get_driver(name: str, mgr):
+    try:
+        return DRIVERS[name](mgr)
+    except KeyError:
+        raise ValueError(f'unknown serve driver {name!r} '
+                         f'(expected one of {sorted(DRIVERS)})') from None

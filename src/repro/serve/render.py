@@ -21,6 +21,7 @@ import jax
 from repro.core.pipeline import LuminaConfig
 from repro.data.scenes import structured_scene
 from repro.data.trajectory import orbit_trajectory
+from repro.serve import traffic
 from repro.serve.session import SessionManager, ViewerSession
 from repro.serve.stepper import BatchedStepper, SequentialStepper
 from repro.serve.telemetry import aggregate, format_table, tick_rollup
@@ -28,7 +29,8 @@ from repro.serve.telemetry import aggregate, format_table, tick_rollup
 
 def build_sessions(viewers: int, frames: int, *, width: int = 96,
                    stagger: int = 2, fps: float = 90.0,
-                   viewers_per_scene: int = 1) -> list[ViewerSession]:
+                   viewers_per_scene: int = 1,
+                   arrivals=None, paces=None) -> list[ViewerSession]:
     """One session per viewer, grouped into scenes of ``viewers_per_scene``.
 
     Scenes get distinct orbit start angles; viewers of one scene ride the
@@ -36,6 +38,10 @@ def build_sessions(viewers: int, frames: int, *, width: int = 96,
     near-identical poses), so they land in one pose cell and exercise the
     scene-shared sort pool and radiance cache.  With one viewer per scene
     this reduces to the original one-orbit-per-viewer layout.
+
+    ``arrivals``/``paces`` override the default ``sid * stagger`` arrival
+    ticks and every-tick pacing — pass a ``repro.serve.traffic`` trace's
+    fields to serve an open-loop workload.
     """
     sessions = []
     n_scenes = -(-viewers // viewers_per_scene)
@@ -43,9 +49,12 @@ def build_sessions(viewers: int, frames: int, *, width: int = 96,
         scene_id = sid // viewers_per_scene
         cams = orbit_trajectory(frames, fps=fps, width=width, height_px=width,
                                 start_deg=360.0 * scene_id / max(n_scenes, 1))
-        sessions.append(ViewerSession(sid=sid, cams=cams,
-                                      arrival_tick=sid * stagger,
-                                      scene_id=scene_id))
+        sessions.append(ViewerSession(
+            sid=sid, cams=cams,
+            arrival_tick=(sid * stagger if arrivals is None
+                          else int(arrivals[sid])),
+            scene_id=scene_id,
+            pace=1 if paces is None else int(paces[sid])))
     return sessions
 
 
@@ -53,14 +62,21 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
           gaussians: int = 1500, window: int = 6, capacity: int = 192,
           stagger: int = 2, sequential: bool = False, seed: int = 0,
           backend: str = 'reference', profile_every: int = 0,
-          viewers_per_scene: int = 1, print_fn=print) -> dict:
+          viewers_per_scene: int = 1, arrivals: str = 'stagger',
+          rate: float = 0.5, burst: int = 4, gap: int = 8, jitter: int = 0,
+          pace: int = 1, pace_jitter: int = 0,
+          driver: str = 'sync', print_fn=print) -> dict:
     """Run the serving loop to completion; returns the aggregate rollup.
 
     ``backend`` selects the shade implementation ('reference' | 'pallas');
     ``profile_every`` > 0 samples a per-kernel shade latency breakdown every
     N ticks (pallas backend, batched engine); ``viewers_per_scene`` > 1
     groups that many slots per scene so co-scene viewers share one radiance
-    cache and pose-cell sort pool (batched engine only).
+    cache and pose-cell sort pool (batched engine only).  ``arrivals``
+    selects the traffic trace ('stagger' | 'poisson' | 'bursty', seeded by
+    ``seed`` — see ``repro.serve.traffic``) and ``driver`` the host loop:
+    'sync' (virtual clock, deterministic replay) or 'threaded' (host
+    admission/planning double-buffered against the device step).
     """
     if viewers < 1 or frames < 1:
         raise SystemExit('--viewers and --frames must be >= 1')
@@ -74,8 +90,13 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     slots = -(-slots // viewers_per_scene) * viewers_per_scene
     scene = structured_scene(jax.random.PRNGKey(seed), gaussians)
     cfg = LuminaConfig(capacity=capacity, window=window, backend=backend)
+    trace = traffic.make_trace(arrivals, viewers, seed=seed, rate=rate,
+                               burst=burst, gap=gap, jitter=jitter,
+                               stagger=stagger, pace=pace,
+                               pace_jitter=pace_jitter)
     sessions = build_sessions(viewers, frames, width=width, stagger=stagger,
-                              viewers_per_scene=viewers_per_scene)
+                              viewers_per_scene=viewers_per_scene,
+                              arrivals=trace.arrivals, paces=trace.paces)
     cam0 = sessions[0].cams[0]
 
     if sequential:
@@ -88,7 +109,7 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     mgr = SessionManager(stepper, slots)
     for sess in sessions:
         mgr.submit(sess)
-    finished = mgr.run()
+    finished = mgr.run(driver=driver)
 
     summaries = [s.telemetry.summary() for s in
                  sorted(finished, key=lambda s: s.sid)]
@@ -102,6 +123,8 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     roll = tick_rollup(mgr.tick_log, warmup_ticks=1)
     agg['backend'] = backend
     agg['viewers_per_scene'] = viewers_per_scene
+    agg['driver'] = driver
+    agg['arrivals'] = arrivals
     agg['mean_sorts_per_tick'] = roll['mean_sorts_per_tick']
     agg['max_sorts_per_tick'] = roll['max_sorts_per_tick']
     agg['tick_sort_ms'] = roll['mean_sort_ms']
@@ -109,7 +132,8 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     agg['kernel_ms'] = roll['kernel_ms']
     for key in ('last_occupancy', 'max_sort_pool_live', 'sort_pool_bytes',
                 'sort_pool_alloc_bytes', 'cache_bytes', 'state_bytes',
-                'state_alloc_bytes'):
+                'state_alloc_bytes', 'p50_frame_ms', 'p95_frame_ms',
+                'host_ms', 'host_overlap'):
         if key in roll:
             agg[key] = roll[key]
     print_fn(format_table(summaries))
@@ -134,6 +158,12 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     if roll['kernel_ms']:
         parts = '  '.join(f'{k} {v:.1f}' for k, v in roll['kernel_ms'].items())
         print_fn(f"-- shade kernels (ms/tick, sampled): {parts}")
+    if 'host_ms' in agg:
+        print_fn(f"-- host pipeline ({driver}, {arrivals} arrivals): "
+                 f"plan {agg['host_ms']:.2f} ms/tick, "
+                 f"overlap {agg.get('host_overlap', 0.0):.0%}, "
+                 f"frame p50/p95 {agg.get('p50_frame_ms', 0.0):.1f}/"
+                 f"{agg.get('p95_frame_ms', 0.0):.1f} ms")
     return agg
 
 
@@ -163,6 +193,29 @@ def main(argv=None):
                     help='slots per scene block: viewers of one scene share '
                          'its radiance cache and pose-cell sort pool '
                          '(batched engine only)')
+    ap.add_argument('--arrivals', choices=traffic.KINDS, default='stagger',
+                    help='arrival trace: fixed stagger, open-loop poisson '
+                         '(--rate viewers/tick, seeded by --seed) or bursty '
+                         'flash crowds (--burst/--gap, seeded only when '
+                         '--jitter > 0; repro.serve.traffic)')
+    ap.add_argument('--rate', type=float, default=0.5,
+                    help='poisson arrival rate in viewers per tick')
+    ap.add_argument('--burst', type=int, default=4,
+                    help='bursty arrivals: viewers landing together')
+    ap.add_argument('--gap', type=int, default=8,
+                    help='bursty arrivals: ticks between bursts')
+    ap.add_argument('--jitter', type=int, default=0,
+                    help='bursty arrivals: max seeded jitter per burst '
+                         '(ticks)')
+    ap.add_argument('--pace', type=int, default=1,
+                    help='viewer frame interval in ticks (1 = every tick)')
+    ap.add_argument('--pace-jitter', type=int, default=0,
+                    help='mix client rates: pace drawn from '
+                         '[pace, pace + jitter] per viewer')
+    ap.add_argument('--driver', choices=('sync', 'threaded'), default='sync',
+                    help='host loop: sync virtual clock (deterministic '
+                         'replay) or threaded (admission/eviction/pose-cell '
+                         'planning overlapped with the device step)')
     ap.add_argument('--seed', type=int, default=0)
     args = ap.parse_args(argv)
     serve(args.viewers, args.frames, slots=args.slots, width=args.width,
@@ -170,7 +223,10 @@ def main(argv=None):
           capacity=args.capacity, stagger=args.stagger,
           sequential=args.sequential, seed=args.seed,
           backend=args.backend, profile_every=args.profile_every,
-          viewers_per_scene=args.viewers_per_scene)
+          viewers_per_scene=args.viewers_per_scene,
+          arrivals=args.arrivals, rate=args.rate, burst=args.burst,
+          gap=args.gap, jitter=args.jitter, pace=args.pace,
+          pace_jitter=args.pace_jitter, driver=args.driver)
 
 
 if __name__ == '__main__':

@@ -14,14 +14,37 @@ block, so co-scene viewers land on the block whose ``SceneShared`` (radiance
 cache + sort pool) they are meant to share.  With one viewer per scene (the
 default) scene identity does not constrain placement and admission is plain
 FIFO over all free slots, exactly the pre-split behavior.
+
+**Host pipeline**: a tick decomposes into three explicit operations —
+
+  * ``plan_tick``    — pure planning (evictions, admissions, due cameras,
+    the stepper's pose-cell sort plan); numpy/python only, safe off-thread;
+  * ``apply_plan``   — atomic commit of the plan under the manager lock
+    (no observer ever sees a half-admitted tick);
+  * ``observe_tick`` — telemetry + cursor advance once device outputs land.
+
+``run_tick`` is their inline composition (identical to the pre-pipeline
+synchronous engine); ``run(driver=...)`` hands the sequencing to a driver
+from ``repro.serve.events`` — ``'sync'`` (virtual clock, deterministic
+replay) or ``'threaded'`` (host planning double-buffered against the
+device step).
+
+**Frame pacing**: a session with ``pace = p`` consumes one frame every
+``p`` ticks (open-loop clients slower than the tick clock, see
+``repro.serve.traffic``); its slot stays occupied on off ticks but renders
+nothing.  ``pace = 1`` (the default) is the legacy every-tick behavior.
 """
 from __future__ import annotations
 
 import dataclasses
+import itertools
+import threading
+import time
 from collections import deque
 from typing import Optional
 
 from repro.core.camera import Camera
+from repro.serve.events import HostTiming, TickPlan, get_driver
 from repro.serve.telemetry import SessionTelemetry
 
 
@@ -31,6 +54,8 @@ class ViewerSession:
 
     ``scene_id`` names the scene this viewer watches; viewers sharing it are
     eligible to share that scene's radiance cache and speculative sorts.
+    ``pace`` is the session's frame interval in ticks (>= 1): a pace-``p``
+    viewer renders on ticks ``admitted_tick + k * p`` only.
     """
 
     sid: int
@@ -38,9 +63,12 @@ class ViewerSession:
     arrival_tick: int = 0
     cursor: int = 0
     scene_id: int = 0
+    pace: int = 1
     telemetry: Optional[SessionTelemetry] = None
 
     def __post_init__(self):
+        if self.pace < 1:
+            raise ValueError(f'session pace must be >= 1, got {self.pace}')
         if self.telemetry is None:
             self.telemetry = SessionTelemetry(sid=self.sid,
                                               arrival_tick=self.arrival_tick)
@@ -61,6 +89,12 @@ class SessionManager:
     in which slots and feeds their per-frame stats into telemetry.  When the
     stepper exposes ``viewers_per_scene > 1``, slots are grouped into scene
     blocks and sessions are placed by ``scene_id`` (see module docstring).
+
+    All session-placement mutations (``apply_plan``/``observe_tick`` and the
+    legacy ``admit_ready``/``evict_finished``) hold ``self._lock``;
+    ``snapshot()`` reads under the same lock, so concurrent observers (the
+    threaded driver's telemetry consumers, tests) always see a consistent
+    admission state.
     """
 
     def __init__(self, stepper, slots: int):
@@ -72,17 +106,28 @@ class SessionManager:
         self.pending: deque[ViewerSession] = deque()
         self.finished: list[ViewerSession] = []
         self.tick = 0
+        self._lock = threading.Lock()
+        # host planning spent on zero-frame ticks (arrival gaps, paced
+        # idle ticks) carries into the next logged entry, so host_ms /
+        # host_overlap stay honest for open-loop workloads
+        self._carry_host_ms = 0.0
+        self._carry_overlap_ms = 0.0
         # Per-tick phase attribution: {'tick', 'frames', 'sorted_slots',
-        # 'sort_ms', 'shade_ms', 'kernel_ms'} per rendered tick (empty ticks
-        # are skipped; kernel_ms is None except on profiled pallas ticks),
-        # plus the stepper's state metrics (cache occupancy, live sort-pool
-        # entries, state bytes) when it exposes ``state_metrics()``.
+        # 'sort_ms', 'shade_ms', 'latency_ms', 'host_ms', 'overlap_ms',
+        # 'kernel_ms'} per rendered tick (empty ticks are skipped; kernel_ms
+        # is None except on profiled pallas ticks), plus the stepper's state
+        # metrics (cache occupancy, live sort-pool entries, state bytes)
+        # when it exposes ``state_metrics()``.
         self.tick_log: list[dict] = []
 
     # -- lifecycle ---------------------------------------------------------
 
     def submit(self, session: ViewerSession) -> None:
-        self.pending.append(session)
+        """Queue a session for admission.  Lock-safe against a concurrent
+        threaded run: a session submitted mid-run is simply picked up by
+        the next tick's plan."""
+        with self._lock:
+            self.pending.append(session)
 
     def free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slot_session) if s is None]
@@ -107,6 +152,10 @@ class SessionManager:
         """Admit arrived pending sessions into free slots (FIFO; with scene
         blocks, FIFO per admissible session — a session whose block is full
         waits without blocking later sessions bound for other scenes)."""
+        with self._lock:
+            return self._admit_ready_locked()
+
+    def _admit_ready_locked(self) -> list[int]:
         admitted = []
         if self.viewers_per_scene == 1:
             for slot in self.free_slots():
@@ -132,6 +181,10 @@ class SessionManager:
         return admitted
 
     def evict_finished(self) -> list[int]:
+        with self._lock:
+            return self._evict_finished_locked()
+
+    def _evict_finished_locked(self) -> list[int]:
         evicted = []
         for slot, sess in enumerate(self.slot_session):
             if sess is not None and sess.done:
@@ -141,53 +194,201 @@ class SessionManager:
                 evicted.append(slot)
         return evicted
 
+    # -- the host pipeline: plan / apply / observe -------------------------
+
+    def _frame_due(self, sess: ViewerSession, tick: int) -> bool:
+        """Does this (already-admitted) session consume a frame on
+        ``tick``?  Paced sessions render every ``pace`` ticks counted from
+        admission; sessions admitted this very tick don't come through
+        here — ``plan_tick`` assigns their first frame directly."""
+        return (tick - sess.telemetry.admitted_tick) % sess.pace == 0
+
+    def plan_tick(self, tick: Optional[int] = None,
+                  advanced=()) -> TickPlan:
+        """Compute the next tick's host decisions without mutating anything.
+
+        ``advanced`` names the slots of an in-flight, not-yet-observed tick:
+        their sessions are treated as one frame further along (the threaded
+        driver's double-buffer adjustment — eviction/camera choices for tick
+        ``t+1`` are a pure function of tick ``t``'s inputs, never its device
+        outputs).  With no tick in flight (the sync path) it is empty and
+        this reads the literal manager state.
+
+        The returned plan also carries the stepper's pose-cell sort plan
+        (``plan_step``) when the stepper has a host planning phase, computed
+        against the post-admission active set — the piece of per-tick host
+        work the async pipeline exists to overlap.
+        """
+        tick = self.tick if tick is None else tick
+        adv = frozenset(advanced)
+
+        def cursor_of(slot: int, sess: ViewerSession) -> int:
+            return sess.cursor + (1 if slot in adv else 0)
+
+        evict = tuple(
+            slot for slot, sess in enumerate(self.slot_session)
+            if sess is not None and cursor_of(slot, sess) >= len(sess.cams))
+        free = sorted(set(self.free_slots()) | set(evict))
+        placements = self._plan_admissions(free, tick)
+        admit = tuple((slot, sess.sid) for slot, sess in placements)
+        admitted_slots = {slot for slot, _ in admit}
+
+        cams: dict[int, Camera] = {}
+        for slot, sess in enumerate(self.slot_session):
+            if sess is None or slot in evict or slot in admitted_slots:
+                continue
+            if self._frame_due(sess, tick):
+                cams[slot] = sess.cams[cursor_of(slot, sess)]
+        for slot, sess in placements:
+            cams[slot] = sess.cams[0]
+
+        sort_plan = None
+        plan_step = getattr(self.stepper, 'plan_step', None)
+        if plan_step is not None:
+            sort_plan = plan_step(cams, pending_admits=admitted_slots)
+        return TickPlan(tick=tick, evict=evict, admit=admit, cams=cams,
+                        sort_plan=sort_plan)
+
+    def _plan_admissions(self, free: list, tick: int) -> list:
+        """Pure mirror of ``admit_ready`` over a hypothetical free-slot list:
+        returns ``(slot, session)`` placements in pending-queue order
+        without popping anything.  The pending snapshot is taken under the
+        lock (this runs on the planner worker; ``submit`` may race), and in
+        FIFO mode only the first ``len(free)`` entries are materialized —
+        a deep open-loop backlog must not cost O(queue) host work per tick.
+        """
+        with self._lock:
+            if self.viewers_per_scene == 1:
+                pending = list(itertools.islice(self.pending, len(free)))
+            else:
+                pending = list(self.pending)
+        placements = []
+        if self.viewers_per_scene == 1:
+            k = 0
+            for slot in free:
+                if k >= len(pending) or pending[k].arrival_tick > tick:
+                    break
+                placements.append((slot, pending[k]))
+                k += 1
+            return placements
+        remaining = set(free)
+        for sess in pending:
+            if sess.arrival_tick > tick:
+                continue
+            block = [i for i in self._scene_block(sess.scene_id)
+                     if i in remaining]
+            if block:
+                placements.append((block[0], sess))
+                remaining.discard(block[0])
+        return placements
+
+    def apply_plan(self, plan: TickPlan) -> None:
+        """Atomically commit a plan's evictions and admissions.  Holding the
+        lock across the whole commit is the no-partial-admission guarantee:
+        a session is either fully pending or fully admitted (placed, stepper
+        slot reset, ``admitted_tick`` stamped) in any concurrent view."""
+        with self._lock:
+            if plan.tick != self.tick:
+                raise RuntimeError(f'stale plan: tick {plan.tick} applied at '
+                                   f'manager tick {self.tick}')
+            for slot in plan.evict:
+                sess = self.slot_session[slot]
+                if sess is None or not sess.done:
+                    raise RuntimeError(f'plan evicts slot {slot} whose '
+                                       f'session is not finished')
+                sess.telemetry.finished_tick = plan.tick
+                self.finished.append(sess)
+                self.slot_session[slot] = None
+            for slot, sid in plan.admit:
+                if self.slot_session[slot] is not None:
+                    raise RuntimeError(f'plan admits into occupied slot '
+                                       f'{slot}')
+                sess = next((s for s in self.pending if s.sid == sid), None)
+                if sess is None:
+                    raise RuntimeError(f'planned session {sid} not pending')
+                self.pending.remove(sess)
+                self._admit_into(slot, sess)
+
+    def observe_tick(self, plan: TickPlan, outputs: dict,
+                     host: Optional[HostTiming] = None) -> int:
+        """Record a completed tick: per-frame telemetry, cursor advance, the
+        tick log entry, and the clock advance to ``plan.tick + 1``."""
+        with self._lock:
+            for slot, (_image, stats, timing) in outputs.items():
+                sess = self.slot_session[slot]
+                sess.telemetry.observe_frame(
+                    latency_s=timing.latency_s,
+                    hit_rate=float(stats.hit_rate),
+                    saved_frac=float(stats.saved_frac),
+                    sorted_flag=float(stats.sorted_this_frame),
+                    sort_ms=timing.sort_ms,
+                    shade_ms=timing.shade_ms)
+                sess.cursor += 1
+            if outputs:
+                tick_timing = self.stepper.last_timing
+                entry = {
+                    'tick': plan.tick,
+                    'frames': len(outputs),
+                    'sorted_slots': tick_timing.sorted_slots,
+                    'sort_ms': tick_timing.sort_ms,
+                    'shade_ms': tick_timing.shade_ms,
+                    'latency_ms': tick_timing.latency_s * 1e3,
+                    'host_ms': self._carry_host_ms
+                               + (host.host_ms if host else 0.0),
+                    'overlap_ms': self._carry_overlap_ms
+                                  + (host.overlap_ms if host else 0.0),
+                    'kernel_ms': getattr(tick_timing, 'kernel_ms', None),
+                }
+                self._carry_host_ms = self._carry_overlap_ms = 0.0
+                metrics = getattr(self.stepper, 'state_metrics', None)
+                if metrics is not None:
+                    entry.update(metrics())
+                self.tick_log.append(entry)
+            elif host is not None:
+                self._carry_host_ms += host.host_ms
+                self._carry_overlap_ms += host.overlap_ms
+            self.tick = plan.tick + 1
+            return len(outputs)
+
+    def snapshot(self) -> dict:
+        """A consistent view of session placement for concurrent observers:
+        pending sids, ``(slot, sid, admitted_tick)`` for occupied slots,
+        finished sids, and the tick — all read under the manager lock."""
+        with self._lock:
+            return {
+                'tick': self.tick,
+                'pending': tuple(s.sid for s in self.pending),
+                'slotted': tuple(
+                    (slot, s.sid, s.telemetry.admitted_tick)
+                    for slot, s in enumerate(self.slot_session)
+                    if s is not None),
+                'finished': tuple(s.sid for s in self.finished),
+            }
+
     # -- the serving loop --------------------------------------------------
 
     def run_tick(self) -> int:
-        """One scheduler tick: evict, admit, render every live slot one frame.
+        """One scheduler tick: evict, admit, render every due slot one frame
+        (plan -> apply -> step -> observe, inline).
 
         Returns the number of frames rendered this tick.
         """
-        self.evict_finished()
-        self.admit_ready()
-        cams = {slot: self.slot_session[slot].current_cam()
-                for slot in self.active_slots()}
-        outputs = self.stepper.step(cams)
-        for slot, (_image, stats, timing) in outputs.items():
-            sess = self.slot_session[slot]
-            sess.telemetry.observe_frame(
-                latency_s=timing.latency_s,
-                hit_rate=float(stats.hit_rate),
-                saved_frac=float(stats.saved_frac),
-                sorted_flag=float(stats.sorted_this_frame),
-                sort_ms=timing.sort_ms,
-                shade_ms=timing.shade_ms)
-            sess.cursor += 1
-        if outputs:
-            tick_timing = self.stepper.last_timing
-            entry = {
-                'tick': self.tick,
-                'frames': len(outputs),
-                'sorted_slots': tick_timing.sorted_slots,
-                'sort_ms': tick_timing.sort_ms,
-                'shade_ms': tick_timing.shade_ms,
-                'kernel_ms': getattr(tick_timing, 'kernel_ms', None),
-            }
-            metrics = getattr(self.stepper, 'state_metrics', None)
-            if metrics is not None:
-                entry.update(metrics())
-            self.tick_log.append(entry)
-        self.tick += 1
-        return len(outputs)
+        t0 = time.perf_counter()
+        plan = self.plan_tick()
+        host = HostTiming(host_ms=(time.perf_counter() - t0) * 1e3)
+        self.apply_plan(plan)
+        outputs = self.stepper.step(plan.cams, plan=plan.sort_plan)
+        return self.observe_tick(plan, outputs, host=host)
 
     def drained(self) -> bool:
         return not self.pending and not self.active_slots()
 
-    def run(self, max_ticks: int = 100_000) -> list[ViewerSession]:
-        """Drive ticks until every submitted session has completed."""
-        while not self.drained():
-            self.run_tick()
-            self.evict_finished()
-            if self.tick >= max_ticks:
-                raise RuntimeError('serve loop did not drain')
-        return self.finished
+    def run(self, max_ticks: int = 100_000,
+            driver: str = 'sync') -> list[ViewerSession]:
+        """Drive ticks until every submitted session has completed.
+
+        ``driver='sync'`` is the virtual-clock host loop (deterministic,
+        bit-identical replay); ``driver='threaded'`` double-buffers host
+        planning against the device step (``repro.serve.events``).
+        """
+        return get_driver(driver, self).run(max_ticks)

@@ -67,6 +67,14 @@ Interface::
     stepper.last_timing                  # tick-level TickTiming of the last
                                          # non-empty step
     stepper.state_metrics()              # occupancy + state-memory bytes
+
+Async host-loop seam (``repro.serve.events``)::
+
+    plan = stepper.plan_step(cams)       # pure host planning (worker-safe)
+    infl = stepper.step_dispatch(cams, plan)  # host mutations + async
+                                              # device dispatch
+    out = stepper.step_finish(infl)      # block on the device, assemble
+    # step(cams, plan) == step_finish(step_dispatch(cams, plan))
 """
 from __future__ import annotations
 
@@ -115,6 +123,33 @@ class _SortGroup(NamedTuple):
     riders: tuple        # non-due co-located slots consolidated onto it
     entry: int           # pool index the group lands in
     sorts: bool          # False = adopted a fresh entry, no sort executed
+
+
+class _StepPlan(NamedTuple):
+    """Precomputed host scheduling for one ``step(cams)`` call (see
+    ``BatchedStepper.plan_step``): the pure planning output the async host
+    loop computes off-thread while the device executes the previous tick."""
+
+    active: frozenset    # slots rendering this step
+    admits: tuple        # slots sorting on admit (outside the cohort)
+    due: tuple           # all slots consuming a sort refresh this step
+    groups: tuple        # _SortGroup plan from the pose-cell scheduler
+
+
+class _InFlight(NamedTuple):
+    """A dispatched-but-unfinished batched step: everything ``step_finish``
+    needs to block, attribute timing and assemble per-slot outputs."""
+
+    cams: dict           # the step's {slot: cam} request
+    images: object       # dispatched (not yet synced) device arrays
+    stats: object
+    pos: dict            # slot -> lane in images/stats
+    t0: float            # perf_counter at step start
+    t1: float            # perf_counter at shade dispatch
+    sort_s: float        # host+device seconds of the sort phase
+    n_sched: int
+    n_admit: int
+    profile: object      # (prof_shared, prof_priv, cam_b, mask) or None
 
 
 class BatchedStepper:
@@ -170,6 +205,9 @@ class BatchedStepper:
         self._refs = np.zeros((self.num_scenes, self.pool_size), np.int64)
 
         self._slot_cams: list[Camera] = [cam0] * slots
+        # frames each slot rendered since it last consumed a sort refresh
+        # (drives the paced-slot staleness catch-up in _due_scheduled)
+        self._frames_since_due = np.zeros((slots,), np.int64)
         self._pending_sort: set[int] = set()   # admitted, not yet sorted
         self.sort_log: list[dict] = []         # per-step sort accounting
         self.last_timing: TickTiming | None = None
@@ -361,6 +399,7 @@ class BatchedStepper:
         self._pool_owner[:] = -1
         self._slot_pool[:] = 0
         self._refs[:] = 0
+        self._frames_since_due[:] = 0
         self._pending_sort.clear()
         self.global_tick = 0
         self.sort_log = []
@@ -381,15 +420,37 @@ class BatchedStepper:
             self.priv = self._admit_priv(self.priv, self._fresh_priv,
                                          jnp.int32(slot))
         self._slot_pool[slot] = 0
+        self._frames_since_due[slot] = 0
         # The slot's camera is only known at the next step(): run its
         # sort-on-admit there, outside the scheduled per-tick cohort.
         self._pending_sort.add(slot)
 
     def _due_scheduled(self, active: set, exclude: set) -> list[int]:
+        """Slots due for a scheduled sort refresh this tick: the cohort
+        residue leg (``global_tick % window == slot % window``) plus a
+        staleness catch-up for frame-paced viewers.
+
+        The residue leg assumes a slot renders every tick; a paced slot
+        (``ViewerSession.pace`` > 1) renders only every ``pace`` ticks, and
+        when its render ticks never align with its residue (e.g. ``pace %
+        window == 0`` off-phase) it would ride its admission sort forever
+        while faster co-resident viewers keep ``global_tick`` advancing.
+        The catch-up leg marks a slot due when the frame it is about to
+        render would otherwise be its ``window``-th since the last refresh
+        (``frames_since_due`` counts the rendered-unrefreshed frames, so
+        the trigger is ``>= window - 1``) — restoring the documented "no
+        frame renders from a sort older than ``window`` *frames*" bound on
+        the slot's own frame clock, at exactly the legacy refresh spacing.
+        For always-active (pace-1) slots the residue leg fires no later
+        than the catch-up could (a refresh every ``window`` ticks ==
+        ``window`` frames), so the legacy cohort cadence — and its
+        bit-parity oracles — are untouched.
+        """
         r = self.global_tick % self.window
         return [i for i in range(self.slots)
-                if i % self.window == r and i in active
-                and i not in exclude]
+                if i in active and i not in exclude
+                and (i % self.window == r
+                     or self._frames_since_due[i] >= self.window - 1)]
 
     def _plan_groups(self, due: list[int], active: set,
                      cells: dict[int, int]) -> list[_SortGroup]:
@@ -518,19 +579,52 @@ class BatchedStepper:
         self.shared = dataclasses.replace(
             self.shared, pool_refs=jnp.asarray(refs, jnp.int32))
 
-    def _slot_cell_key(self, slot: int) -> int:
-        """Pose-cell key for a slot's current camera.  In private mode
+    def _slot_cell_key(self, slot: int, cam: Camera) -> int:
+        """Pose-cell key for a slot rendering ``cam``.  In private mode
         (one viewer per scene) cells are moot — the slot id keys its own
         singleton group, sparing the quantization work."""
         if self.viewers_per_scene == 1:
             return slot
-        return posecell.pose_cell_key(self._slot_cams[slot],
-                                      cell_size=self.cell_size,
+        return posecell.pose_cell_key(cam, cell_size=self.cell_size,
                                       ang_bins=self.cell_ang_bins)
 
-    def step(self, cams: dict[int, Camera]) -> dict:
+    def plan_step(self, cams: dict[int, Camera],
+                  pending_admits=()) -> _StepPlan:
+        """Pure host planning for a coming ``step(cams)`` call: pose-cell
+        quantization, the sort-on-admit set, the due cohort and the sort
+        groups.  Reads only the host-side scheduler mirrors (never device
+        arrays) and mutates nothing — the async host loop runs this on a
+        worker thread while the device executes the previous tick.  The
+        caller must sequence it after the previous ``step_dispatch`` has
+        returned (that dispatch's host bookkeeping is this plan's input).
+
+        ``pending_admits`` names slots whose ``admit()`` is planned but not
+        yet applied — the manager plans ahead of admission, so those slots'
+        sort-on-admit must be scheduled here even though ``_pending_sort``
+        does not contain them yet.
+        """
+        active = set(cams)
+        if not cams or not self.cfg.use_s2:
+            return _StepPlan(frozenset(active), (), (), ())
+        cells = {i: self._slot_cell_key(i, cams[i]) for i in active}
+        # Sort-on-admit outside the tick's scheduled cohort: newly
+        # admitted slots must not render a stale or zero-filled entry.
+        admits = sorted((self._pending_sort | set(pending_admits)) & active)
+        sched = self._due_scheduled(active, exclude=set(admits))
+        due = sorted(set(admits) | set(sched))
+        groups = self._plan_groups(due, active, cells)
+        return _StepPlan(active=frozenset(active), admits=tuple(admits),
+                         due=tuple(due), groups=tuple(groups))
+
+    def step_dispatch(self, cams: dict[int, Camera],
+                      plan: Optional[_StepPlan] = None):
+        """Host scheduling + async device dispatch for one step.  Returns an
+        ``_InFlight`` handle; all host-side mutations (sort bookkeeping,
+        ``global_tick``, ``sort_log``) are complete when this returns — only
+        the device shade is still executing.  ``step_finish`` blocks on it.
+        """
         if not cams:
-            return {}
+            return None
         for slot, cam in cams.items():
             self._slot_cams[slot] = cam
         cam_b = stack_cameras(self._slot_cams)
@@ -539,19 +633,15 @@ class BatchedStepper:
         t0 = time.perf_counter()
         n_admit = n_sched = n_joined = 0
         if self.cfg.use_s2:
-            cells = {i: self._slot_cell_key(i) for i in active}
-            # Sort-on-admit outside the tick's scheduled cohort: newly
-            # admitted slots must not render a stale or zero-filled entry.
-            admits = sorted(self._pending_sort & active)
-            sched = self._due_scheduled(active, exclude=set(admits))
-            due = sorted(set(admits) | set(sched))
-            groups = self._plan_groups(due, active, cells)
+            if plan is None:
+                plan = self.plan_step(cams)
+            groups = list(plan.groups)
             sorting = [g for g in groups if g.sorts]
             if sorting:
                 self._run_sorts(cam_b, sorting)
             self._apply_assignments(groups, active)
             self._pending_sort -= active
-            admit_set = set(admits)
+            admit_set = set(plan.admits)
             n_admit = sum(1 for g in sorting if g.leader in admit_set)
             n_sched = len(sorting) - n_admit
             n_joined = (sum(len(g.members) for g in groups if not g.sorts)
@@ -564,7 +654,11 @@ class BatchedStepper:
             # Tick-level ``sorted_slots``/sort_log count only EXECUTED
             # sorts — the fleet's cost.  Their ratio IS the sharing win.
             # (Riders are not due and not flagged: cadence untouched.)
-            sorted_set = set(due)
+            sorted_set = set(plan.due)
+            for i in active:
+                self._frames_since_due[i] = (0 if i in sorted_set
+                                             else self._frames_since_due[i]
+                                             + 1)
             if sorting:
                 jax.block_until_ready(self.shared.pool.lists.indices)
         else:
@@ -584,6 +678,7 @@ class BatchedStepper:
         do_profile = (self.profile_every > 0
                       and self.cfg.backend == 'pallas' and self.cfg.use_rc
                       and self.global_tick % self.profile_every == 0)
+        profile = None
         if do_profile:
             # the shade call donates the state — keep a copy to profile
             t_prof = time.perf_counter()
@@ -591,6 +686,9 @@ class BatchedStepper:
             prof_priv = copy_pytree(self.priv)
             jax.block_until_ready(prof_shared.cache.tags)
             self.profile_s += time.perf_counter() - t_prof
+            active_mask_full = jnp.asarray(
+                [i in active for i in range(self.slots)], bool)
+            profile = (prof_shared, prof_priv, cam_b, active_mask_full)
 
         v = self.viewers_per_scene
         active_scenes = sorted({int(self._scene_of[i]) for i in active})
@@ -630,31 +728,45 @@ class BatchedStepper:
                 scene_idx, scene_tgt, slot_idx, slot_tgt, act_sub)
             pos = {slot: j for j, slot in enumerate(slots_g[:len(
                 active_scenes) * v]) if slot in active}
-        jax.block_until_ready(images)
-        t2 = time.perf_counter()
-
-        kernel_ms = None
-        if do_profile:
-            t_prof = time.perf_counter()
-            active_mask_full = jnp.asarray(
-                [i in active for i in range(self.slots)], bool)
-            kernel_ms = self._profile_kernels(prof_shared, prof_priv, cam_b,
-                                              active_mask_full)
-            self.profile_s += time.perf_counter() - t_prof
 
         self.global_tick += 1
         self.sort_log.append({'scheduled': n_sched, 'admit': n_admit,
                               'joined': n_joined})
-        timing = TickTiming(latency_s=t2 - t0, sort_ms=sort_s * 1e3,
-                            shade_ms=(t2 - t1) * 1e3,
-                            sorted_slots=n_sched + n_admit,
+        return _InFlight(cams=cams, images=images, stats=stats, pos=pos,
+                         t0=t0, t1=t1, sort_s=sort_s, n_sched=n_sched,
+                         n_admit=n_admit, profile=profile)
+
+    def step_finish(self, infl) -> dict:
+        """Block on a dispatched step's device work and assemble the per-slot
+        outputs + tick timing."""
+        if infl is None:
+            return {}
+        jax.block_until_ready(infl.images)
+        t2 = time.perf_counter()
+
+        kernel_ms = None
+        if infl.profile is not None:
+            t_prof = time.perf_counter()
+            prof_shared, prof_priv, cam_b, active_mask_full = infl.profile
+            kernel_ms = self._profile_kernels(prof_shared, prof_priv, cam_b,
+                                              active_mask_full)
+            self.profile_s += time.perf_counter() - t_prof
+
+        timing = TickTiming(latency_s=t2 - infl.t0,
+                            sort_ms=infl.sort_s * 1e3,
+                            shade_ms=(t2 - infl.t1) * 1e3,
+                            sorted_slots=infl.n_sched + infl.n_admit,
                             kernel_ms=kernel_ms)
         self.last_timing = timing
         # every rider of the batch waited for the whole tick
-        return {slot: (images[pos[slot]],
-                       jax.tree.map(lambda x: x[pos[slot]], stats),
+        return {slot: (infl.images[infl.pos[slot]],
+                       jax.tree.map(lambda x: x[infl.pos[slot]], infl.stats),
                        timing)
-                for slot in cams}
+                for slot in infl.cams}
+
+    def step(self, cams: dict[int, Camera],
+             plan: Optional[_StepPlan] = None) -> dict:
+        return self.step_finish(self.step_dispatch(cams, plan))
 
     # -- telemetry ----------------------------------------------------------
 
@@ -724,7 +836,21 @@ class SequentialStepper:
         self.last_timing = None
         self._last_active = 0
 
-    def step(self, cams: dict[int, Camera]) -> dict:
+    def step_dispatch(self, cams: dict[int, Camera], plan=None):
+        """Nothing dispatches ahead on the sequential engine: each slot's
+        step blocks for its per-slot latency attribution, so the whole tick
+        executes inside ``step_finish``.  The threaded host loop still
+        overlaps its planning with that execution (the jitted per-slot
+        steps release the GIL) — the uniform protocol at the baseline's
+        pipelining depth."""
+        del plan
+        return cams
+
+    def step_finish(self, cams) -> dict:
+        return self.step(cams) if cams else {}
+
+    def step(self, cams: dict[int, Camera], plan=None) -> dict:
+        del plan   # host sort planning is a batched-engine concept
         out = {}
         sorts = 0
         t_start = time.perf_counter()

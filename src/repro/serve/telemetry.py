@@ -133,6 +133,20 @@ def tick_rollup(tick_log: list[dict], warmup_ticks: int = 0) -> dict:
     live sort-pool entries (``max_sort_pool_live`` — the O(distinct pose
     cells) figure the scene-shared pool exists to shrink below O(S)) and
     the final cache/sort-pool byte split.
+
+    When ticks carry the host-pipeline attribution (``latency_ms`` /
+    ``host_ms`` / ``overlap_ms``, from the plan/apply/observe decomposition
+    in ``repro.serve.session``) the rollup adds:
+
+    * ``p50_frame_ms`` / ``p95_frame_ms`` — per-frame latency percentiles
+      (each tick's latency weighted by the frames that rode it — the number
+      an open-loop client actually experiences);
+    * ``host_ms`` — mean host planning (admission/eviction/pose-cell) time
+      per tick;
+    * ``host_overlap`` — the fraction of total host planning time that ran
+      while the device window of a concurrent tick was open.  0.0 under the
+      synchronous virtual-clock driver by construction; > 0 is the threaded
+      driver's whole point (host work hidden behind the device step).
     """
     log = [t for t in tick_log if t['tick'] >= warmup_ticks]
     if not log:
@@ -153,6 +167,21 @@ def tick_rollup(tick_log: list[dict], warmup_ticks: int = 0) -> dict:
         'mean_shade_ms': float(np.mean([t['shade_ms'] for t in log])),
         'kernel_ms': kernel_ms,
     }
+    # per-frame latency percentiles: each tick's latency, weighted by the
+    # frames that rode it (legacy logs without latency_ms just omit these)
+    lat = np.repeat([t['latency_ms'] for t in log if 'latency_ms' in t],
+                    [t['frames'] for t in log if 'latency_ms' in t])
+    if lat.size:
+        roll['p50_frame_ms'] = float(np.percentile(lat, 50))
+        roll['p95_frame_ms'] = float(np.percentile(lat, 95))
+    host = [t for t in log if 'host_ms' in t]
+    if host:
+        total_host = float(np.sum([t['host_ms'] for t in host]))
+        total_overlap = float(np.sum([t.get('overlap_ms', 0.0)
+                                      for t in host]))
+        roll['host_ms'] = float(np.mean([t['host_ms'] for t in host]))
+        roll['host_overlap'] = (min(1.0, total_overlap / total_host)
+                                if total_host > 0 else 0.0)
     # occupancy values may still be unsynced device scalars (the stepper
     # defers the host transfer out of the timed serving loop) — float()
     # here is where they land

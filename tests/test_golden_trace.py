@@ -1,0 +1,123 @@
+"""Golden-trace regression: per-frame cache-decision digests on a fixed
+trajectory, committed to ``tests/golden/serve_trace.json``.
+
+The serving stack asserts images only to float32 ulp (XLA reorders FMA
+contractions across program variants), so a *silent semantic drift* in
+``render_step``/``shade_phase`` — a changed hit decision, a shifted sort
+cadence, a different LRU victim — could hide inside the ulp tolerance and
+still pass every parity test.  This test pins the INTEGER decision stream
+instead, bit-exactly, for both backends:
+
+* ``sorted``  — the per-frame sort cadence (S^2 window schedule);
+* ``hits``    — the radiance-cache hit count (the hit MASK is pinned
+  transitively: tags pin which groups inserted — the miss set — and the
+  age digest pins which entries the LRU touched, i.e. the hit set);
+* ``tags`` / ``age`` / ``clock`` — sha256 of the cache's integer state
+  after the frame: every insert/evict/touch decision in order.
+
+If this test fails and the change is INTENTIONAL (a new cache policy, a
+different sort schedule), regenerate the golden file and commit it with
+the explanation::
+
+    PYTHONPATH=src python tests/test_golden_trace.py
+
+If it fails and you didn't mean to change cache behavior: that's the
+regression it exists to catch — ``render_step`` or ``shade_phase`` is
+making different decisions than it did yesterday.
+"""
+import hashlib
+import json
+import pathlib
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.pipeline import LuminaConfig, init_viewer_state, render_step
+from repro.data.scenes import structured_scene
+from repro.data.trajectory import orbit_trajectory
+
+GOLDEN = pathlib.Path(__file__).parent / 'golden' / 'serve_trace.json'
+BACKENDS = ('reference', 'pallas')
+
+# the fixed trajectory: must never change, or the golden file is void
+SEED, GAUSSIANS, FRAMES, WIDTH = 7, 800, 8, 64
+CAPACITY, WINDOW = 128, 3
+
+
+def _digest(arr) -> str:
+    return hashlib.sha256(np.ascontiguousarray(np.asarray(arr))
+                          .tobytes()).hexdigest()[:16]
+
+
+def trace_digests(backend: str) -> list:
+    scene = structured_scene(jax.random.PRNGKey(SEED), GAUSSIANS)
+    cfg = LuminaConfig(capacity=CAPACITY, window=WINDOW, backend=backend)
+    cams = orbit_trajectory(FRAMES, width=WIDTH, height_px=WIDTH)
+    state = init_viewer_state(scene, cfg, cams[0])
+    step = jax.jit(lambda st, cm: render_step(scene, st, cm, cfg))
+    rows = []
+    for f, cam in enumerate(cams):
+        state, image, stats = step(state, cam)
+        n_pix = int(np.prod(np.asarray(image).shape[:2]))
+        hit_rate = float(stats.hit_rate)
+        hits = round(hit_rate * n_pix)
+        # hit_rate is hits / n_pix with a power-of-two n_pix: the count
+        # recovers exactly or the stat itself drifted
+        assert abs(hits - hit_rate * n_pix) < 1e-3, 'hit_rate not a count'
+        cache = state.cache
+        rows.append({
+            'frame': f,
+            'sorted': int(float(stats.sorted_this_frame)),
+            'hits': hits,
+            'tags': _digest(cache.tags),
+            'age': _digest(cache.age),
+            'clock': int(np.asarray(cache.clock).max()),
+        })
+    return rows
+
+
+@pytest.mark.parametrize('backend', BACKENDS)
+def test_cache_decisions_match_golden_trace(backend):
+    assert GOLDEN.exists(), (
+        f'{GOLDEN} missing — regenerate with: '
+        f'PYTHONPATH=src python {__file__}')
+    golden = json.loads(GOLDEN.read_text())
+    meta = golden['meta']
+    assert (meta['seed'], meta['gaussians'], meta['frames'], meta['width'],
+            meta['capacity'], meta['window']) == (
+        SEED, GAUSSIANS, FRAMES, WIDTH, CAPACITY, WINDOW), (
+        'golden file was generated for a different fixed trajectory')
+    got = trace_digests(backend)
+    want = golden[backend]
+    for g, w in zip(got, want):
+        assert g == w, (
+            f'{backend} frame {g["frame"]}: cache decisions drifted.\n'
+            f'  got  {g}\n  want {w}\n'
+            f'(intentional? regenerate: PYTHONPATH=src python {__file__})')
+    assert len(got) == len(want)
+
+
+def test_backends_agree_on_decision_stream():
+    """Both backends must make the SAME integer decisions (images may
+    differ by ulps; decisions may not) — asserted via the committed file so
+    a drifting backend is flagged even when its own column was regenerated.
+    """
+    golden = json.loads(GOLDEN.read_text())
+    assert golden['reference'] == golden['pallas']
+
+
+def _regenerate():
+    payload = {'meta': {'seed': SEED, 'gaussians': GAUSSIANS,
+                        'frames': FRAMES, 'width': WIDTH,
+                        'capacity': CAPACITY, 'window': WINDOW}}
+    for backend in BACKENDS:
+        payload[backend] = trace_digests(backend)
+        print(f'{backend}: {len(payload[backend])} frames')
+    GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN.write_text(json.dumps(payload, indent=1) + '\n')
+    print(f'wrote {GOLDEN}')
+
+
+if __name__ == '__main__':
+    _regenerate()

@@ -1,0 +1,168 @@
+"""Property tests for ``repro.core.posecell`` — the quantization the
+scene-level sort scheduler trusts.
+
+Three families, matching the module's documented contract:
+
+* **margin-budget stability** — any two cameras whose positions sit in the
+  interior of one grid cell and whose orientation stays within half an
+  angular bin of a bin center quantize identically: the pose drift the
+  scheduler treats as "close enough" can never flip a key;
+* **zero-centered bins** — upright cameras (roll ~ 0) and axis-aligned
+  headings sit at bin CENTERS, so float noise around zero cannot flip a
+  bucket (the half-bin offset in ``angle_bucket``);
+* **neighbor structure** — moving exactly one grid pitch along one world
+  axis changes exactly one bucket coordinate by exactly one (and no
+  angular coordinate), i.e. the position grid really is a grid.
+
+Under the real ``hypothesis`` package (CI) these explore the strategy
+space; under the conftest shim they run deterministic examples and report
+as skipped.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.camera import make_camera
+from repro.core.posecell import (ANG_BINS, CELL_SIZE, angle_bucket,
+                                 pose_cell_buckets, pose_cell_key)
+
+BIN_W = 2.0 * np.pi / ANG_BINS            # azimuth/roll bucket width (rad)
+
+
+def _cam(position, quat=(1.0, 0.0, 0.0, 0.0)):
+    return make_camera(position, quat, fov_x_deg=60.0, width=64, height=64)
+
+
+def _axis_quat(axis, theta):
+    """Unit quaternion for a rotation of ``theta`` about a unit ``axis``."""
+    axis = np.asarray(axis, np.float64)
+    s = np.sin(theta / 2.0)
+    return (np.cos(theta / 2.0), *(s * axis))
+
+
+# -- margin-budget stability -------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.tuples(st.integers(-40, 40), st.integers(-40, 40),
+                 st.integers(-40, 40)),
+       st.tuples(st.floats(-0.45, 0.45), st.floats(-0.45, 0.45),
+                 st.floats(-0.45, 0.45)),
+       st.tuples(st.floats(-0.45, 0.45), st.floats(-0.45, 0.45),
+                 st.floats(-0.45, 0.45)))
+def test_key_stable_inside_cell(cell, off_a, off_b):
+    """Two cameras anywhere in the interior of one position cell (same
+    orientation) share buckets and key — the margin budget's position leg."""
+    base = (np.asarray(cell, np.float64) + 0.5) * CELL_SIZE
+    pa = base + np.asarray(off_a) * CELL_SIZE
+    pb = base + np.asarray(off_b) * CELL_SIZE
+    assert pose_cell_buckets(_cam(pa)) == pose_cell_buckets(_cam(pb))
+    assert pose_cell_key(_cam(pa)) == pose_cell_key(_cam(pb))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.sampled_from([(0.0, 0.0, 1.0), (0.0, 1.0, 0.0), (1.0, 0.0, 0.0)]),
+       st.floats(-0.45, 0.45),
+       st.floats(0.05, 3.0))
+def test_key_stable_within_angular_bin(axis, frac, radius):
+    """Rotating the camera by less than half the TIGHTEST angular bin (the
+    elevation axis spans pi over ANG_BINS, half an azimuth bin) about any
+    principal axis, from the upright pose, never flips the key — the margin
+    budget's orientation leg, enabled by zero-centered bins."""
+    p = (radius, 0.5 * CELL_SIZE, 0.5 * CELL_SIZE)
+    bin_w_el = np.pi / ANG_BINS
+    theta = frac * bin_w_el * 0.9   # strictly inside the half-bin guard band
+    ref = pose_cell_buckets(_cam(p))
+    got = pose_cell_buckets(_cam(p, _axis_quat(axis, theta)))
+    assert got == ref, (axis, theta)
+
+
+# -- zero-centered bins ------------------------------------------------------
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(0, ANG_BINS - 1), st.floats(-0.45, 0.45))
+def test_angle_bucket_centers(k, frac):
+    """Every ``lo + k * width`` is a bin CENTER: noise up to +-0.45 bins
+    around it stays in bucket k (mod wrap)."""
+    lo, span = -np.pi, 2.0 * np.pi
+    center = lo + k * span / ANG_BINS
+    assert angle_bucket(center + frac * BIN_W, lo, span,
+                        ANG_BINS) == k % ANG_BINS
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(1e-9, 1e-4))
+def test_upright_roll_noise_never_flips(eps):
+    """The ubiquitous upright camera: tiny roll jitter of either sign (the
+    float noise a pose pipeline produces) lands in one bucket — this is the
+    whole point of the half-bin offset."""
+    p = (1.0, 0.5 * CELL_SIZE, 0.5 * CELL_SIZE)
+    plus = pose_cell_buckets(_cam(p, _axis_quat((0, 0, 1.0), eps)))
+    minus = pose_cell_buckets(_cam(p, _axis_quat((0, 0, 1.0), -eps)))
+    assert plus == minus == pose_cell_buckets(_cam(p))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, ANG_BINS - 1), st.floats(-0.4, 0.4))
+def test_angle_bucket_periodic_wrap(k, frac):
+    """Periodic axes wrap: x and x + 2*pi share a bucket (away from bin
+    boundaries, where float addition noise is irrelevant)."""
+    lo, span = -np.pi, 2.0 * np.pi
+    x = lo + (k + frac) * span / ANG_BINS
+    assert angle_bucket(x, lo, span, ANG_BINS) == \
+        angle_bucket(x + span, lo, span, ANG_BINS)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.floats(-2.0, 2.0))
+def test_elevation_clamps_never_wraps(el):
+    """The non-periodic elevation axis clamps out-of-range values into
+    [0, bins-1] — straight-up must never alias straight-down."""
+    b = angle_bucket(el, -np.pi / 2, np.pi, ANG_BINS, periodic=False)
+    assert 0 <= b <= ANG_BINS - 1
+    lo_b = angle_bucket(-np.pi / 2, -np.pi / 2, np.pi, ANG_BINS,
+                        periodic=False)
+    hi_b = angle_bucket(np.pi / 2, -np.pi / 2, np.pi, ANG_BINS,
+                        periodic=False)
+    assert lo_b != hi_b
+
+
+# -- neighbor structure ------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.tuples(st.integers(-40, 40), st.integers(-40, 40),
+                 st.integers(-40, 40)),
+       st.tuples(st.floats(0.1, 0.9), st.floats(0.1, 0.9),
+                 st.floats(0.1, 0.9)),
+       st.integers(0, 2))
+def test_neighbor_cells_differ_in_exactly_one_coordinate(cell, frac, axis):
+    """One grid pitch along one world axis moves exactly that bucket
+    coordinate by exactly one; orientation buckets are untouched."""
+    p = (np.asarray(cell, np.float64) + np.asarray(frac)) * CELL_SIZE
+    q = np.array(p)
+    q[axis] += CELL_SIZE
+    a = pose_cell_buckets(_cam(p))
+    b = pose_cell_buckets(_cam(q))
+    diffs = [i for i in range(6) if a[i] != b[i]]
+    assert diffs == [axis]
+    assert b[axis] - a[axis] == 1
+    assert pose_cell_key(_cam(p)) != pose_cell_key(_cam(q))
+
+
+# -- key hygiene -------------------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(st.tuples(st.floats(-2.0, 2.0), st.floats(-2.0, 2.0),
+                 st.floats(-2.0, 2.0)),
+       st.tuples(st.floats(-1.0, 1.0), st.floats(-1.0, 1.0),
+                 st.floats(-1.0, 1.0), st.floats(-1.0, 1.0)))
+def test_key_deterministic_and_sentinel_safe(pos, quat):
+    """Keys are deterministic, non-negative and < 2**31 — so the pool's
+    -1 'free entry' sentinel can never collide with a real cell."""
+    qn = np.asarray(quat, np.float64)
+    if np.linalg.norm(qn) < 1e-6:
+        qn = np.array([1.0, 0.0, 0.0, 0.0])
+    cam = _cam(pos, tuple(qn))
+    k1, k2 = pose_cell_key(cam), pose_cell_key(cam)
+    assert k1 == k2
+    assert 0 <= k1 < 2 ** 31
+    assert k1 == pytest.approx(k1)  # plain int, json-safe
