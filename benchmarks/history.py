@@ -1,0 +1,218 @@
+"""BENCH regression gating: diff fresh benchmark runs against the
+committed baseline with per-metric tolerance bands.
+
+``BENCH_serve.json`` / ``BENCH_kernel.json`` at the repo root are the
+committed perf trajectory; CI regenerates them on every build.  This module
+compares the fresh payloads against the baseline (the committed copy at a
+git ref, ``HEAD`` by default) metric by metric and **fails on regressions**
+with a readable per-metric diff, so a PR that quietly halves
+``chunk_savings_%`` or serializes the threaded host pipeline back into the
+render tick is caught by the build, not by the next person rereading BENCH
+JSON by hand.
+
+Rows are matched by identity (viewers / mode / backend / viewers_per_scene
+/ driver / stagger for serve; metric name for kernel) and only the
+intersection is gated — a quick CI run gates the viewer counts it measures
+against the same rows of the full committed baseline.  Tolerance bands are
+deliberately wide for wall-clock metrics (the container clock is noisy and
+quick runs render fewer frames) and tight for structural ones:
+
+    fps_per_viewer   may drop to 50% of baseline  (catches serialization
+                     pathologies, tolerates CI noise)
+    p95_frame_ms     may grow to 2.5x baseline
+    host_overlap     must stay positive wherever the baseline is, and
+                     above 10% of it
+    hit_rate         may drop 10% relative (cache decisions are
+                     deterministic; this is a structural metric)
+    chunk_savings_%  must stay positive and above 10% of baseline
+
+Usage::
+
+    PYTHONPATH=src python -m benchmarks.history --check
+    PYTHONPATH=src python -m benchmarks.history --check --suite serve \\
+        --fresh /tmp/BENCH_serve.json --baseline BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import subprocess
+from pathlib import Path
+from typing import Optional
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+SUITES = ('serve', 'kernel')
+
+# row-identity keys per suite (missing keys default, so older payloads
+# still match)
+ROW_KEYS = {
+    'serve': (('viewers', None), ('mode', None), ('backend', None),
+              ('viewers_per_scene', 1), ('driver', 'sync'), ('stagger', 0)),
+    'kernel': (('metric', None),),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Band:
+    """Tolerance band for one gated metric.
+
+    ``rel_tol`` is the allowed relative regression vs baseline (0.5 = the
+    fresh value may be 50% worse).  ``abs_floor`` is a hard floor the fresh
+    value must stay strictly above — applied only where the baseline itself
+    clears it (a sync row's ``host_overlap`` of 0.0 is not a regression).
+    """
+
+    metric: str
+    higher_is_better: bool
+    rel_tol: float
+    abs_floor: Optional[float] = None
+
+
+BANDS = {
+    'serve': (
+        Band('fps_per_viewer', higher_is_better=True, rel_tol=0.5),
+        Band('p95_frame_ms', higher_is_better=False, rel_tol=1.5),
+        Band('host_overlap', higher_is_better=True, rel_tol=0.9,
+             abs_floor=0.0),
+        Band('hit_rate', higher_is_better=True, rel_tol=0.1),
+    ),
+    'kernel': (
+        Band('chunk_savings_%', higher_is_better=True, rel_tol=0.9,
+             abs_floor=0.0),
+        Band('hit_rate_mean', higher_is_better=True, rel_tol=0.1),
+    ),
+}
+
+
+def _row_id(suite: str, row: dict) -> tuple:
+    return tuple(row.get(key, default) for key, default in ROW_KEYS[suite])
+
+
+def _row_metrics(suite: str, row: dict) -> dict:
+    """Gateable metric -> value view of one row (kernel rows are one
+    (metric, value) pair each; serve rows carry their metrics inline)."""
+    if suite == 'kernel':
+        return {row['metric']: row['value']}
+    return row
+
+
+def _fmt_id(suite: str, rid: tuple) -> str:
+    parts = [f'{key}={val}' for (key, _), val in zip(ROW_KEYS[suite], rid)]
+    return f"{suite}[{' '.join(parts)}]"
+
+
+def check_payloads(suite: str, baseline: dict, fresh: dict
+                   ) -> tuple[list, list]:
+    """Gate ``fresh`` rows against matching ``baseline`` rows.
+
+    Returns ``(violations, report_lines)`` — human-readable lines for every
+    gated metric, violations repeated in the first list.  Pure function of
+    the two payloads (the unit tests drive it with synthetic degradations).
+    """
+    base_rows = {_row_id(suite, r): r for r in baseline['rows']}
+    violations, report = [], []
+    gated = 0
+    for row in fresh['rows']:
+        rid = _row_id(suite, row)
+        base = base_rows.get(rid)
+        if base is None:
+            report.append(f'{_fmt_id(suite, rid)}: no baseline row '
+                          f'(skipped)')
+            continue
+        fresh_m = _row_metrics(suite, row)
+        base_m = _row_metrics(suite, base)
+        for band in BANDS[suite]:
+            bv, fv = base_m.get(band.metric), fresh_m.get(band.metric)
+            if not isinstance(bv, (int, float)) \
+                    or not isinstance(fv, (int, float)):
+                continue
+            gated += 1
+            problems = []
+            if band.abs_floor is not None and bv > band.abs_floor \
+                    and fv <= band.abs_floor:
+                problems.append(f'fell to {fv:.4g} '
+                                f'(hard floor {band.abs_floor:g})')
+            if band.higher_is_better:
+                allowed = bv * (1.0 - band.rel_tol)
+                if fv < allowed:
+                    problems.append(f'below tolerance '
+                                    f'{allowed:.4g} (= baseline '
+                                    f'- {band.rel_tol:.0%})')
+            else:
+                allowed = bv * (1.0 + band.rel_tol)
+                if fv > allowed:
+                    problems.append(f'above tolerance '
+                                    f'{allowed:.4g} (= baseline '
+                                    f'+ {band.rel_tol:.0%})')
+            line = (f'{_fmt_id(suite, rid)} {band.metric}: '
+                    f'{fv:.4g} vs baseline {bv:.4g}')
+            if problems:
+                line += ' REGRESSED: ' + '; '.join(problems)
+                violations.append(line)
+            else:
+                line += ' ok'
+            report.append(line)
+    if not gated:
+        line = f'{suite}: no gateable metric pairs between payloads'
+        violations.append(line)
+        report.append(line)
+    return violations, report
+
+
+def load_baseline(suite: str, ref: str = 'HEAD') -> dict:
+    """The committed BENCH payload at a git ref."""
+    out = subprocess.run(
+        ['git', '-C', str(REPO_ROOT), 'show', f'{ref}:BENCH_{suite}.json'],
+        capture_output=True, text=True, check=True)
+    return json.loads(out.stdout)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__.strip().splitlines()[0])
+    ap.add_argument('--check', action='store_true',
+                    help='gate fresh BENCH payloads against the baseline; '
+                         'exit 1 on any regression')
+    ap.add_argument('--suite', choices=SUITES, action='append',
+                    help='suite(s) to gate (default: all)')
+    ap.add_argument('--fresh', default=None, metavar='PATH',
+                    help='fresh payload path (single --suite only; default '
+                         'BENCH_<suite>.json at the repo root)')
+    ap.add_argument('--baseline', default=None, metavar='PATH',
+                    help='baseline payload path (single --suite only; '
+                         'default: the committed copy at --baseline-ref)')
+    ap.add_argument('--baseline-ref', default='HEAD',
+                    help='git ref holding the committed baseline '
+                         '(default HEAD)')
+    args = ap.parse_args(argv)
+    if not args.check:
+        ap.error('nothing to do (pass --check)')
+    suites = tuple(args.suite) if args.suite else SUITES
+    if (args.fresh or args.baseline) and len(suites) != 1:
+        ap.error('--fresh/--baseline need exactly one --suite')
+
+    failed = False
+    for suite in suites:
+        fresh_path = Path(args.fresh) if args.fresh \
+            else REPO_ROOT / f'BENCH_{suite}.json'
+        fresh = json.loads(fresh_path.read_text())
+        if args.baseline:
+            baseline = json.loads(Path(args.baseline).read_text())
+        else:
+            baseline = load_baseline(suite, args.baseline_ref)
+        violations, report = check_payloads(suite, baseline, fresh)
+        print(f'== {suite}: fresh {fresh_path} vs baseline '
+              f'{args.baseline or args.baseline_ref} ==')
+        for line in report:
+            print('  ' + line)
+        if violations:
+            failed = True
+            print(f'  -> {len(violations)} regression(s)')
+        else:
+            print('  -> within tolerance')
+    return 1 if failed else 0
+
+
+if __name__ == '__main__':
+    raise SystemExit(main())

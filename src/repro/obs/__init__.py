@@ -1,0 +1,30 @@
+"""Observability for the serving stack: span tracing, typed metrics,
+Perfetto export.
+
+  * ``trace``   — low-overhead span/instant tracer with host / host-worker
+    / device tracks (``NULL`` no-op tracer by default);
+  * ``export``  — Chrome trace-event JSON (Perfetto / ``chrome://tracing``)
+    serialization + schema validation;
+  * ``metrics`` — typed counter/gauge/histogram/series registry the
+    steppers and ``SessionManager`` publish into; ``tick_rollup`` is
+    recomputable from it bit-compatibly.
+
+This package deliberately imports nothing from ``repro.serve`` at module
+scope (the serving layers import *it*); the one telemetry reuse in
+``metrics.tick_rollup_from_metrics`` is deferred.
+"""
+from repro.obs.export import (to_chrome_trace, track_spans,
+                              validate_chrome_trace, write_trace)
+from repro.obs.metrics import (Counter, Gauge, Histogram, Registry, Series,
+                               publish_tick, tick_log_from_registry,
+                               tick_rollup_from_metrics)
+from repro.obs.trace import (NULL, TRACK_DEVICE, TRACK_HOST, TRACK_WORKER,
+                             TraceEvent, Tracer, span_structure)
+
+__all__ = [
+    'Tracer', 'TraceEvent', 'NULL', 'span_structure',
+    'TRACK_HOST', 'TRACK_WORKER', 'TRACK_DEVICE',
+    'to_chrome_trace', 'write_trace', 'validate_chrome_trace', 'track_spans',
+    'Counter', 'Gauge', 'Histogram', 'Series', 'Registry',
+    'publish_tick', 'tick_log_from_registry', 'tick_rollup_from_metrics',
+]

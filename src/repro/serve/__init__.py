@@ -23,6 +23,11 @@ Layers (bottom-up):
     per-phase ``sort_ms``+``shade_ms``, fleet ``tick_rollup`` (now with
     per-frame p50/p95 latency and the host-overlap fraction);
   * ``render``    — the CLI entrypoint (``python -m repro.serve.render``).
+
+Cross-cutting: every layer publishes spans/instants into a ``repro.obs``
+tracer and typed metrics into a ``repro.obs.metrics.Registry`` (both
+injected via ``SessionManager``; no-ops by default) — see the README's
+"Observability" section and ``--trace-out`` / ``--metrics-out`` on the CLI.
 """
 from repro.serve.events import (HostTiming, SyncDriver, ThreadedDriver,
                                 TickPlan)

@@ -175,24 +175,30 @@ class ThreadedDriver:
             plan = mgr.plan_tick()
             host0 = HostTiming(host_ms=(time.perf_counter() - t0) * 1e3)
             while True:
-                mgr.apply_plan(plan)
-                if mgr.drained():
-                    break
-                t_disp = time.perf_counter()
-                inflight = dispatch(plan.cams, plan=plan.sort_plan)
-                # all host mutations for tick t are committed by now; hand
-                # the worker tick t+1 while the device crunches tick t
-                cmd_q.put((plan.tick + 1, frozenset(plan.cams)))
-                outputs = finish(inflight)
-                t_ready = time.perf_counter()
-                kind, nxt, p0, p1 = out_q.get()
-                if kind == 'error':
-                    raise nxt
-                overlap_s = max(0.0, min(p1, t_ready) - max(p0, t_disp))
-                mgr.observe_tick(plan, outputs, host=host0)
-                host0 = HostTiming(host_ms=(p1 - p0) * 1e3,
-                                   overlap_ms=overlap_s * 1e3)
-                plan = nxt
+                # the tick span lives on the 'host' track; the worker's
+                # plan_tick span for t+1 lands on 'host-worker' and the
+                # stepper's shade window on 'device' — the three-lane
+                # overlap picture Perfetto renders (repro.obs)
+                with mgr.tracer.span('tick', tick=plan.tick):
+                    mgr.apply_plan(plan)
+                    if mgr.drained():
+                        break
+                    t_disp = time.perf_counter()
+                    inflight = dispatch(plan.cams, plan=plan.sort_plan)
+                    # all host mutations for tick t are committed by now;
+                    # hand the worker tick t+1 while the device crunches
+                    # tick t
+                    cmd_q.put((plan.tick + 1, frozenset(plan.cams)))
+                    outputs = finish(inflight)
+                    t_ready = time.perf_counter()
+                    kind, nxt, p0, p1 = out_q.get()
+                    if kind == 'error':
+                        raise nxt
+                    overlap_s = max(0.0, min(p1, t_ready) - max(p0, t_disp))
+                    mgr.observe_tick(plan, outputs, host=host0)
+                    host0 = HostTiming(host_ms=(p1 - p0) * 1e3,
+                                       overlap_ms=overlap_s * 1e3)
+                    plan = nxt
                 if mgr.tick >= max_ticks:
                     raise RuntimeError('serve loop did not drain')
         finally:

@@ -18,6 +18,7 @@ import argparse
 
 import jax
 
+from repro import obs
 from repro.core.pipeline import LuminaConfig
 from repro.data.scenes import structured_scene
 from repro.data.trajectory import orbit_trajectory
@@ -65,7 +66,8 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
           viewers_per_scene: int = 1, arrivals: str = 'stagger',
           rate: float = 0.5, burst: int = 4, gap: int = 8, jitter: int = 0,
           pace: int = 1, pace_jitter: int = 0,
-          driver: str = 'sync', print_fn=print) -> dict:
+          driver: str = 'sync', trace_out: str | None = None,
+          metrics_out: str | None = None, print_fn=print) -> dict:
     """Run the serving loop to completion; returns the aggregate rollup.
 
     ``backend`` selects the shade implementation ('reference' | 'pallas');
@@ -77,6 +79,11 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     ``seed`` — see ``repro.serve.traffic``) and ``driver`` the host loop:
     'sync' (virtual clock, deterministic replay) or 'threaded' (host
     admission/planning double-buffered against the device step).
+
+    ``trace_out`` writes the run's span trace as Chrome trace-event JSON
+    (open in https://ui.perfetto.dev — host / host-worker / device tracks);
+    ``metrics_out`` dumps the typed metrics registry snapshot
+    (``repro.obs``).
     """
     if viewers < 1 or frames < 1:
         raise SystemExit('--viewers and --frames must be >= 1')
@@ -106,10 +113,20 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
         stepper = BatchedStepper(scene, cfg, cam0, slots,
                                  profile_every=profile_every,
                                  viewers_per_scene=viewers_per_scene)
-    mgr = SessionManager(stepper, slots)
+    tracer = obs.Tracer() if trace_out else None
+    mgr = SessionManager(stepper, slots, tracer=tracer)
     for sess in sessions:
         mgr.submit(sess)
     finished = mgr.run(driver=driver)
+    if trace_out:
+        obs.write_trace(trace_out, tracer)
+        print_fn(f'-- trace: {len(tracer.events)} events -> {trace_out} '
+                 f'(load in https://ui.perfetto.dev)')
+    if metrics_out:
+        with open(metrics_out, 'w') as f:
+            f.write(mgr.metrics.to_json(indent=1))
+        print_fn(f'-- metrics: {len(mgr.metrics.names())} instruments -> '
+                 f'{metrics_out}')
 
     summaries = [s.telemetry.summary() for s in
                  sorted(finished, key=lambda s: s.sid)]
@@ -139,7 +156,8 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     print_fn(format_table(summaries))
     print_fn(f"-- {agg['mode']} ({backend}): {agg['sessions']} sessions, "
              f"{agg['frames']} frames in {agg['ticks']} ticks, "
-             f"mean {agg['mean_fps']:.2f} fps/viewer, "
+             f"fleet {agg['fleet_fps']:.2f} fps/viewer "
+             f"(frame-weighted; unweighted mean {agg['mean_fps']:.2f}), "
              f"mean hit rate {agg['mean_hit_rate']:.2f}, "
              f"worst p99 {agg['worst_p99_ms']:.0f} ms, "
              f"sort/shade {agg['mean_sort_ms']:.1f}/"
@@ -216,6 +234,13 @@ def main(argv=None):
                     help='host loop: sync virtual clock (deterministic '
                          'replay) or threaded (admission/eviction/pose-cell '
                          'planning overlapped with the device step)')
+    ap.add_argument('--trace-out', default=None, metavar='PATH',
+                    help='write the span trace as Chrome trace-event JSON '
+                         '(Perfetto / chrome://tracing; host, host-worker '
+                         'and device tracks)')
+    ap.add_argument('--metrics-out', default=None, metavar='PATH',
+                    help='dump the typed metrics registry snapshot as JSON '
+                         '(repro.obs.metrics)')
     ap.add_argument('--seed', type=int, default=0)
     args = ap.parse_args(argv)
     serve(args.viewers, args.frames, slots=args.slots, width=args.width,
@@ -226,7 +251,8 @@ def main(argv=None):
           viewers_per_scene=args.viewers_per_scene,
           arrivals=args.arrivals, rate=args.rate, burst=args.burst,
           gap=args.gap, jitter=args.jitter, pace=args.pace,
-          pace_jitter=args.pace_jitter, driver=args.driver)
+          pace_jitter=args.pace_jitter, driver=args.driver,
+          trace_out=args.trace_out, metrics_out=args.metrics_out)
 
 
 if __name__ == '__main__':

@@ -44,6 +44,8 @@ from collections import deque
 from typing import Optional
 
 from repro.core.camera import Camera
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve.events import HostTiming, TickPlan, get_driver
 from repro.serve.telemetry import SessionTelemetry
 
@@ -97,9 +99,18 @@ class SessionManager:
     admission state.
     """
 
-    def __init__(self, stepper, slots: int):
+    def __init__(self, stepper, slots: int, tracer=None,
+                 metrics: Optional[obs_metrics.Registry] = None):
         self.stepper = stepper
         self.slots = slots
+        # Observability (repro.obs): a span tracer (NULL no-op by default)
+        # and a typed metrics registry, shared with the stepper so sort
+        # scheduling / kernel-stage events land in the same trace.
+        self.tracer = tracer if tracer is not None else obs_trace.NULL
+        self.metrics = metrics if metrics is not None else \
+            obs_metrics.Registry()
+        stepper.tracer = self.tracer
+        stepper.metrics = self.metrics
         self.viewers_per_scene = getattr(stepper, 'viewers_per_scene', 1)
         self.num_scenes = max(1, slots // self.viewers_per_scene)
         self.slot_session: list[Optional[ViewerSession]] = [None] * slots
@@ -128,6 +139,8 @@ class SessionManager:
         the next tick's plan."""
         with self._lock:
             self.pending.append(session)
+        self.tracer.instant('arrival', sid=session.sid,
+                            arrival_tick=session.arrival_tick)
 
     def free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slot_session) if s is None]
@@ -220,6 +233,10 @@ class SessionManager:
         work the async pipeline exists to overlap.
         """
         tick = self.tick if tick is None else tick
+        with self.tracer.span('plan_tick', tick=tick):
+            return self._plan_tick(tick, advanced)
+
+    def _plan_tick(self, tick: int, advanced=()) -> TickPlan:
         adv = frozenset(advanced)
 
         def cursor_of(slot: int, sess: ViewerSession) -> int:
@@ -287,7 +304,9 @@ class SessionManager:
         lock across the whole commit is the no-partial-admission guarantee:
         a session is either fully pending or fully admitted (placed, stepper
         slot reset, ``admitted_tick`` stamped) in any concurrent view."""
-        with self._lock:
+        with self.tracer.span('apply_plan', tick=plan.tick,
+                              admits=len(plan.admit),
+                              evicts=len(plan.evict)), self._lock:
             if plan.tick != self.tick:
                 raise RuntimeError(f'stale plan: tick {plan.tick} applied at '
                                    f'manager tick {self.tick}')
@@ -299,6 +318,11 @@ class SessionManager:
                 sess.telemetry.finished_tick = plan.tick
                 self.finished.append(sess)
                 self.slot_session[slot] = None
+                self.tracer.instant('evict', slot=slot, sid=sess.sid,
+                                    tick=plan.tick)
+            self.metrics.counter(
+                'serve.evicted', 'sessions leaving their slot').inc(
+                    len(plan.evict))
             for slot, sid in plan.admit:
                 if self.slot_session[slot] is not None:
                     raise RuntimeError(f'plan admits into occupied slot '
@@ -308,22 +332,52 @@ class SessionManager:
                     raise RuntimeError(f'planned session {sid} not pending')
                 self.pending.remove(sess)
                 self._admit_into(slot, sess)
+                self.tracer.instant('admit', slot=slot, sid=sid,
+                                    tick=plan.tick)
+            self.metrics.counter(
+                'serve.admitted', 'sessions placed into a slot').inc(
+                    len(plan.admit))
+            self.metrics.gauge(
+                'serve.queue_depth', 'pending sessions after admission').set(
+                    len(self.pending))
 
     def observe_tick(self, plan: TickPlan, outputs: dict,
                      host: Optional[HostTiming] = None) -> int:
         """Record a completed tick: per-frame telemetry, cursor advance, the
-        tick log entry, and the clock advance to ``plan.tick + 1``."""
-        with self._lock:
+        tick log entry (mirrored into the metrics registry's ``tick.*``
+        series), and the clock advance to ``plan.tick + 1``."""
+        with self.tracer.span('observe_tick', tick=plan.tick,
+                              frames=len(outputs)), self._lock:
             for slot, (_image, stats, timing) in outputs.items():
                 sess = self.slot_session[slot]
+                hit_rate = float(stats.hit_rate)
+                saved_frac = float(stats.saved_frac)
                 sess.telemetry.observe_frame(
                     latency_s=timing.latency_s,
-                    hit_rate=float(stats.hit_rate),
-                    saved_frac=float(stats.saved_frac),
+                    hit_rate=hit_rate,
+                    saved_frac=saved_frac,
                     sorted_flag=float(stats.sorted_this_frame),
                     sort_ms=timing.sort_ms,
                     shade_ms=timing.shade_ms)
                 sess.cursor += 1
+                self.metrics.histogram(
+                    'cache.hit_rate', 'per-frame RC hit rate',
+                    scene=sess.scene_id).observe(hit_rate)
+                self.metrics.histogram(
+                    'rc.saved_frac', 'integration skipped via RC',
+                    scene=sess.scene_id).observe(saved_frac)
+            # paced-idle accounting: occupied slots that rendered nothing
+            # this tick (pace gaps; a done session awaiting eviction also
+            # counts — its slot is held either way)
+            idle = sum(1 for s in self.slot_session
+                       if s is not None) - len(outputs)
+            if idle > 0:
+                self.metrics.counter(
+                    'serve.paced_idle',
+                    'occupied slot-ticks that rendered no frame').inc(idle)
+                self.tracer.instant('pace', tick=plan.tick, idle_slots=idle)
+            self.metrics.counter('serve.frames',
+                                 'frames rendered').inc(len(outputs))
             if outputs:
                 tick_timing = self.stepper.last_timing
                 entry = {
@@ -344,6 +398,11 @@ class SessionManager:
                 if metrics is not None:
                     entry.update(metrics())
                 self.tick_log.append(entry)
+                obs_metrics.publish_tick(self.metrics, entry)
+                self.metrics.histogram(
+                    'serve.tick_latency_ms',
+                    'wall latency of rendered ticks').observe(
+                        entry['latency_ms'])
             elif host is not None:
                 self._carry_host_ms += host.host_ms
                 self._carry_overlap_ms += host.overlap_ms
@@ -373,12 +432,13 @@ class SessionManager:
 
         Returns the number of frames rendered this tick.
         """
-        t0 = time.perf_counter()
-        plan = self.plan_tick()
-        host = HostTiming(host_ms=(time.perf_counter() - t0) * 1e3)
-        self.apply_plan(plan)
-        outputs = self.stepper.step(plan.cams, plan=plan.sort_plan)
-        return self.observe_tick(plan, outputs, host=host)
+        with self.tracer.span('tick', tick=self.tick):
+            t0 = time.perf_counter()
+            plan = self.plan_tick()
+            host = HostTiming(host_ms=(time.perf_counter() - t0) * 1e3)
+            self.apply_plan(plan)
+            outputs = self.stepper.step(plan.cams, plan=plan.sort_plan)
+            return self.observe_tick(plan, outputs, host=host)
 
     def drained(self) -> bool:
         return not self.pending and not self.active_slots()

@@ -89,6 +89,8 @@ import numpy as np
 
 from repro.core import posecell
 from repro.core import radiance_cache as rc
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.core.camera import Camera, stack_cameras
 from repro.core.gaussians import GaussianScene
 from repro.core.groups import regroup, ungroup
@@ -150,6 +152,7 @@ class _InFlight(NamedTuple):
     n_sched: int
     n_admit: int
     profile: object      # (prof_shared, prof_priv, cam_b, mask) or None
+    tick: int = 0        # global_tick the step ran at (trace span args)
 
 
 class BatchedStepper:
@@ -203,6 +206,11 @@ class BatchedStepper:
                                    np.int64)
         self._slot_pool = np.zeros((slots,), np.int64)
         self._refs = np.zeros((self.num_scenes, self.pool_size), np.int64)
+
+        # observability: the SessionManager shares its tracer/registry with
+        # the stepper; standalone steppers default to no-op/private ones
+        self.tracer = obs_trace.NULL
+        self.metrics = obs_metrics.Registry()
 
         self._slot_cams: list[Camera] = [cam0] * slots
         # frames each slot rendered since it last consumed a sort refresh
@@ -362,14 +370,21 @@ class BatchedStepper:
 
     def _profile_kernels(self, shared: SceneShared, priv: ViewerPrivate,
                          cams: Camera, active_mask: jax.Array) -> dict:
-        """Time the decomposed shade stages on a pre-shade state copy."""
+        """Time the decomposed shade stages on a pre-shade state copy.
+
+        Each stage lands in the trace as a device-track span nested under
+        one ``shade.profile`` parent — the kernel breakdown Perfetto shows
+        alongside the fused-shade spans it decomposes."""
         ms = {}
+        stages = []
 
         def timed(name, f, *args):
             t0 = time.perf_counter()
             out = f(*args)
             jax.block_until_ready(out)
-            ms[name] = (time.perf_counter() - t0) * 1e3
+            t1 = time.perf_counter()
+            ms[name] = (t1 - t0) * 1e3
+            stages.append((name, t0, t1))
             return out
 
         feats_b = timed('prep', self._k_prep, shared, priv, cams)
@@ -380,6 +395,9 @@ class BatchedStepper:
         colors, _, _ = timed('resume', self._k_resume, feats_b, st_a, miss)
         timed('insert', self._k_insert, shared.cache, ids_cv, colors,
               hit_cv, live_cv)
+        self.tracer.complete('shade.profile', stages[0][1], stages[-1][2])
+        for name, t0, t1 in stages:
+            self.tracer.complete(f'kernel.{name}', t0, t1, depth=1)
         return ms
 
     # -- scheduling ---------------------------------------------------------
@@ -625,6 +643,12 @@ class BatchedStepper:
         """
         if not cams:
             return None
+        with self.tracer.span('step_dispatch', tick=self.global_tick,
+                              slots=len(cams)):
+            return self._dispatch(cams, plan)
+
+    def _dispatch(self, cams: dict[int, Camera],
+                  plan: Optional[_StepPlan]):
         for slot, cam in cams.items():
             self._slot_cams[slot] = cam
         cam_b = stack_cameras(self._slot_cams)
@@ -646,6 +670,23 @@ class BatchedStepper:
             n_sched = len(sorting) - n_admit
             n_joined = (sum(len(g.members) for g in groups if not g.sorts)
                         + sum(len(g.riders) for g in groups))
+            # executions vs adoptions, attributed per (scene, pose cell):
+            # the redundancy ledger the pose-cell scheduler is judged by
+            for g in groups:
+                adopted = len(g.members) - (1 if g.sorts else 0)
+                if g.sorts:
+                    self.metrics.counter(
+                        'sort.executed', 'speculative sorts run',
+                        scene=g.scene, cell=g.cell).inc()
+                if adopted:
+                    self.metrics.counter(
+                        'sort.adopted', 'due slots adopting a leader sort',
+                        scene=g.scene, cell=g.cell).inc(adopted)
+                if g.riders:
+                    self.metrics.counter(
+                        'sort.riders',
+                        'non-due slots consolidated onto a fresh entry',
+                        scene=g.scene, cell=g.cell).inc(len(g.riders))
             # Two deliberately different telemetry views of "sorted":
             # per-session ``sorted_this_frame`` flags every DUE slot — it
             # reached its cadence point and renders from a sort refreshed
@@ -669,7 +710,16 @@ class BatchedStepper:
             self._pending_sort -= active
             sorted_set = active
             n_sched = len(sorted_set)
+            self.metrics.counter(
+                'sort.executed',
+                'per-lane sorts (no-S2 baseline)').inc(n_sched)
         sort_s = time.perf_counter() - t0
+        if n_sched + n_admit:
+            # the sort window on the device lane (the leader sorts block
+            # inside dispatch, so begin/end are explicit)
+            self.tracer.complete('sort', t0, t0 + sort_s,
+                                 tick=self.global_tick,
+                                 executed=n_sched + n_admit)
 
         sorted_mask = jnp.asarray(
             [1.0 if i in sorted_set else 0.0 for i in range(self.slots)],
@@ -734,7 +784,8 @@ class BatchedStepper:
                               'joined': n_joined})
         return _InFlight(cams=cams, images=images, stats=stats, pos=pos,
                          t0=t0, t1=t1, sort_s=sort_s, n_sched=n_sched,
-                         n_admit=n_admit, profile=profile)
+                         n_admit=n_admit, profile=profile,
+                         tick=self.global_tick - 1)
 
     def step_finish(self, infl) -> dict:
         """Block on a dispatched step's device work and assemble the per-slot
@@ -743,6 +794,10 @@ class BatchedStepper:
             return {}
         jax.block_until_ready(infl.images)
         t2 = time.perf_counter()
+        # the async device window: dispatch -> outputs ready.  This is the
+        # span the threaded driver's worker plan(t+1) should sit under.
+        self.tracer.complete('shade', infl.t1, t2, tick=infl.tick,
+                             slots=len(infl.cams))
 
         kernel_ms = None
         if infl.profile is not None:
@@ -819,6 +874,8 @@ class SequentialStepper:
                                            for _ in range(slots)]
         self._step = jax.jit(functools.partial(render_step, cfg=cfg),
                              donate_argnums=(1,))
+        self.tracer = obs_trace.NULL
+        self.metrics = obs_metrics.Registry()
         self.sort_log: list[dict] = []
         self.last_timing: TickTiming | None = None
         self.profile_s = 0.0
@@ -859,7 +916,9 @@ class SequentialStepper:
             self._states[slot], image, stats = self._step(
                 self.scene, self._states[slot], cam)
             jax.block_until_ready(image)
-            dt = time.perf_counter() - t0
+            t_done = time.perf_counter()
+            dt = t_done - t0
+            self.tracer.complete('render_step', t0, t_done, slot=slot)
             sorted_flag = int(float(stats.sorted_this_frame))
             sorts += sorted_flag
             # The monolithic reference step fuses the phases; its whole
@@ -870,6 +929,9 @@ class SequentialStepper:
                                     shade_ms=dt * 1e3,
                                     sorted_slots=sorted_flag))
         self.sort_log.append({'scheduled': sorts, 'admit': 0, 'joined': 0})
+        if sorts:
+            self.metrics.counter('sort.executed',
+                                 'per-viewer cadence sorts').inc(sorts)
         self.last_timing = TickTiming(
             latency_s=time.perf_counter() - t_start, sort_ms=0.0,
             shade_ms=(time.perf_counter() - t_start) * 1e3,

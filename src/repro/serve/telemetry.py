@@ -17,6 +17,7 @@ The per-tick sorted-slot counts live on ``SessionManager.tick_log`` — see
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import numpy as np
 
@@ -80,30 +81,51 @@ class SessionTelemetry:
 
 
 def format_table(summaries: list[dict]) -> str:
-    """Render session summaries as an aligned text table."""
+    """Render session summaries as an aligned text table.
+
+    Summaries may be heterogeneous — sessions admitted under different
+    drivers/backends carry different keys; the table shows the union of
+    columns (first-seen order) with missing cells left blank."""
     if not summaries:
         return '(no sessions)'
-    cols = list(summaries[0].keys())
+    cols = list(dict.fromkeys(c for s in summaries for c in s))
+    missing = object()
 
     def fmt(v):
+        if v is missing:
+            return ''
         return f'{v:.3g}' if isinstance(v, float) else str(v)
 
-    width = {c: max(len(c), max(len(fmt(s[c])) for s in summaries))
+    width = {c: max(len(c), max(len(fmt(s.get(c, missing)))
+                                for s in summaries))
              for c in cols}
     lines = ['  '.join(c.rjust(width[c]) for c in cols)]
     for s in summaries:
-        lines.append('  '.join(fmt(s[c]).rjust(width[c]) for c in cols))
+        lines.append('  '.join(fmt(s.get(c, missing)).rjust(width[c])
+                               for c in cols))
     return '\n'.join(lines)
 
 
 def aggregate(summaries: list[dict]) -> dict:
-    """Fleet-level rollup across sessions."""
+    """Fleet-level rollup across sessions.
+
+    ``fleet_fps`` is the frame-weighted per-viewer rate (each session's fps
+    weighted by the frames it rendered — a 2-frame session no longer counts
+    as much as a 200-frame one); ``mean_fps`` keeps the legacy unweighted
+    session mean for continuity (deprecated — see README "Observability").
+    """
     if not summaries:
         return {'sessions': 0, 'frames': 0}
     frames = sum(s['frames'] for s in summaries)
+    fps = np.asarray([s['fps'] for s in summaries], np.float64)
+    weights = np.asarray([s['frames'] for s in summaries], np.float64)
+    finite = np.isfinite(fps) & (weights > 0)
+    fleet_fps = (float(np.average(fps[finite], weights=weights[finite]))
+                 if finite.any() else 0.0)
     return {
         'sessions': len(summaries),
         'frames': frames,
+        'fleet_fps': fleet_fps,
         'mean_fps': float(np.mean([s['fps'] for s in summaries])),
         'mean_hit_rate': float(np.mean([s['hit_rate'] for s in summaries])),
         'worst_p99_ms': float(max(s['p99_ms'] for s in summaries)),
@@ -180,8 +202,17 @@ def tick_rollup(tick_log: list[dict], warmup_ticks: int = 0) -> dict:
         total_overlap = float(np.sum([t.get('overlap_ms', 0.0)
                                       for t in host]))
         roll['host_ms'] = float(np.mean([t['host_ms'] for t in host]))
-        roll['host_overlap'] = (min(1.0, total_overlap / total_host)
-                                if total_host > 0 else 0.0)
+        # overlap is a subset of host planning time, so the ratio cannot
+        # legitimately exceed 1.0 — report it UNclamped and warn instead of
+        # silently masking the accounting bug a clamp would hide (a driver
+        # intersecting the wrong interval, double-counted carry, ...)
+        overlap = total_overlap / total_host if total_host > 0 else 0.0
+        if overlap > 1.0:
+            warnings.warn(
+                f'host_overlap accounting bug: overlap {total_overlap:.3f} '
+                f'ms exceeds host planning time {total_host:.3f} ms '
+                f'(ratio {overlap:.3f})', RuntimeWarning, stacklevel=2)
+        roll['host_overlap'] = overlap
     # occupancy values may still be unsynced device scalars (the stepper
     # defers the host transfer out of the timed serving loop) — float()
     # here is where they land
