@@ -24,7 +24,14 @@ of concurrent viewers grows, across three axes:
   planning on a worker thread, double-buffered against the async device
   dispatch).  Threaded rows gate ``host_overlap > 0`` — host planning must
   actually hide behind the device step — and report the per-frame p50/p95
-  latency an open-loop client sees.
+  latency an open-loop client sees;
+* **fault_rate** — degraded-mode rows: the threaded driver under a seeded
+  fault trace (``repro.serve.faults``: transient dispatch failures, worker
+  deaths, poisoned frames) reports what recovery costs — fps_per_viewer and
+  p95_frame_ms under faults vs the clean row — and the run itself asserts
+  every viewer still finished every frame (faults degrade service, never
+  drop it).  ``benchmarks.history`` gates these rows with widened
+  wall-clock tolerances keyed on ``fault_rate``.
 
 Each row reports the realised sort schedule (the run asserts the cohort
 bound, so a regression that reintroduces per-lane sorting fails the
@@ -35,11 +42,13 @@ bytes); pallas rows add the sampled per-kernel breakdown.
 from __future__ import annotations
 
 import time
+import warnings
 
 import jax
 
 from repro.core.pipeline import LuminaConfig
 from repro.data.scenes import structured_scene
+from repro.serve import faults as serve_faults
 from repro.serve.render import build_sessions
 from repro.serve.session import SessionManager
 from repro.serve.stepper import BatchedStepper, SequentialStepper
@@ -62,13 +71,17 @@ class _Cell:
     fastest repetition — a burst then taxes one repetition of every cell
     instead of every repetition of one cell."""
 
+    FAULT_KINDS = ('dispatch_transient', 'worker_death', 'nan_poison')
+    FAULT_WATCHDOG_S = 0.5   # a worker death costs one bounded wait
+
     def __init__(self, scene, viewers: int, frames: int, mode: str,
                  backend: str, vps: int = 1, stagger: int = 0,
-                 driver: str = 'sync'):
+                 driver: str = 'sync', fault_rate: float = 0.0):
         self.viewers, self.frames = viewers, frames
         self.mode, self.backend = mode, backend
         self.vps, self.stagger = vps, stagger
         self.driver = driver
+        self.fault_rate = fault_rate
         cfg = LuminaConfig(capacity=CAPACITY, window=WINDOW, backend=backend)
         profile = PROFILE_EVERY if backend == 'pallas' else 0
         cam0 = build_sessions(1, 1, width=WIDTH)[0].cams[0]
@@ -88,7 +101,17 @@ class _Cell:
         sessions = build_sessions(self.viewers, self.frames, width=WIDTH,
                                   stagger=self.stagger,
                                   viewers_per_scene=self.vps)
-        mgr = SessionManager(self.stepper, self.viewers)
+        injector = serve_faults.NULL
+        if self.fault_rate:
+            # the same seeded trace every repetition: degraded rows time
+            # one fixed failure schedule, not a fresh dice roll
+            horizon = self.viewers * self.stagger + self.frames + 4
+            injector = serve_faults.FaultInjector(serve_faults.make_trace(
+                self.FAULT_KINDS, horizon, seed=0, rate=self.fault_rate,
+                slots=self.viewers))
+        mgr = SessionManager(self.stepper, self.viewers, injector=injector,
+                             watchdog_s=(self.FAULT_WATCHDOG_S
+                                         if self.fault_rate else None))
         for s in sessions:
             mgr.submit(s)
         # warm-up tick compiles the step on the first repetition (and
@@ -97,24 +120,40 @@ class _Cell:
         mgr.run_tick()
         prof0 = self.stepper.profile_s
         t0 = time.perf_counter()
-        finished = mgr.run(driver=self.driver)
+        with warnings.catch_warnings():
+            if injector.enabled:   # injected deaths warn by design
+                warnings.simplefilter('ignore', RuntimeWarning)
+            finished = mgr.run(driver=self.driver)
         # per-kernel profiling runs outside the serving work proper;
         # subtract its overhead so fps compares backends, not cadences
         wall = time.perf_counter() - t0 - (self.stepper.profile_s - prof0)
+        if injector.enabled:
+            # faults degrade service, never drop it
+            assert all(s.telemetry.frames == self.frames for s in finished), \
+                f'faulted run dropped frames at {self.viewers} viewers'
         rendered = sum(s.telemetry.frames for s in finished) - mgr.tick_log[
             0]['frames'] if mgr.tick_log else 0
         roll = tick_rollup(mgr.tick_log, warmup_ticks=1)
+
+        def _counter(name):
+            return mgr.metrics[name].value if name in mgr.metrics else 0
+
+        stats = {'faults_injected': sum(injector.fired_counts().values()),
+                 'degraded_ticks': _counter('serve.degraded_ticks'),
+                 'retries': _counter('serve.retries')}
         if self.best is None or wall < self.best[1]:
-            self.best = (rendered, wall, finished, roll)
+            self.best = (rendered, wall, finished, roll, stats)
 
     def row(self) -> dict:
-        rendered, wall, finished, roll = self.best
+        rendered, wall, finished, roll, stats = self.best
         fps = rendered / wall if wall > 0 else float('inf')
         cohort_bound = -(-self.viewers // WINDOW)
-        if self.mode == 'batched' and self.stagger == 0:
+        if self.mode == 'batched' and self.stagger == 0 \
+                and not self.fault_rate:
             # steady-state bound: sort-on-admit is outside the scheduled
             # cohort by design, so staggered-arrival rows (admits landing
-            # after the warm-up tick) are exempt
+            # after the warm-up tick) are exempt — as are faulted rows,
+            # whose quarantine re-admits land sort-on-admits mid-run
             assert roll['max_sorts_per_tick'] <= cohort_bound, (
                 f"sort scheduler regressed: "
                 f"{roll['max_sorts_per_tick']} speculative sorts in one "
@@ -128,10 +167,11 @@ class _Cell:
                 f"sort pool regressed: {roll['max_sort_pool_live']} live "
                 f"buffers for {self.viewers} co-located viewers over "
                 f"{scenes} scene(s)")
-        if self.driver == 'threaded':
+        if self.driver == 'threaded' and not self.fault_rate:
             # the async host pipeline must actually hide host planning
             # behind the device step: zero overlap means admission/eviction
-            # /pose-cell work serialized back into the render tick
+            # /pose-cell work serialized back into the render tick (faulted
+            # rows are exempt — degraded inline ticks overlap nothing)
             assert roll.get('host_overlap', 0.0) > 0.0, (
                 f"threaded host pipeline overlapped nothing at "
                 f"{self.viewers} viewers (host {roll.get('host_ms')} "
@@ -143,6 +183,10 @@ class _Cell:
             'viewers_per_scene': self.vps,
             'driver': self.driver,
             'stagger': self.stagger,
+            'fault_rate': self.fault_rate,
+            'faults_injected': stats['faults_injected'],
+            'degraded_ticks': stats['degraded_ticks'],
+            'retries': stats['retries'],
             'window': WINDOW,
             'frames': rendered,
             'wall_s': wall,
@@ -195,6 +239,11 @@ def run(quick: bool = False, reps: int = 4):
                        vps=shared_at, stagger=2))
     cells.append(_Cell(scene, shared_at, frames, 'batched', 'reference',
                        vps=1, stagger=2))
+    # the fault_rate axis: degraded-mode cost on the threaded driver at the
+    # largest viewer count (paired with the clean threaded row above)
+    for fault_rate in (0.1, 0.3):
+        cells.append(_Cell(scene, shared_at, frames, 'batched', 'reference',
+                           driver='threaded', fault_rate=fault_rate))
     for _ in range(max(1, reps)):
         for cell in cells:
             cell.run_once()

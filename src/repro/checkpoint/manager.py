@@ -32,6 +32,7 @@ import os
 import shutil
 import threading
 import time
+import warnings
 from pathlib import Path
 from typing import Any, Optional
 
@@ -117,11 +118,20 @@ def load_checkpoint(path: str | Path, tree_like: Any, *, step: int) -> tuple:
     if names != manifest['names']:
         raise ValueError('checkpoint pytree structure mismatch: '
                          f'{len(names)} leaves now vs {len(manifest["names"])} saved')
+    unsafe = {_safe(n): n for n in manifest['names']}
     arrays: dict = {}
     for hf in sorted(path.glob('host*.npz')):
+        host_arrays: dict = {}
         with np.load(hf) as z:
             for k in z.files:
-                arrays[k] = z[k]
+                # npz keys are filesystem-safe names; checksums were taken
+                # over the original leaf names at save time
+                host_arrays[unsafe.get(k, k)] = z[k]
+        want = manifest.get('checksum', {}).get(hf.stem)
+        if want is not None and _checksum(host_arrays) != want:
+            raise ValueError(f'checksum mismatch in {hf.name}: '
+                             'shard bytes corrupted since save')
+        arrays.update({_safe(n): a for n, a in host_arrays.items()})
     out = []
     for name, leaf in zip(names, leaves):
         a = arrays.get(_safe(name))
@@ -140,13 +150,18 @@ class CheckpointManager:
     """Async keep-K checkpoint manager with auto-resume."""
 
     def __init__(self, directory: str | Path, *, keep: int = 3,
-                 keep_every: int = 0, host_id: int = 0, num_hosts: int = 1):
+                 keep_every: int = 0, host_id: int = 0, num_hosts: int = 1,
+                 metrics=None):
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self.keep_every = keep_every
         self.host_id = host_id
         self.num_hosts = num_hosts
+        if metrics is None:
+            from repro.obs.metrics import Registry
+            metrics = Registry()
+        self.metrics = metrics
         self._worker: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
@@ -205,7 +220,16 @@ class CheckpointManager:
             protected |= {s for s in steps if s % self.keep_every == 0}
         for s in steps:
             if s not in protected:
-                shutil.rmtree(self.dir / f'step_{s:010d}', ignore_errors=True)
+                try:
+                    shutil.rmtree(self.dir / f'step_{s:010d}')
+                except OSError as e:
+                    # a GC failure silently accumulating stale checkpoints
+                    # is a disk-full incident waiting to happen — surface it
+                    self.metrics.counter(
+                        'ckpt.gc_errors',
+                        'failed checkpoint garbage collections').inc()
+                    warnings.warn(f'checkpoint GC failed for step {s}: {e}',
+                                  RuntimeWarning, stacklevel=2)
 
     # -- restore ------------------------------------------------------------
     def restore_latest(self, tree_like: Any) -> Optional[tuple]:
@@ -216,6 +240,10 @@ class CheckpointManager:
                 tree, extra = load_checkpoint(self.dir, tree_like, step=step)
                 return tree, step, extra
             except Exception as e:   # corrupt / partial: fall back one step
-                print(f'checkpoint step {step} unreadable ({e}); '
-                      'falling back to previous')
+                self.metrics.counter(
+                    'ckpt.restore_fallback',
+                    'checkpoints skipped as unreadable at restore').inc()
+                warnings.warn(f'checkpoint step {step} unreadable ({e}); '
+                              'falling back to previous',
+                              RuntimeWarning, stacklevel=2)
         return None

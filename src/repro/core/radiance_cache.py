@@ -226,7 +226,14 @@ def lookup_all_groups(cache: CacheState, ids: jax.Array, cfg: CacheConfig,
 
 def insert_all_groups(cache: CacheState, ids: jax.Array, rgb: jax.Array,
                       do_insert: jax.Array, cfg: CacheConfig) -> CacheState:
-    """vmapped insert over all groups. ids: [G, B, k], rgb: [G, B, 3]."""
+    """vmapped insert over all groups. ids: [G, B, k], rgb: [G, B, 3].
+
+    Non-finite values are never inserted: a NaN/Inf escaping the rasterizer
+    (device corruption, fault injection) must not be published to a cache
+    other viewers of the scene read back.  The gate is bit-neutral on
+    finite data — the mask is unchanged — so golden traces are untouched.
+    """
+    do_insert = do_insert & jnp.isfinite(rgb).all(axis=-1)
     def one(tags, values, age, clock, gids, grgb, gdo):
         sub = CacheState(tags[None], values[None], age[None], clock[None])
         new = insert(sub, 0, gids, grgb, gdo, cfg)

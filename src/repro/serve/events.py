@@ -48,6 +48,7 @@ import dataclasses
 import queue
 import threading
 import time
+import warnings
 from typing import Optional
 
 
@@ -123,6 +124,7 @@ class SyncDriver:
         while not mgr.drained():
             self.run_tick()
             mgr.evict_finished()
+            mgr.maybe_checkpoint()
             if mgr.tick >= max_ticks:
                 raise RuntimeError('serve loop did not drain')
         return mgr.finished
@@ -143,37 +145,149 @@ class ThreadedDriver:
     The worker's planning interval is intersected with the tick's device
     window ``[dispatch_start, outputs_ready]`` to report ``overlap_ms`` —
     the host work genuinely hidden behind the device step.
+
+    **Hardening** (``repro.serve.faults``; every recovery path emits
+    ``serve.faults{kind=...}`` / ``serve.degraded_ticks`` through the
+    manager):
+
+    * the completion wait is **bounded** (``mgr.watchdog_s``, default
+      ``mgr.default_watchdog_s``): a worker that dies without posting no
+      longer blocks the fleet forever — the loop warns, plans the tick
+      inline (degraded mode), restarts the worker on a fresh queue pair and
+      keeps serving;
+    * a worker ``plan_tick`` **exception** no longer kills every viewer: the
+      error is contained, the plan recomputed inline (a deterministic
+      planner bug still surfaces — the inline replan re-raises it);
+    * when containment drops a **poisoned frame** or a dispatch is **shed**,
+      the worker's speculative plan (computed under the all-cursors-advance
+      assumption) is discarded and the tick replanned inline after
+      ``observe_tick`` — planning is pure, so the inline plan equals what
+      the worker would have produced with the corrected cursor state;
+    * at shutdown a worker that outlives ``join(timeout)`` is surfaced as a
+      ``RuntimeWarning`` + ``serve.thread_leaks`` counter + obs instant
+      instead of leaking silently.
     """
+
+    JOIN_TIMEOUT_S = 5.0
 
     def __init__(self, mgr):
         self.mgr = mgr
+        self._cmd_q: Optional[queue.Queue] = None
+        self._out_q: Optional[queue.Queue] = None
+        self._th: Optional[threading.Thread] = None
 
-    def run(self, max_ticks: int = 100_000):
+    # -- worker lifecycle --------------------------------------------------
+
+    def _start_worker(self) -> None:
         mgr = self.mgr
-        dispatch, finish = _step_split(mgr.stepper)
         cmd_q: queue.Queue = queue.Queue()
         out_q: queue.Queue = queue.Queue()
 
         def worker():
+            inj = mgr.injector
             while True:
                 msg = cmd_q.get()
                 if msg is None:
                     return
                 tick, advanced = msg
+                if inj.enabled \
+                        and inj.take('worker_death', tick) is not None:
+                    # simulated host-worker death: vanish without posting.
+                    # The main loop's bounded get times out, degrades to
+                    # inline planning and restarts the worker.  Counted
+                    # here — the main thread cannot tell death from
+                    # slowness, only this thread knows the event fired.
+                    mgr.count_fault('worker_death', tick)
+                    return
                 t0 = time.perf_counter()
                 try:
                     plan = mgr.plan_tick(tick, advanced=advanced)
                     out_q.put(('plan', plan, t0, time.perf_counter()))
-                except BaseException as exc:  # surfaced on the main thread
+                except BaseException as exc:  # contained on the main thread
                     out_q.put(('error', exc, t0, time.perf_counter()))
 
         th = threading.Thread(target=worker, name='serve-host-planner',
                               daemon=True)
         th.start()
+        self._cmd_q, self._out_q, self._th = cmd_q, out_q, th
+
+    def _restart_worker(self) -> None:
+        """Replace a dead/hung worker.  Fresh queues isolate the old
+        incarnation completely: if it ever wakes it sees the poison pill on
+        its (orphaned) command queue and exits; a late completion it posts
+        lands on a queue nobody reads."""
+        if self._cmd_q is not None:
+            self._cmd_q.put(None)
+        self._start_worker()
+
+    def _stop_worker(self) -> None:
+        mgr = self.mgr
+        if self._cmd_q is not None:
+            self._cmd_q.put(None)
+        if self._th is not None:
+            self._th.join(timeout=self.JOIN_TIMEOUT_S)
+            if self._th.is_alive():
+                mgr.metrics.counter(
+                    'serve.thread_leaks',
+                    'planner threads alive past their join deadline').inc()
+                mgr.tracer.instant('thread_leak', thread=self._th.name)
+                warnings.warn(
+                    f'{self._th.name} thread did not exit within '
+                    f'{self.JOIN_TIMEOUT_S}s; daemon thread leaked',
+                    RuntimeWarning, stacklevel=2)
+        self._cmd_q = self._out_q = self._th = None
+
+    # -- plan collection ---------------------------------------------------
+
+    def _collect_plan(self, want_tick: int):
+        """Bounded wait for the worker's plan for ``want_tick``.  Returns
+        ``(plan, p0, p1)`` or ``(None, 0, 0)`` when the tick must be planned
+        inline: the worker died (timeout -> warn + restart) or its
+        ``plan_tick`` raised (fault counted; a real deterministic bug
+        re-raises from the caller's inline replan)."""
+        mgr = self.mgr
+        deadline = mgr.watchdog_s if mgr.watchdog_s is not None \
+            else mgr.default_watchdog_s
         try:
+            kind, payload, p0, p1 = self._out_q.get(timeout=deadline)
+        except queue.Empty:
+            mgr.metrics.counter(
+                'serve.watchdog',
+                'finish/plan watchdog deadline expiries').inc()
+            mgr.tracer.instant('watchdog', what='planner', tick=want_tick)
+            warnings.warn(
+                f'serve watchdog: no plan for tick {want_tick} within '
+                f'{deadline}s (worker dead?); replanning inline and '
+                f'restarting the worker', RuntimeWarning, stacklevel=2)
+            self._restart_worker()
+            return None, 0.0, 0.0
+        if kind == 'error':
+            from repro.serve import faults as serve_faults
+            if not isinstance(payload, serve_faults.InjectedFault):
+                # a real planner error: contained (the fleet keeps serving)
+                # but never silent
+                warnings.warn(f'planner worker raised {payload!r}; '
+                              f'replanning tick {want_tick} inline',
+                              RuntimeWarning, stacklevel=2)
+            mgr.count_fault('plan_exc', want_tick)
+            return None, 0.0, 0.0
+        return payload, p0, p1
+
+    # -- the loop ----------------------------------------------------------
+
+    def run(self, max_ticks: int = 100_000):
+        mgr = self.mgr
+        dispatch, finish = _step_split(mgr.stepper)
+        self._start_worker()
+
+        def inline_plan():
             t0 = time.perf_counter()
-            plan = mgr.plan_tick()
-            host0 = HostTiming(host_ms=(time.perf_counter() - t0) * 1e3)
+            plan = mgr.plan_tick_hardened()
+            return plan, HostTiming(
+                host_ms=(time.perf_counter() - t0) * 1e3)
+
+        try:
+            plan, host0 = inline_plan()
             while True:
                 # the tick span lives on the 'host' track; the worker's
                 # plan_tick span for t+1 lands on 'host-worker' and the
@@ -184,26 +298,47 @@ class ThreadedDriver:
                     if mgr.drained():
                         break
                     t_disp = time.perf_counter()
-                    inflight = dispatch(plan.cams, plan=plan.sort_plan)
+                    inflight, ok = mgr.dispatch_hardened(dispatch, plan.cams,
+                                                         plan)
+                    if not ok:
+                        # shed tick: nothing in flight and the worker was
+                        # never asked — observe the empty tick (cursors
+                        # stay put, frames retry) and plan inline
+                        mgr.observe_tick(plan, {}, host=host0)
+                        mgr.maybe_checkpoint()
+                        plan, host0 = inline_plan()
+                        continue
                     # all host mutations for tick t are committed by now;
                     # hand the worker tick t+1 while the device crunches
                     # tick t
-                    cmd_q.put((plan.tick + 1, frozenset(plan.cams)))
-                    outputs = finish(inflight)
+                    self._cmd_q.put((plan.tick + 1, frozenset(plan.cams)))
+                    outputs = mgr.finish_hardened(finish, inflight,
+                                                  plan.tick)
                     t_ready = time.perf_counter()
-                    kind, nxt, p0, p1 = out_q.get()
-                    if kind == 'error':
-                        raise nxt
-                    overlap_s = max(0.0, min(p1, t_ready) - max(p0, t_disp))
+                    outputs = mgr.poison_outputs(outputs, plan.tick)
+                    outputs, poisoned = mgr.contain_outputs(outputs,
+                                                            plan.tick)
+                    nxt, p0, p1 = self._collect_plan(plan.tick + 1)
                     mgr.observe_tick(plan, outputs, host=host0)
-                    host0 = HostTiming(host_ms=(p1 - p0) * 1e3,
-                                       overlap_ms=overlap_s * 1e3)
-                    plan = nxt
+                    mgr.maybe_checkpoint()
+                    if nxt is None or poisoned:
+                        # degraded tick: the worker's plan is missing, or
+                        # it assumed a cursor advance containment rolled
+                        # back — replan inline on post-observe state
+                        # (planning is pure: this equals the pre-observe
+                        # plan with the corrected `advanced` set)
+                        mgr.count_degraded(plan.tick + 1)
+                        plan, host0 = inline_plan()
+                    else:
+                        overlap_s = max(0.0, min(p1, t_ready)
+                                        - max(p0, t_disp))
+                        host0 = HostTiming(host_ms=(p1 - p0) * 1e3,
+                                           overlap_ms=overlap_s * 1e3)
+                        plan = nxt
                 if mgr.tick >= max_ticks:
                     raise RuntimeError('serve loop did not drain')
         finally:
-            cmd_q.put(None)
-            th.join(timeout=5.0)
+            self._stop_worker()
         return mgr.finished
 
 

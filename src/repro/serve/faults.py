@@ -1,0 +1,248 @@
+"""Deterministic fault injection for the serving host loop.
+
+A **fault trace** is the chaos-engineering twin of a traffic trace
+(``repro.serve.traffic``): a seeded, replayable schedule of failures the
+host loop must survive, expressed as plain integers/floats that round-trip
+through ``to_dict``/``from_dict`` — record one observed incident, replay it
+bit-identically through either driver, and regression-test the recovery
+path forever.
+
+Fault kinds (the taxonomy README's "Failure model & recovery" documents):
+
+  * ``plan_exc``            — ``plan_tick`` raises (a planner bug / transient
+    host error).  On the threaded driver this lands on the worker thread —
+    the pre-hardening behavior was to re-raise on the main thread and kill
+    every viewer.
+  * ``dispatch_transient``  — the device dispatch fails ``count`` times
+    before succeeding (driver reset, transient allocator failure);
+    recovered by retry-with-backoff.
+  * ``dispatch_persistent`` — the dispatch keeps failing past the retry
+    budget; the tick is shed (no cursor advances, so every due frame is
+    replanned next tick) and the loop keeps serving.
+  * ``stall``               — the device hangs for ``delay_s`` inside
+    ``step_finish``; the finish watchdog surfaces it.
+  * ``nan_poison``          — one slot's finished shade output is replaced
+    with NaNs (the corrupted-device-result scenario).  Containment is a
+    separate, independent mechanism: the host's finite scan drops the frame
+    and quarantines the slot, and the ``jnp.isfinite`` insert gate
+    (``repro.core.radiance_cache``) keeps non-finite rgb out of the shared
+    scene cache no matter how corruption arises.
+  * ``worker_death``        — the threaded driver's planner worker dies
+    without posting a completion; the main loop's bounded queue get times
+    out, plans inline (degraded mode) and restarts the worker.
+
+The **injector** follows the NULL-object seam of ``repro.obs.trace``: the
+manager holds ``faults.NULL`` by default — every check is a cheap attribute
+test + no-op, the unfaulted hot path is untouched, and the fault layer is
+exercised (disabled) by every existing conformance test.  Events are
+consumed **one-shot** (``take``) and recorded in ``fired``, so a test can
+assert the emitted ``serve.faults{kind=...}`` counters match the injected
+trace exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+KINDS = ('plan_exc', 'dispatch_transient', 'dispatch_persistent', 'stall',
+         'nan_poison', 'worker_death')
+
+
+class InjectedFault(RuntimeError):
+    """Base class of all injected failures (never raised by real code)."""
+
+
+class InjectedPlanError(InjectedFault):
+    """An injected ``plan_tick`` exception."""
+
+
+class InjectedDispatchError(InjectedFault):
+    """An injected device-dispatch failure (one attempt)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled failure.
+
+    ``tick``    : manager tick the event arms at (it fires at the first
+                  opportunity at or after this tick — a dispatch fault on an
+                  idle tick waits for the next dispatch)
+    ``kind``    : one of ``KINDS``
+    ``slot``    : preferred target slot for ``nan_poison`` (-1 = lowest
+                  slot rendering that tick — see
+                  ``FaultInjector.poison_slot``)
+    ``count``   : failed attempts for ``dispatch_transient``
+    ``delay_s`` : injected device delay for ``stall``
+    """
+
+    tick: int
+    kind: str
+    slot: int = -1
+    count: int = 1
+    delay_s: float = 0.05
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f'unknown fault kind {self.kind!r} '
+                             f'(expected one of {KINDS})')
+
+    def to_dict(self) -> dict:
+        return {'tick': self.tick, 'kind': self.kind, 'slot': self.slot,
+                'count': self.count, 'delay_s': self.delay_s}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> 'FaultEvent':
+        return cls(tick=int(d['tick']), kind=str(d['kind']),
+                   slot=int(d.get('slot', -1)), count=int(d.get('count', 1)),
+                   delay_s=float(d.get('delay_s', 0.05)))
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultTrace:
+    """A replayable failure schedule: ``events`` sorted by (tick, kind)."""
+
+    seed: int
+    events: tuple
+
+    def to_dict(self) -> dict:
+        return {'seed': self.seed,
+                'events': [e.to_dict() for e in self.events]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> 'FaultTrace':
+        return cls(seed=int(d['seed']),
+                   events=tuple(FaultEvent.from_dict(e)
+                                for e in d['events']))
+
+    def counts(self) -> dict:
+        out: dict[str, int] = {}
+        for e in self.events:
+            out[e.kind] = out.get(e.kind, 0) + 1
+        return out
+
+
+def make_trace(kinds, ticks: int, *, seed: int = 0, rate: float = 0.05,
+               slots: int = 1, stall_s: float = 0.05,
+               transient_count: int = 1) -> FaultTrace:
+    """Generate a deterministic fault trace: per tick and per kind an
+    independent Bernoulli(``rate``) draw, everything from
+    ``np.random.default_rng(seed)`` — same arguments, same trace, always.
+    """
+    kinds = tuple(kinds)
+    for k in kinds:
+        if k not in KINDS:
+            raise ValueError(f'unknown fault kind {k!r} '
+                             f'(expected one of {KINDS})')
+    if not 0.0 <= rate <= 1.0:
+        raise ValueError(f'fault rate must be in [0, 1], got {rate}')
+    rng = np.random.default_rng(seed)
+    events = []
+    for tick in range(ticks):
+        for kind in kinds:
+            if rng.random() >= rate:
+                continue
+            events.append(FaultEvent(
+                tick=tick, kind=kind,
+                slot=int(rng.integers(0, max(1, slots))),
+                count=transient_count, delay_s=stall_s))
+    return FaultTrace(seed=seed, events=tuple(events))
+
+
+class FaultInjector:
+    """Consumes a ``FaultTrace`` against the live host loop.
+
+    Events of each kind queue in tick order; ``take(kind, tick)`` pops the
+    next one armed at or before ``tick`` (one-shot — a consumed event never
+    fires again) and appends it to ``fired``.  Deferred firing is the
+    contract: a dispatch fault armed on an idle tick fires at the next
+    dispatch, a poison event with no eligible (non-leader) slot waits for
+    the next tick with one — so ``fired`` converges on the full trace for
+    any run long enough, and counters can be matched exactly.
+    """
+
+    enabled = True
+
+    def __init__(self, trace: FaultTrace):
+        self.trace = trace
+        self._pending: dict[str, deque] = {k: deque() for k in KINDS}
+        for ev in sorted(trace.events, key=lambda e: e.tick):
+            self._pending[ev.kind].append(ev)
+        self.fired: list[FaultEvent] = []
+
+    def take(self, kind: str, tick: int):
+        """Pop (and record) the next ``kind`` event armed at or before
+        ``tick``, or None."""
+        q = self._pending[kind]
+        if q and q[0].tick <= tick:
+            ev = q.popleft()
+            self.fired.append(ev)
+            return ev
+        return None
+
+    def peek(self, kind: str, tick: int) -> bool:
+        q = self._pending[kind]
+        return bool(q) and q[0].tick <= tick
+
+    def fired_counts(self) -> dict:
+        out: dict[str, int] = {}
+        for e in self.fired:
+            out[e.kind] = out.get(e.kind, 0) + 1
+        return out
+
+    def outstanding(self) -> dict:
+        """Armed-but-unfired events per kind (drivers that never reach an
+        event's seam — e.g. ``worker_death`` on the sync driver — leave it
+        outstanding; tests account for these explicitly)."""
+        return {k: len(q) for k, q in self._pending.items() if q}
+
+    @staticmethod
+    def poison_slot(ev: FaultEvent, eligible) -> int:
+        """The slot a poison event lands on: its preferred ``slot`` if
+        eligible, else the lowest eligible slot (callers pass the slots
+        that actually produced an output this tick)."""
+        eligible = sorted(eligible)
+        return ev.slot if ev.slot in eligible else eligible[0]
+
+
+def poison_camera(cam):
+    """A copy of ``cam`` with every floating leaf replaced by NaN.  Not
+    used for ``nan_poison`` injection — a NaN pose demonstrably yields a
+    *finite* background image (every NaN comparison fails, nothing
+    rasterizes) — but kept as a test utility: it drives NaN through the
+    real jitted shade to pin down that the ``jnp.isfinite`` insert gate
+    holds on the genuine render path.  Static fields (width/height) are
+    part of the treedef and untouched."""
+    def leaf(x):
+        x = jnp.asarray(x)
+        if jnp.issubdtype(x.dtype, jnp.floating):
+            return jnp.full_like(x, jnp.nan)
+        return x
+    return jax.tree.map(leaf, cam)
+
+
+class _NullInjector:
+    """No-op injector (the default): ``enabled`` is False and every check
+    short-circuits, so the unfaulted hot path never pays for the fault
+    layer — the same seam pattern as ``repro.obs.trace.NULL``."""
+
+    enabled = False
+    fired = ()
+
+    def take(self, kind, tick):
+        return None
+
+    def peek(self, kind, tick):
+        return False
+
+    def fired_counts(self):
+        return {}
+
+    def outstanding(self):
+        return {}
+
+
+NULL = _NullInjector()

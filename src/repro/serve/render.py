@@ -19,9 +19,11 @@ import argparse
 import jax
 
 from repro import obs
+from repro.checkpoint.manager import CheckpointManager
 from repro.core.pipeline import LuminaConfig
 from repro.data.scenes import structured_scene
 from repro.data.trajectory import orbit_trajectory
+from repro.serve import faults as serve_faults
 from repro.serve import traffic
 from repro.serve.session import SessionManager, ViewerSession
 from repro.serve.stepper import BatchedStepper, SequentialStepper
@@ -67,7 +69,11 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
           rate: float = 0.5, burst: int = 4, gap: int = 8, jitter: int = 0,
           pace: int = 1, pace_jitter: int = 0,
           driver: str = 'sync', trace_out: str | None = None,
-          metrics_out: str | None = None, print_fn=print) -> dict:
+          metrics_out: str | None = None,
+          faults: str = '', fault_rate: float = 0.05, fault_seed: int = 0,
+          watchdog: float | None = None, max_pending: int | None = None,
+          checkpoint_dir: str | None = None, checkpoint_every: int = 0,
+          restore: bool = False, print_fn=print) -> dict:
     """Run the serving loop to completion; returns the aggregate rollup.
 
     ``backend`` selects the shade implementation ('reference' | 'pallas');
@@ -84,6 +90,16 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     (open in https://ui.perfetto.dev — host / host-worker / device tracks);
     ``metrics_out`` dumps the typed metrics registry snapshot
     (``repro.obs``).
+
+    ``faults`` turns on deterministic fault injection
+    (``repro.serve.faults``): a comma list of fault kinds or ``'all'``,
+    scheduled per tick at ``fault_rate`` from ``fault_seed`` — same
+    arguments, same failure schedule, always.  ``watchdog`` bounds the
+    device/planner waits (seconds) and ``max_pending`` bounds the admission
+    backlog (overflow arrivals are load-shed).  ``checkpoint_dir`` +
+    ``checkpoint_every`` snapshot the full serving state every N ticks
+    (atomic, crash-consistent — ``repro.checkpoint``); ``restore`` resumes
+    from the newest complete snapshot instead of starting cold.
     """
     if viewers < 1 or frames < 1:
         raise SystemExit('--viewers and --frames must be >= 1')
@@ -113,11 +129,40 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
         stepper = BatchedStepper(scene, cfg, cam0, slots,
                                  profile_every=profile_every,
                                  viewers_per_scene=viewers_per_scene)
+    injector = serve_faults.NULL
+    fault_trace = None
+    if faults:
+        kinds = serve_faults.KINDS if faults == 'all' else tuple(
+            k.strip() for k in faults.split(',') if k.strip())
+        # arm events across the expected run: last arrival + slowest
+        # viewer's frames, plus slack for degraded/shed ticks
+        horizon = int(max(trace.arrivals)) + frames * int(max(trace.paces)) + 4
+        fault_trace = serve_faults.make_trace(kinds, horizon, seed=fault_seed,
+                                              rate=fault_rate, slots=slots)
+        injector = serve_faults.FaultInjector(fault_trace)
+
     tracer = obs.Tracer() if trace_out else None
-    mgr = SessionManager(stepper, slots, tracer=tracer)
-    for sess in sessions:
-        mgr.submit(sess)
+    mgr = SessionManager(stepper, slots, tracer=tracer, injector=injector,
+                         watchdog_s=watchdog, max_pending=max_pending)
+
+    ckpt = None
+    restored = None
+    if checkpoint_dir:
+        ckpt = CheckpointManager(checkpoint_dir, metrics=mgr.metrics)
+        if checkpoint_every:
+            mgr.enable_checkpoints(ckpt, checkpoint_every,
+                                   extra={'traffic': trace.to_dict()})
+        if restore:
+            restored = mgr.restore_serving(ckpt, sessions)
+            if restored is not None:
+                print_fn(f'-- restored serving state from tick {restored} '
+                         f'({checkpoint_dir})')
+    if restored is None:
+        for sess in sessions:
+            mgr.submit(sess)
     finished = mgr.run(driver=driver)
+    if ckpt is not None:
+        ckpt.wait()   # flush any in-flight background save
     if trace_out:
         obs.write_trace(trace_out, tracer)
         print_fn(f'-- trace: {len(tracer.events)} events -> {trace_out} '
@@ -142,6 +187,14 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     agg['viewers_per_scene'] = viewers_per_scene
     agg['driver'] = driver
     agg['arrivals'] = arrivals
+
+    def _counter(name: str) -> int:
+        return mgr.metrics[name].value if name in mgr.metrics else 0
+
+    agg['fault_rate'] = fault_rate if faults else 0.0
+    agg['faults_injected'] = sum(injector.fired_counts().values())
+    agg['degraded_ticks'] = _counter('serve.degraded_ticks')
+    agg['retries'] = _counter('serve.retries')
     agg['mean_sorts_per_tick'] = roll['mean_sorts_per_tick']
     agg['max_sorts_per_tick'] = roll['max_sorts_per_tick']
     agg['tick_sort_ms'] = roll['mean_sort_ms']
@@ -182,6 +235,19 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
                  f"overlap {agg.get('host_overlap', 0.0):.0%}, "
                  f"frame p50/p95 {agg.get('p50_frame_ms', 0.0):.1f}/"
                  f"{agg.get('p95_frame_ms', 0.0):.1f} ms")
+    if injector.enabled:
+        fired = injector.fired_counts()
+        fired_s = ' '.join(f'{k}={v}' for k, v in sorted(fired.items())) \
+            or 'none'
+        out = injector.outstanding()
+        out_s = (' (' + ' '.join(f'{k}={v}' for k, v in sorted(out.items()))
+                 + ' never reached their seam)') if out else ''
+        print_fn(f"-- faults (seed {fault_seed}, rate {fault_rate}, "
+                 f"{len(fault_trace.events)} scheduled): fired {fired_s}"
+                 f"{out_s}; retries {agg['retries']}, "
+                 f"degraded ticks {agg['degraded_ticks']}, "
+                 f"quarantined {_counter('serve.quarantined')}, "
+                 f"shed arrivals {_counter('serve.shed')}")
     return agg
 
 
@@ -241,6 +307,28 @@ def main(argv=None):
     ap.add_argument('--metrics-out', default=None, metavar='PATH',
                     help='dump the typed metrics registry snapshot as JSON '
                          '(repro.obs.metrics)')
+    ap.add_argument('--faults', default='', metavar='KINDS',
+                    help="deterministic fault injection: comma list of "
+                         f"kinds from {serve_faults.KINDS} or 'all' "
+                         "(repro.serve.faults; seeded by --fault-seed)")
+    ap.add_argument('--fault-rate', type=float, default=0.05,
+                    help='per-tick per-kind Bernoulli fault probability')
+    ap.add_argument('--fault-seed', type=int, default=0,
+                    help='fault trace seed (independent of --seed)')
+    ap.add_argument('--watchdog', type=float, default=None, metavar='SECONDS',
+                    help='bound device-finish / planner-completion waits '
+                         '(default: unbounded unless faults are injected)')
+    ap.add_argument('--max-pending', type=int, default=None, metavar='N',
+                    help='admission backlog bound: arrivals past N pending '
+                         'sessions are load-shed instead of queued')
+    ap.add_argument('--checkpoint-dir', default=None, metavar='DIR',
+                    help='snapshot serving state to this directory '
+                         '(atomic, crash-consistent; repro.checkpoint)')
+    ap.add_argument('--checkpoint-every', type=int, default=0, metavar='N',
+                    help='checkpoint cadence in ticks (0 = never)')
+    ap.add_argument('--restore', action='store_true',
+                    help='resume from the newest complete checkpoint in '
+                         '--checkpoint-dir instead of starting cold')
     ap.add_argument('--seed', type=int, default=0)
     args = ap.parse_args(argv)
     serve(args.viewers, args.frames, slots=args.slots, width=args.width,
@@ -252,7 +340,12 @@ def main(argv=None):
           arrivals=args.arrivals, rate=args.rate, burst=args.burst,
           gap=args.gap, jitter=args.jitter, pace=args.pace,
           pace_jitter=args.pace_jitter, driver=args.driver,
-          trace_out=args.trace_out, metrics_out=args.metrics_out)
+          trace_out=args.trace_out, metrics_out=args.metrics_out,
+          faults=args.faults, fault_rate=args.fault_rate,
+          fault_seed=args.fault_seed, watchdog=args.watchdog,
+          max_pending=args.max_pending,
+          checkpoint_dir=args.checkpoint_dir,
+          checkpoint_every=args.checkpoint_every, restore=args.restore)
 
 
 if __name__ == '__main__':

@@ -40,13 +40,18 @@ import dataclasses
 import itertools
 import threading
 import time
+import warnings
 from collections import deque
 from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.camera import Camera
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
-from repro.serve.events import HostTiming, TickPlan, get_driver
+from repro.serve import faults as serve_faults
+from repro.serve.events import HostTiming, TickPlan, _step_split, get_driver
 from repro.serve.telemetry import SessionTelemetry
 
 
@@ -99,8 +104,16 @@ class SessionManager:
     admission state.
     """
 
+    #: dispatch retry policy for injected/transient device failures
+    max_retries = 3
+    backoff_s = 0.002
+    #: default bound on the threaded driver's completion-queue wait (s)
+    default_watchdog_s = 30.0
+
     def __init__(self, stepper, slots: int, tracer=None,
-                 metrics: Optional[obs_metrics.Registry] = None):
+                 metrics: Optional[obs_metrics.Registry] = None,
+                 injector=None, watchdog_s: Optional[float] = None,
+                 max_pending: Optional[int] = None):
         self.stepper = stepper
         self.slots = slots
         # Observability (repro.obs): a span tracer (NULL no-op by default)
@@ -111,6 +124,22 @@ class SessionManager:
             obs_metrics.Registry()
         stepper.tracer = self.tracer
         stepper.metrics = self.metrics
+        # Fault layer (repro.serve.faults): a NULL injector by default —
+        # the same seam pattern as the NULL tracer, so the unfaulted hot
+        # path is untouched and every conformance test exercises the fault
+        # layer disabled.  ``watchdog_s`` bounds the threaded driver's
+        # completion wait (``default_watchdog_s`` when unset) and, when set
+        # explicitly (or when faults are injected), arms a per-tick finish
+        # watchdog timer around ``step_finish``.
+        self.injector = injector if injector is not None else \
+            serve_faults.NULL
+        self.watchdog_s = watchdog_s
+        self.max_pending = max_pending
+        self.shed: list[ViewerSession] = []
+        # crash-consistent checkpointing (wired via enable_checkpoints)
+        self._ckpt = None
+        self._ckpt_every = 0
+        self._ckpt_extra: Optional[dict] = None
         self.viewers_per_scene = getattr(stepper, 'viewers_per_scene', 1)
         self.num_scenes = max(1, slots // self.viewers_per_scene)
         self.slot_session: list[Optional[ViewerSession]] = [None] * slots
@@ -133,14 +162,34 @@ class SessionManager:
 
     # -- lifecycle ---------------------------------------------------------
 
-    def submit(self, session: ViewerSession) -> None:
+    def submit(self, session: ViewerSession) -> bool:
         """Queue a session for admission.  Lock-safe against a concurrent
         threaded run: a session submitted mid-run is simply picked up by
-        the next tick's plan."""
+        the next tick's plan.
+
+        With ``max_pending`` set, a full backlog load-sheds: the session is
+        rejected up front (recorded in ``self.shed`` + the ``serve.shed``
+        counter) instead of queueing unboundedly — admission collapse under
+        a flash crowd is an explicit, observable decision.  Returns whether
+        the session was accepted."""
         with self._lock:
-            self.pending.append(session)
+            if self.max_pending is not None \
+                    and len(self.pending) >= self.max_pending:
+                self.shed.append(session)
+                accepted = False
+            else:
+                self.pending.append(session)
+                accepted = True
+        if not accepted:
+            self.metrics.counter(
+                'serve.shed',
+                'sessions rejected by the admission backlog bound').inc()
+            self.tracer.instant('shed', sid=session.sid,
+                                arrival_tick=session.arrival_tick)
+            return False
         self.tracer.instant('arrival', sid=session.sid,
                             arrival_tick=session.arrival_tick)
+        return True
 
     def free_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slot_session) if s is None]
@@ -233,6 +282,12 @@ class SessionManager:
         work the async pipeline exists to overlap.
         """
         tick = self.tick if tick is None else tick
+        if self.injector.enabled \
+                and self.injector.take('plan_exc', tick) is not None:
+            # injected BEFORE any planning work: plan_tick is pure, so the
+            # recovery replan (inline, degraded) sees identical inputs
+            raise serve_faults.InjectedPlanError(
+                f'injected plan_tick fault at tick {tick}')
         with self.tracer.span('plan_tick', tick=tick):
             return self._plan_tick(tick, advanced)
 
@@ -424,6 +479,274 @@ class SessionManager:
                 'finished': tuple(s.sid for s in self.finished),
             }
 
+    # -- fault handling (shared by both drivers) ---------------------------
+    #
+    # Each helper reduces exactly to the pre-hardening path under the NULL
+    # injector: one attribute test, no wrapping, no extra work — so the
+    # unfaulted golden traces stay bit-identical with the fault layer
+    # present but disabled.
+
+    def count_fault(self, kind: str, tick: int) -> None:
+        """One observed fault event (injected or real-but-contained)."""
+        self.metrics.counter('serve.faults',
+                             'fault events observed by the host loop',
+                             kind=kind).inc()
+        self.tracer.instant('fault', kind=kind, tick=tick)
+
+    def count_degraded(self, tick: int) -> None:
+        """One tick the host loop fell back from its pipelined fast path
+        (inline replan, shed dispatch, worker restart)."""
+        self.metrics.counter(
+            'serve.degraded_ticks',
+            'ticks served in degraded (inline/shed) mode').inc()
+        self.tracer.instant('degraded', tick=tick)
+
+    def plan_tick_hardened(self, tick: Optional[int] = None,
+                           advanced=()) -> TickPlan:
+        """``plan_tick`` surviving an injected planner exception: the fault
+        fires before any planning work and planning is pure, so the inline
+        retry sees identical inputs (the sync-driver arm of the recovery
+        the threaded driver gets from its worker-error fallback)."""
+        try:
+            return self.plan_tick(tick, advanced)
+        except serve_faults.InjectedPlanError:
+            t = self.tick if tick is None else tick
+            self.count_fault('plan_exc', t)
+            self.count_degraded(t)
+            return self.plan_tick(tick, advanced)
+
+    def poison_outputs(self, outputs: dict, tick: int) -> dict:
+        """Apply a pending ``nan_poison`` event: one slot's finished shade
+        output is replaced with NaNs — the corrupted-device-result scenario
+        (a NaN camera demonstrably does NOT reproduce it: non-finite pose
+        comparisons all fail, nothing rasterizes, and the image comes back
+        finite background).  Injection happens here, *detection* is
+        ``contain_outputs``'s independent finite scan — the containment
+        path never peeks at the injector's choice.  The scene cache is
+        threatened separately: ``insert_all_groups`` carries the
+        ``jnp.isfinite`` gate that keeps non-finite rgb out of
+        ``SceneShared`` no matter how the corruption arose.  With no output
+        this tick the event stays armed.  Returns the (possibly
+        substituted) outputs dict."""
+        inj = self.injector
+        if not inj.enabled or not outputs \
+                or not inj.peek('nan_poison', tick):
+            return outputs
+        ev = inj.take('nan_poison', tick)
+        slot = inj.poison_slot(ev, sorted(outputs))
+        self.count_fault('nan_poison', tick)
+        self.tracer.instant('poison', slot=slot, tick=tick)
+        img, stats, timing = outputs[slot]
+        outputs = dict(outputs)
+        outputs[slot] = (jnp.full_like(img, jnp.nan), stats, timing)
+        return outputs
+
+    def dispatch_hardened(self, dispatch, cams: dict, plan: TickPlan):
+        """Dispatch with retry-with-backoff.  Injected dispatch faults fire
+        *before* the real dispatch mutates any host state or donates any
+        buffer, so re-attempting is trivially safe.  A transient event
+        costs ``count`` backed-off retries and then succeeds; a persistent
+        event exhausts the retry budget and **sheds the tick** — returns
+        ``(None, False)``, no cursor advances, and every due frame is
+        replanned next tick (by which time the one-shot event is consumed).
+        """
+        inj = self.injector
+        if not inj.enabled:
+            return dispatch(cams, plan=plan.sort_plan), True
+        retries = self.metrics.counter('serve.retries',
+                                       'dispatch retry attempts')
+        ev = inj.take('dispatch_persistent', plan.tick)
+        if ev is not None:
+            self.count_fault('dispatch_persistent', plan.tick)
+            with self.tracer.span('dispatch_retry', tick=plan.tick,
+                                  outcome='shed'):
+                for attempt in range(self.max_retries):
+                    retries.inc()
+                    time.sleep(self.backoff_s * (2 ** attempt))
+            self.count_degraded(plan.tick)
+            self.tracer.instant('tick_shed', tick=plan.tick,
+                                frames=len(cams))
+            return None, False
+        ev = inj.take('dispatch_transient', plan.tick)
+        if ev is not None:
+            self.count_fault('dispatch_transient', plan.tick)
+            with self.tracer.span('dispatch_retry', tick=plan.tick,
+                                  outcome='recovered', failures=ev.count):
+                for attempt in range(min(ev.count, self.max_retries)):
+                    retries.inc()
+                    time.sleep(self.backoff_s * (2 ** attempt))
+        return dispatch(cams, plan=plan.sort_plan), True
+
+    def finish_hardened(self, finish, inflight, tick: int) -> dict:
+        """``step_finish`` under a stall watchdog.  An injected ``stall``
+        delays completion inside the watchdog window; a deadline expiry
+        (armed when ``watchdog_s`` is set explicitly or faults are being
+        injected — never on the plain hot path) emits a ``RuntimeWarning``
+        + ``serve.watchdog`` counter but keeps waiting: surfacing a hung
+        device is the watchdog's job, abandoning in-flight donated buffers
+        would corrupt state."""
+        inj = self.injector
+        deadline = self.watchdog_s
+        if deadline is None and inj.enabled:
+            deadline = self.default_watchdog_s
+        timer = None
+        if deadline is not None:
+            def expired():
+                self.metrics.counter(
+                    'serve.watchdog',
+                    'finish/plan watchdog deadline expiries').inc()
+                self.tracer.instant('watchdog', what='step_finish',
+                                    tick=tick)
+                warnings.warn(
+                    f'serve watchdog: step_finish exceeded {deadline}s at '
+                    f'tick {tick} (device stalled?)', RuntimeWarning,
+                    stacklevel=2)
+            timer = threading.Timer(deadline, expired)
+            timer.daemon = True
+            timer.start()
+        try:
+            ev = inj.take('stall', tick) if inj.enabled else None
+            if ev is not None:
+                self.count_fault('stall', tick)
+                with self.tracer.span('device_stall', tick=tick,
+                                      delay_s=ev.delay_s):
+                    time.sleep(ev.delay_s)
+            return finish(inflight)
+        finally:
+            if timer is not None:
+                timer.cancel()
+
+    def contain_outputs(self, outputs: dict, tick: int) -> tuple:
+        """Per-viewer blast-radius containment: any output whose image is
+        non-finite is dropped (never reaches telemetry or the viewer — its
+        cursor does not advance, the frame retries after recovery) and its
+        slot is quarantined (``stepper.quarantine``: private state reset,
+        owned pool entry invalidated; the ``jnp.isfinite`` insert gate
+        already kept its values out of the scene cache).  Returns
+        ``(clean_outputs, poisoned_slots)``.  Only scans when faults are
+        being injected — the host must not sync-and-scan every healthy
+        frame."""
+        if not self.injector.enabled or not outputs:
+            return outputs, ()
+        poisoned = tuple(
+            slot for slot, (img, _stats, _timing) in outputs.items()
+            if not bool(np.isfinite(np.asarray(img)).all()))
+        if not poisoned:
+            return outputs, ()
+        quarantine = getattr(self.stepper, 'quarantine', self.stepper.admit)
+        for slot in poisoned:
+            self.tracer.instant('quarantine', slot=slot, tick=tick)
+            quarantine(slot)
+        self.metrics.counter(
+            'serve.quarantined',
+            'poisoned frames dropped and their slots reset').inc(
+                len(poisoned))
+        clean = {s: o for s, o in outputs.items() if s not in poisoned}
+        return clean, poisoned
+
+    def step_hardened(self, plan: TickPlan) -> tuple:
+        """The full hardened device leg of one tick (dispatch with retry ->
+        finish under watchdog -> poison -> containment), shared by the
+        sync driver's ``run_tick`` and usable standalone.  Returns
+        ``(outputs, poisoned_slots)``."""
+        dispatch, finish = _step_split(self.stepper)
+        inflight, ok = self.dispatch_hardened(dispatch, plan.cams, plan)
+        if not ok:
+            return {}, ()
+        outputs = self.finish_hardened(finish, inflight, plan.tick)
+        outputs = self.poison_outputs(outputs, plan.tick)
+        return self.contain_outputs(outputs, plan.tick)
+
+    # -- crash-consistent checkpoint/restore -------------------------------
+
+    def enable_checkpoints(self, manager, every: int,
+                           extra: Optional[dict] = None) -> None:
+        """Snapshot serving state through a ``repro.checkpoint``
+        ``CheckpointManager`` every ``every`` ticks (``maybe_checkpoint`` is
+        called by both drivers at each tick boundary).  ``extra`` is
+        JSON-able context stored alongside (e.g. the traffic trace), so a
+        snapshot is self-describing for the multi-device migration path."""
+        self._ckpt = manager
+        self._ckpt_every = int(every)
+        self._ckpt_extra = extra
+
+    def maybe_checkpoint(self) -> bool:
+        if self._ckpt is None or self._ckpt_every <= 0:
+            return False
+        if self.tick == 0 or self.tick % self._ckpt_every:
+            return False
+        self.checkpoint_now()
+        return True
+
+    def checkpoint_now(self, blocking: bool = False) -> None:
+        """Snapshot at the current tick boundary.  Must run with no tick in
+        flight: the stepper's buffers are donated into the next dispatch,
+        and ``CheckpointManager.save`` device_gets them synchronously before
+        returning — after that the background serialization races nothing.
+        (The threaded driver's concurrent ``plan_tick`` only *reads* host
+        state, so planning t+1 may overlap the snapshot safely.)"""
+        with self.tracer.span('checkpoint', tick=self.tick):
+            arrays, stepper_meta = self.stepper.state_dict()
+            with self._lock:
+                meta = {
+                    'tick': self.tick,
+                    'stepper': stepper_meta,
+                    'slots': [
+                        None if s is None else {
+                            'sid': s.sid, 'cursor': s.cursor,
+                            'admitted_tick': s.telemetry.admitted_tick}
+                        for s in self.slot_session],
+                    'pending': [s.sid for s in self.pending],
+                    'finished': [s.sid for s in self.finished],
+                    'shed': [s.sid for s in self.shed],
+                }
+            if self._ckpt_extra:
+                meta['extra'] = self._ckpt_extra
+            self._ckpt.save(arrays, step=self.tick, extra=meta,
+                            blocking=blocking)
+
+    def restore_serving(self, ckpt, sessions) -> Optional[int]:
+        """Restore the newest complete checkpoint into this manager.
+
+        ``sessions`` must be the same session list (sids + trajectories)
+        the checkpointed run was built from — the snapshot stores cursors
+        and placement, not camera data.  Stepper state, host scheduler
+        mirrors, per-slot placement, pending order and the manager tick all
+        restore; a subsequent run continues bit-identically to the
+        uninterrupted one (the kill-and-restore oracle in
+        ``tests/test_chaos.py``).  Returns the restored tick, or None when
+        no usable checkpoint exists (caller falls back to a fresh run)."""
+        template, _ = self.stepper.state_dict()
+        out = ckpt.restore_latest(template)
+        if out is None:
+            return None
+        arrays, step, meta = out
+        self.stepper.load_state(arrays, meta['stepper'])
+        by_sid = {s.sid: s for s in sessions}
+        with self._lock:
+            self.tick = int(meta['tick'])
+            self.slot_session = []
+            for m in meta['slots']:
+                if m is None:
+                    self.slot_session.append(None)
+                    continue
+                sess = by_sid.pop(m['sid'])
+                sess.cursor = int(m['cursor'])
+                sess.telemetry.admitted_tick = int(m['admitted_tick'])
+                self.slot_session.append(sess)
+            self.finished = []
+            for sid in meta['finished']:
+                sess = by_sid.pop(sid)
+                sess.cursor = len(sess.cams)
+                self.finished.append(sess)
+            self.shed = [by_sid.pop(sid) for sid in meta.get('shed', ())]
+            self.pending = deque(by_sid.pop(sid)
+                                 for sid in meta['pending'])
+        self.tracer.instant('restore', tick=self.tick, step=step)
+        self.metrics.counter('serve.restores',
+                             'runs resumed from a checkpoint').inc()
+        return int(step)
+
     # -- the serving loop --------------------------------------------------
 
     def run_tick(self) -> int:
@@ -431,13 +754,17 @@ class SessionManager:
         (plan -> apply -> step -> observe, inline).
 
         Returns the number of frames rendered this tick.
+
+        The device leg runs through the hardened helpers (poison/retry/
+        watchdog/containment) — each a no-op reducing to the pre-hardening
+        ``stepper.step`` composition under the NULL injector.
         """
         with self.tracer.span('tick', tick=self.tick):
             t0 = time.perf_counter()
-            plan = self.plan_tick()
+            plan = self.plan_tick_hardened()
             host = HostTiming(host_ms=(time.perf_counter() - t0) * 1e3)
             self.apply_plan(plan)
-            outputs = self.stepper.step(plan.cams, plan=plan.sort_plan)
+            outputs, _poisoned = self.step_hardened(plan)
             return self.observe_tick(plan, outputs, host=host)
 
     def drained(self) -> bool:

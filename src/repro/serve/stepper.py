@@ -443,6 +443,25 @@ class BatchedStepper:
         # sort-on-admit there, outside the scheduled per-tick cohort.
         self._pending_sort.add(slot)
 
+    def quarantine(self, slot: int) -> None:
+        """Blast-radius containment for a poisoned slot: its private state
+        (the corrupt ``prev_cam`` rides there) resets to the cold-start
+        template, any pool entry it *owns* is marked stale (owner cleared,
+        tick aged out of the window) so no co-located viewer adopts it as
+        fresh, and the slot re-sorts on its next frame.  In private mode
+        this is a full scene cold-start; in shared mode the scene's cache
+        persists — the ``jnp.isfinite`` insert gate already kept the
+        poisoned values out of it."""
+        scene_i = int(self._scene_of[slot])
+        if self.viewers_per_scene > 1:
+            owned = np.flatnonzero(self._pool_owner[scene_i] == slot)
+            self._pool_owner[scene_i, owned] = -1
+            self._pool_tick[scene_i, owned] = -self.window
+        self.admit(slot)
+        # the stacked camera batch reads _slot_cams every dispatch — a NaN
+        # lane must not linger past containment
+        self._slot_cams[slot] = self._fresh_priv.prev_cam
+
     def _due_scheduled(self, active: set, exclude: set) -> list[int]:
         """Slots due for a scheduled sort refresh this tick: the cohort
         residue leg (``global_tick % window == slot % window``) plus a
@@ -853,6 +872,52 @@ class BatchedStepper:
             'state_alloc_bytes': pool_alloc + self._cache_bytes,
         }
 
+    # -- checkpoint/restore --------------------------------------------------
+
+    def state_dict(self) -> tuple:
+        """``(arrays, meta)`` snapshot of everything a bit-identical resume
+        needs: the device pytrees (``SceneShared``/``ViewerPrivate`` plus the
+        stacked per-slot cameras — a restored dispatch re-stacks the same
+        batch) and the host-side scheduler mirrors as plain JSON-able meta.
+        The arrays pytree is what ``repro.checkpoint`` serializes; callers
+        must snapshot at a tick boundary (nothing in flight — the shade
+        donates these buffers)."""
+        arrays = {'shared': self.shared, 'priv': self.priv,
+                  'slot_cams': stack_cameras(self._slot_cams)}
+        meta = {
+            'global_tick': int(self.global_tick),
+            'pool_cell': self._pool_cell.tolist(),
+            'pool_tick': self._pool_tick.tolist(),
+            'pool_owner': self._pool_owner.tolist(),
+            'slot_pool': self._slot_pool.tolist(),
+            'refs': self._refs.tolist(),
+            'frames_since_due': self._frames_since_due.tolist(),
+            'pending_sort': sorted(int(i) for i in self._pending_sort),
+        }
+        return arrays, meta
+
+    def load_state(self, arrays, meta: dict) -> None:
+        """Restore a ``state_dict`` snapshot onto the already-compiled
+        callables (no recompilation: shapes/dtypes must match, which the
+        checkpoint loader verifies against a live ``state_dict`` template).
+        ``jnp.asarray`` materializes fresh device buffers, so the next
+        step's donation never aliases the caller's numpy copies."""
+        self.shared = jax.tree.map(jnp.asarray, arrays['shared'])
+        self.priv = jax.tree.map(jnp.asarray, arrays['priv'])
+        cam_b = arrays['slot_cams']
+        self._slot_cams = [
+            jax.tree.map(lambda x, i=i: jnp.asarray(x)[i], cam_b)
+            for i in range(self.slots)]
+        self.global_tick = int(meta['global_tick'])
+        self._pool_cell = np.asarray(meta['pool_cell'], np.int64)
+        self._pool_tick = np.asarray(meta['pool_tick'], np.int64)
+        self._pool_owner = np.asarray(meta['pool_owner'], np.int64)
+        self._slot_pool = np.asarray(meta['slot_pool'], np.int64)
+        self._refs = np.asarray(meta['refs'], np.int64)
+        self._frames_since_due = np.asarray(meta['frames_since_due'],
+                                            np.int64)
+        self._pending_sort = set(int(i) for i in meta['pending_sort'])
+
 
 class SequentialStepper:
     """Reference engine: one single-viewer jitted step per active slot,
@@ -886,12 +951,27 @@ class SequentialStepper:
     def admit(self, slot: int) -> None:
         self._states[slot] = copy_pytree(self._fresh)
 
+    def quarantine(self, slot: int) -> None:
+        """Containment on the private engine is a full cold-start: every
+        piece of the slot's state (cache included) is its own."""
+        self.admit(slot)
+
     def reset(self) -> None:
         """Cold-start every slot (see ``BatchedStepper.reset``)."""
         self._states = [copy_pytree(self._fresh) for _ in range(self.slots)]
         self.sort_log = []
         self.last_timing = None
         self._last_active = 0
+
+    def state_dict(self) -> tuple:
+        """``(arrays, meta)`` snapshot (see ``BatchedStepper.state_dict``):
+        per-slot ``ViewerState`` pytrees, no host mirrors to carry."""
+        return {f'slot{i}': st for i, st in enumerate(self._states)}, {}
+
+    def load_state(self, arrays, meta: dict) -> None:
+        del meta
+        self._states = [jax.tree.map(jnp.asarray, arrays[f'slot{i}'])
+                        for i in range(self.slots)]
 
     def step_dispatch(self, cams: dict[int, Camera], plan=None):
         """Nothing dispatches ahead on the sequential engine: each slot's

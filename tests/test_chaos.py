@@ -1,0 +1,437 @@
+"""Chaos suite: deterministic fault injection, hardened host loop,
+crash-consistent checkpoint/restore (``repro.serve.faults``,
+``repro.serve.session`` hardened helpers, ``repro.checkpoint``).
+
+The contracts under test:
+
+* a **fault trace** round-trips through ``to_dict``/``from_dict`` and the
+  injector consumes it one-shot, so ``serve.faults{kind=...}`` counters can
+  be matched against the injected schedule **exactly**;
+* both drivers **drain** every seeded fault trace — injected planner
+  exceptions, transient + persistent dispatch failures, device stalls,
+  poisoned frames and (threaded) worker deaths degrade service, never stop
+  it — and non-finite values never reach the shared scene cache;
+* with the fault layer present but **disabled** (an enabled injector with
+  an empty trace — strictly stronger than the NULL default every other
+  test runs under), the serving run is bit-identical to the unhardened
+  path;
+* a run killed at tick ``k`` and **restored** from its newest checkpoint
+  continues bit-identically to the uninterrupted golden run — images,
+  cache tags, LRU ages/clock and sort cadence — on both shade backends.
+"""
+import dataclasses
+import hashlib
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import radiance_cache as rc
+from repro.core.pipeline import LuminaConfig
+from repro.data.trajectory import orbit_trajectory
+from repro.serve import faults
+from repro.serve.session import SessionManager, ViewerSession
+from repro.serve.stepper import BatchedStepper
+
+CFG = LuminaConfig(capacity=192, window=3)
+FRAMES = 3
+ARRIVALS = (0, 0, 1, 6, 9)
+
+
+def _digest(arr) -> str:
+    return hashlib.sha256(np.asarray(arr).tobytes()).hexdigest()
+
+
+def _sessions(frames=FRAMES, arrivals=ARRIVALS):
+    out = []
+    for sid, arrival in enumerate(arrivals):
+        cams = orbit_trajectory(frames, width=64, height_px=64,
+                                start_deg=72.0 * sid)
+        out.append(ViewerSession(sid=sid, cams=cams, arrival_tick=arrival))
+    return out
+
+
+class TickRecorder:
+    """Stepper wrapper recording per-device-tick image digests + the sort
+    accounting entry, keyed by the stepper's ``global_tick`` — the key
+    survives kill/restore, so a restored continuation can be compared
+    tick-by-tick against the golden run's tail."""
+
+    def __init__(self, stepper):
+        self._s = stepper
+        self.ticks = {}
+
+    def __getattr__(self, name):
+        return getattr(self._s, name)
+
+    def _record(self, tick, out):
+        self.ticks[tick] = ({slot: _digest(img)
+                             for slot, (img, _st, _t) in out.items()},
+                            dict(self._s.sort_log[-1]))
+        return out
+
+    def step(self, cams, plan=None):
+        tick = self._s.global_tick
+        return self._record(tick, self._s.step(cams, plan=plan))
+
+    def step_dispatch(self, cams, plan=None):
+        return self._s.step_dispatch(cams, plan)
+
+    def step_finish(self, infl):
+        tick = self._s.global_tick - 1   # dispatch already advanced it
+        return self._record(tick, self._s.step_finish(infl))
+
+
+@pytest.fixture(scope='module')
+def chaos_stepper(small_scene):
+    """One compiled stepper shared by every run in this module (reset
+    between runs) — recompiling per test would dominate the suite."""
+    cams0 = orbit_trajectory(1, width=64, height_px=64)
+    return BatchedStepper(small_scene, CFG, cams0[0], slots=2)
+
+
+# ---------------------------------------------------------------------------
+# Fault traces and the injector
+# ---------------------------------------------------------------------------
+
+def test_fault_trace_roundtrip():
+    trace = faults.make_trace(faults.KINDS, 40, seed=3, rate=0.2, slots=4)
+    assert trace.events, 'rate 0.2 over 40 ticks x 6 kinds must schedule'
+    again = faults.FaultTrace.from_dict(trace.to_dict())
+    assert again == trace
+    assert again.counts() == trace.counts()
+    # same arguments -> same trace, always
+    assert faults.make_trace(faults.KINDS, 40, seed=3, rate=0.2,
+                             slots=4) == trace
+    with pytest.raises(ValueError):
+        faults.make_trace(('no_such_kind',), 10)
+    with pytest.raises(ValueError):
+        faults.FaultEvent(tick=0, kind='no_such_kind')
+
+
+def test_injector_one_shot_and_deferred_firing():
+    trace = faults.FaultTrace(seed=0, events=(
+        faults.FaultEvent(tick=2, kind='stall'),
+        faults.FaultEvent(tick=5, kind='stall'),
+        faults.FaultEvent(tick=3, kind='nan_poison', slot=1),
+    ))
+    inj = faults.FaultInjector(trace)
+    assert inj.take('stall', 0) is None          # not armed yet
+    assert inj.peek('stall', 2)
+    ev = inj.take('stall', 4)                    # deferred past tick 2: fires
+    assert ev is not None and ev.tick == 2
+    assert inj.take('stall', 4) is None          # one-shot; next arms at 5
+    assert inj.take('stall', 7).tick == 5
+    assert inj.fired_counts() == {'stall': 2}
+    assert inj.outstanding() == {'nan_poison': 1}
+    # preferred slot if eligible, else lowest eligible
+    ev = inj.take('nan_poison', 3)
+    assert faults.FaultInjector.poison_slot(ev, [0, 1]) == 1
+    assert faults.FaultInjector.poison_slot(ev, [0, 2]) == 0
+
+
+# ---------------------------------------------------------------------------
+# The isfinite insert gate: NaN never lands in a shared scene cache
+# ---------------------------------------------------------------------------
+
+def test_insert_gate_blocks_nonfinite_rgb():
+    cfg = rc.CacheConfig(n_sets=16, n_ways=2)
+    cache = rc.init_cache(1, cfg)
+    ids = jnp.arange(4 * cfg.k, dtype=jnp.int32).reshape(1, 4, cfg.k)
+    rgb = jnp.ones((1, 4, 3), jnp.float32)
+    rgb = rgb.at[0, 1, 0].set(jnp.nan).at[0, 3, 2].set(jnp.inf)
+    do = jnp.ones((1, 4), bool)
+    out = rc.insert_all_groups(cache, ids, rgb, do, cfg)
+    assert bool(jnp.isfinite(out.values).all()), \
+        'non-finite rgb reached the cache'
+    # the two finite records landed, the two poisoned ones did not
+    live = int((out.tags[..., 0] != rc.INVALID_TAG).sum())
+    assert live == 2
+    # the gate is bit-neutral on finite data
+    clean = jnp.ones((1, 4, 3), jnp.float32)
+    gated = rc.insert_all_groups(cache, ids, clean, do, cfg)
+    plain = rc.insert_all_groups(cache, ids, clean,
+                                 do & jnp.isfinite(clean).all(axis=-1), cfg)
+    for a, b in zip(gated, plain):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_nan_camera_cannot_poison_shared_cache(chaos_stepper):
+    """Drive a genuinely NaN camera through the real jitted shade: whatever
+    the rasterizer makes of it, nothing non-finite may be published to the
+    scene cache other viewers read."""
+    st = chaos_stepper
+    st.reset()
+    cams = orbit_trajectory(2, width=64, height_px=64)
+    st.admit(0)
+    st.step({0: cams[0]})
+    st.step({0: faults.poison_camera(cams[1])})
+    assert bool(jnp.isfinite(st.shared.cache.values).all())
+
+
+# ---------------------------------------------------------------------------
+# Serving under injected faults
+# ---------------------------------------------------------------------------
+
+def _chaos_run(stepper, driver, injector, sessions=None, **mgr_kw):
+    stepper.reset()
+    rec = TickRecorder(stepper)
+    mgr = SessionManager(rec, slots=stepper.slots, injector=injector,
+                         **mgr_kw)
+    for s in (sessions if sessions is not None else _sessions()):
+        mgr.submit(s)
+    finished = mgr.run(driver=driver)
+    return mgr, rec, finished
+
+
+def _counter(mgr, name):
+    return mgr.metrics[name].value if name in mgr.metrics else 0
+
+
+def _assert_counters_match_fired(mgr, inj):
+    for kind, n in inj.fired_counts().items():
+        key = f'serve.faults{{kind={kind}}}'
+        assert key in mgr.metrics, f'missing counter for fired {kind}'
+        assert mgr.metrics[key].value == n, \
+            f'{kind}: {mgr.metrics[key].value} counted vs {n} fired'
+    # and nothing was counted that never fired
+    fired = inj.fired_counts()
+    for key in mgr.metrics.names():
+        if key.startswith('serve.faults{'):
+            kind = key[len('serve.faults{kind='):-1]
+            assert fired.get(kind, 0) == mgr.metrics[key].value
+
+
+SYNC_KINDS = ('plan_exc', 'dispatch_transient', 'dispatch_persistent',
+              'stall', 'nan_poison')
+
+
+def test_sync_driver_drains_under_faults(chaos_stepper):
+    # horizon 10 = the last arrival tick + 1: every event arms while the
+    # fleet is still serving, so deferred firing drains the whole trace
+    trace = faults.make_trace(SYNC_KINDS, 10, seed=11, rate=0.3, slots=2,
+                              stall_s=0.01)
+    assert len(trace.counts()) >= 4, 'seed must schedule a broad mix'
+    inj = faults.FaultInjector(trace)
+    with warnings.catch_warnings():
+        warnings.simplefilter('ignore', RuntimeWarning)
+        mgr, _rec, finished = _chaos_run(chaos_stepper, 'sync', inj)
+    assert sorted(s.sid for s in finished) == [0, 1, 2, 3, 4]
+    assert all(s.telemetry.frames == FRAMES for s in finished)
+    assert not inj.outstanding(), 'every scheduled event must fire'
+    _assert_counters_match_fired(mgr, inj)
+    assert _counter(mgr, 'serve.quarantined') \
+        == inj.fired_counts().get('nan_poison', 0)
+    assert bool(jnp.isfinite(chaos_stepper.shared.cache.values).all()), \
+        'NaN reached the shared scene cache'
+
+
+def test_threaded_driver_drains_under_faults_with_worker_death(
+        chaos_stepper):
+    trace = faults.make_trace(faults.KINDS, 10, seed=5, rate=0.3, slots=2,
+                              stall_s=0.01)
+    assert 'worker_death' in trace.counts()
+    inj = faults.FaultInjector(trace)
+    with warnings.catch_warnings():
+        warnings.simplefilter('ignore', RuntimeWarning)
+        mgr, _rec, finished = _chaos_run(chaos_stepper, 'threaded', inj,
+                                         watchdog_s=5.0)
+    assert sorted(s.sid for s in finished) == [0, 1, 2, 3, 4]
+    assert all(s.telemetry.frames == FRAMES for s in finished)
+    assert not inj.outstanding()
+    _assert_counters_match_fired(mgr, inj)
+    # every worker death degraded at least one tick and was survived
+    deaths = inj.fired_counts().get('worker_death', 0)
+    assert deaths > 0
+    assert _counter(mgr, 'serve.degraded_ticks') >= deaths
+    assert bool(jnp.isfinite(chaos_stepper.shared.cache.values).all())
+
+
+def test_enabled_empty_injector_is_bit_identical(chaos_stepper):
+    """The hardened helpers must reduce exactly to the plain path — run the
+    full hardened machinery with an *enabled* injector whose trace is empty
+    (every peek/take is a live call, containment scans every tick) and
+    demand bit-parity with the NULL default."""
+    _mgr, base, fin0 = _chaos_run(chaos_stepper, 'sync', faults.NULL)
+    empty = faults.FaultInjector(faults.FaultTrace(seed=0, events=()))
+    _mgr, hard, fin1 = _chaos_run(chaos_stepper, 'sync', empty)
+    assert base.ticks == hard.ticks, 'hardened run diverged bitwise'
+    assert [s.telemetry.frames for s in fin0] \
+        == [s.telemetry.frames for s in fin1]
+
+
+def test_load_shedding_bounds_the_backlog(chaos_stepper):
+    sessions = _sessions(frames=2, arrivals=(0, 0, 0, 0, 0))
+    chaos_stepper.reset()
+    mgr = SessionManager(chaos_stepper, slots=chaos_stepper.slots,
+                         max_pending=3)
+    accepted = [mgr.submit(s) for s in sessions]
+    # the backlog bound counts queued sessions (slots drain at admission
+    # ticks, not submit time): 3 backlog seats, then load-shed
+    assert accepted == [True, True, True, False, False]
+    assert [s.sid for s in mgr.shed] == [3, 4]
+    assert mgr.metrics['serve.shed'].value == 2
+    finished = mgr.run()
+    assert sorted(s.sid for s in finished) == [0, 1, 2]
+
+
+def test_quarantine_resets_slot_and_keeps_neighbors(chaos_stepper):
+    """A poisoned frame is dropped, its viewer retries the same frame, and
+    the other viewer's stream is untouched (blast radius = one slot)."""
+    trace = faults.FaultTrace(seed=0, events=(
+        faults.FaultEvent(tick=2, kind='nan_poison', slot=1),))
+    inj = faults.FaultInjector(trace)
+    sessions = _sessions(frames=3, arrivals=(0, 0))
+    mgr, _rec, finished = _chaos_run(chaos_stepper, 'sync', inj,
+                                     sessions=sessions)
+    assert inj.fired_counts() == {'nan_poison': 1}
+    assert mgr.metrics['serve.quarantined'].value == 1
+    by_sid = {s.sid: s for s in finished}
+    # both completed every frame; the poisoned viewer needed an extra tick
+    assert by_sid[0].telemetry.frames == 3
+    assert by_sid[1].telemetry.frames == 3
+    assert by_sid[1].telemetry.finished_tick \
+        > by_sid[0].telemetry.finished_tick
+
+
+# ---------------------------------------------------------------------------
+# Serve-state checkpointing
+# ---------------------------------------------------------------------------
+
+def test_serve_state_roundtrip_is_exact(chaos_stepper):
+    """``state_dict``/``load_state`` preserve dtypes, treedef, host
+    scheduler mirrors and the LRU clock exactly — and a stepper restored
+    mid-run continues bit-identically to the donor."""
+    st = chaos_stepper
+    st.reset()
+    cams = orbit_trajectory(4, width=64, height_px=64)
+    st.admit(0)
+    st.admit(1)
+    st.step({0: cams[0], 1: cams[1]})
+    st.step({0: cams[1], 1: cams[2]})
+    arrays, meta = st.state_dict()
+
+    # round-trip through the serializable forms (what a checkpoint stores)
+    leaves0, tree0 = jax.tree_util.tree_flatten(arrays)
+    host = jax.tree.map(np.asarray, arrays)
+    st.step({0: cams[2], 1: cams[3]})       # mutate the donor past snapshot
+    golden = st.step({0: cams[3], 1: cams[0]})
+
+    st.reset()
+    st.load_state(host, meta)
+    arrays2, meta2 = st.state_dict()
+    assert meta2 == meta, 'host scheduler mirrors did not round-trip'
+    leaves2, tree2 = jax.tree_util.tree_flatten(arrays2)
+    assert tree2 == tree0, 'treedef changed through restore'
+    for a, b in zip(leaves0, leaves2):
+        assert jnp.asarray(a).dtype == jnp.asarray(b).dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(st.shared.cache.clock.sum()) \
+        == int(np.asarray(host['shared'].cache.clock).sum())
+
+    st.step({0: cams[2], 1: cams[3]})       # replay the donor's tail
+    replay = st.step({0: cams[3], 1: cams[0]})
+    for slot in golden:
+        np.testing.assert_array_equal(np.asarray(golden[slot][0]),
+                                      np.asarray(replay[slot][0]))
+
+
+def test_checkpoint_checksum_mismatch_falls_back(tmp_path):
+    """Corrupted shard bytes (same names/shapes/dtypes, different values)
+    must fail the manifest checksum and fall back one step."""
+    def tree(fill):
+        return {'a': np.full((4, 3), fill, np.float32),
+                'b': np.arange(6, dtype=np.float32).reshape(2, 3)}
+
+    mgr = CheckpointManager(tmp_path, keep=5)
+    mgr.save(tree(1.0), step=1, blocking=True)
+    mgr.save(tree(2.0), step=2, blocking=True)
+    # flip bytes inside step 2's shard, keeping structure identical
+    shard = tmp_path / 'step_0000000002' / 'host0.npz'
+    with np.load(shard) as z:
+        arrs = {k: z[k] for k in z.files}
+    k0 = sorted(arrs)[0]   # npz keys are keystr-derived, e.g. "['a']"
+    arrs[k0] = arrs[k0] + 17.0
+    with open(shard, 'wb') as f:
+        np.savez(f, **arrs)
+    with pytest.warns(RuntimeWarning, match='checksum mismatch'):
+        out = mgr.restore_latest(tree(0.0))
+    assert out is not None
+    restored, step, _extra = out
+    assert step == 1
+    np.testing.assert_array_equal(restored['a'], tree(1.0)['a'])
+    assert mgr.metrics['ckpt.restore_fallback'].value == 1
+
+
+# ---------------------------------------------------------------------------
+# Kill-and-restore: the crash-consistency oracle
+# ---------------------------------------------------------------------------
+
+def _restore_oracle(scene, backend, tmp_path):
+    cfg = dataclasses.replace(CFG, backend=backend)
+    cams0 = orbit_trajectory(1, width=64, height_px=64)
+    stepper = BatchedStepper(scene, cfg, cams0[0], slots=2)
+
+    # golden: uninterrupted run, per-tick digests + final cache state
+    rec = TickRecorder(stepper)
+    mgr = SessionManager(rec, slots=2)
+    for s in _sessions():
+        mgr.submit(s)
+    mgr.run()
+    golden = {'ticks': dict(rec.ticks),
+              'tags': np.asarray(stepper.shared.cache.tags),
+              'age': np.asarray(stepper.shared.cache.age),
+              'clock': np.asarray(stepper.shared.cache.clock),
+              'total': mgr.tick}
+
+    # victim: checkpoint every 4 ticks, killed mid-run at tick 9
+    stepper.reset()
+    mgr = SessionManager(stepper, slots=2)
+    ckpt = CheckpointManager(tmp_path / backend, keep=3)
+    mgr.enable_checkpoints(ckpt, every=4)
+    for s in _sessions():
+        mgr.submit(s)
+    while not mgr.drained() and mgr.tick < 9:
+        mgr.run_tick()
+        mgr.evict_finished()
+        mgr.maybe_checkpoint()
+    assert not mgr.drained(), 'kill point must land mid-run'
+    ckpt.wait()   # the crash loses in-flight RAM, not published renames
+
+    # survivor: fresh manager + session objects, state restored from disk
+    stepper.reset()
+    rec = TickRecorder(stepper)
+    mgr = SessionManager(rec, slots=2)
+    restored = mgr.restore_serving(CheckpointManager(tmp_path / backend),
+                                   _sessions())
+    assert restored == 8, 'newest complete checkpoint is tick 8'
+    assert mgr.tick == 8
+    mgr.run()
+    assert mgr.metrics['serve.restores'].value == 1
+
+    # continuation == golden tail, bit for bit
+    want = {t: v for t, v in golden['ticks'].items() if t >= 8}
+    assert rec.ticks == want, \
+        f'{backend}: restored continuation diverged from golden tail'
+    assert mgr.tick == golden['total']
+    np.testing.assert_array_equal(
+        np.asarray(stepper.shared.cache.tags), golden['tags'],
+        err_msg=f'{backend}: cache tags')
+    np.testing.assert_array_equal(
+        np.asarray(stepper.shared.cache.age), golden['age'],
+        err_msg=f'{backend}: LRU ages')
+    np.testing.assert_array_equal(
+        np.asarray(stepper.shared.cache.clock), golden['clock'],
+        err_msg=f'{backend}: LRU clock')
+
+
+def test_kill_and_restore_bitwise_reference(small_scene, tmp_path):
+    _restore_oracle(small_scene, 'reference', tmp_path)
+
+
+def test_kill_and_restore_bitwise_pallas(small_scene, tmp_path):
+    _restore_oracle(small_scene, 'pallas', tmp_path)
