@@ -11,8 +11,10 @@ render tick is caught by the build, not by the next person rereading BENCH
 JSON by hand.
 
 Rows are matched by identity (viewers / mode / backend / viewers_per_scene
-/ driver / stagger for serve; metric name for kernel) and only the
-intersection is gated — a quick CI run gates the viewer counts it measures
+/ driver / stagger / fault_rate / devices for serve; metric name for
+kernel) and only the intersection is gated — a missing key on either side
+takes its default (``devices`` defaults to 1), so single-device baselines
+recorded before the fleet axis existed still compare — a quick CI run gates the viewer counts it measures
 against the same rows of the full committed baseline.  Tolerance bands are
 deliberately wide for wall-clock metrics (the container clock is noisy and
 quick runs render fewer frames) and tight for structural ones:
@@ -49,7 +51,7 @@ SUITES = ('serve', 'kernel')
 ROW_KEYS = {
     'serve': (('viewers', None), ('mode', None), ('backend', None),
               ('viewers_per_scene', 1), ('driver', 'sync'), ('stagger', 0),
-              ('fault_rate', 0.0)),
+              ('fault_rate', 0.0), ('devices', 1)),
     'kernel': (('metric', None),),
 }
 

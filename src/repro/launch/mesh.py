@@ -35,3 +35,32 @@ def make_test_mesh(shape=(2, 2), axes=('data', 'model')):
     for s in shape:
         n *= s
     return jax.sharding.Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)
+
+
+def make_serve_mesh(num_devices: int | None = None):
+    """1-D ``devices`` mesh for the sharded serving fleet (one scene-block
+    worker per device).  Requires genuinely distinct devices — jax meshes
+    reject duplicates — so CPU CI launches with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=4``."""
+    import numpy as np
+    from repro.runtime.sharding import DEVICES_AXIS
+    avail = jax.devices()
+    n = len(avail) if num_devices is None else num_devices
+    if len(avail) < n:
+        raise RuntimeError(
+            f'need {n} devices for the serving mesh, have {len(avail)} — '
+            f'launch with XLA_FLAGS=--xla_force_host_platform_device_count='
+            f'{n} on CPU')
+    return jax.sharding.Mesh(np.asarray(avail[:n]), (DEVICES_AXIS,))
+
+
+def serve_devices(num_workers: int) -> list:
+    """Device handle per fleet worker, cycling over the available devices.
+
+    Unlike a mesh, workers may OVERSUBSCRIBE: tier-1 CI runs the N-worker
+    fleet on a single CPU device (workers are independent host loops over
+    per-device steppers, not collective participants), while the
+    multi-device CI job and real deployments get one worker per distinct
+    device."""
+    avail = jax.devices()
+    return [avail[i % len(avail)] for i in range(num_workers)]

@@ -35,6 +35,19 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Axes = Union[str, tuple]
 
+#: 1-D serving-fleet mesh axis: scene blocks shard across devices, one host
+#: worker per device (see ``repro.serve.fleet`` / ``launch.mesh
+#: .make_serve_mesh``).
+DEVICES_AXIS = 'devices'
+
+
+def fleet_axis_sharding(mesh: Optional[Mesh]) -> Optional[NamedSharding]:
+    """Leading-axis sharding over the serving fleet's ``devices`` axis
+    (None mesh -> None, the single-device no-op)."""
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, P(DEVICES_AXIS))
+
 
 def batch_axes(mesh: Optional[Mesh]) -> tuple:
     if mesh is None:

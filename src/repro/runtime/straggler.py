@@ -14,6 +14,19 @@ policy callbacks the launcher wires up:
 The detector is pure-host-side bookkeeping (no device code), so the train
 loop calls ``observe(host_id, step_seconds)`` with timings it already has —
 in a real deployment from a heartbeat service; in tests, synthetically.
+The serving fleet (``repro.serve.fleet``) reuses it unchanged with
+host == device worker.
+
+Cold-start contract: the first observation *seeds* the EWMA (no zero-mix
+warmup bias), and a fleet needs at least two observed hosts before anyone
+can be flagged — a single host has no fleet to be slower than, and its
+median tracks its own EWMA, so self-flagging on a spike would only ever
+exclude the entire (one-host) fleet.
+
+Pass ``metrics=`` (a ``repro.obs.metrics.Registry``) to mirror every
+``on_straggler`` event onto ``straggler.flagged{host=...}`` counters and
+a ``straggler.flagged_total`` counter, so dashboards see exclusions
+without wiring a callback.
 """
 from __future__ import annotations
 
@@ -36,12 +49,14 @@ class StragglerDetector:
 
     def __init__(self, num_hosts: int, *, alpha: float = 0.2,
                  threshold: float = 1.25, patience: int = 3,
-                 on_straggler: Optional[Callable[[int, float, float], None]] = None):
+                 on_straggler: Optional[Callable[[int, float, float], None]] = None,
+                 metrics=None):
         self.num_hosts = num_hosts
         self.alpha = alpha
         self.threshold = threshold
         self.patience = patience
         self.on_straggler = on_straggler
+        self.metrics = metrics
         self.stats = [HostStat() for _ in range(num_hosts)]
         self.flagged: set[int] = set()
 
@@ -75,7 +90,10 @@ class StragglerDetector:
         GC-pause blip must not flag via its lingering EWMA); the EWMA backs
         the reported magnitude and z-scores."""
         med = self.fleet_median()
-        if med <= 0:
+        observed = sum(1 for s in self.stats if s.count > 0)
+        if med <= 0 or observed < 2:
+            # A one-host "fleet" compares a host against its own EWMA —
+            # a single spike could flag (and exclude) the whole fleet.
             return set()
         new = set()
         for h, s in enumerate(self.stats):
@@ -91,6 +109,9 @@ class StragglerDetector:
                 new.add(h)
                 if self.on_straggler:
                     self.on_straggler(h, s.ewma, med)
+                if self.metrics is not None:
+                    self.metrics.counter('straggler.flagged', host=h).inc()
+                    self.metrics.counter('straggler.flagged_total').inc()
         return new
 
     def zscore(self, host_id: int) -> float:

@@ -31,6 +31,8 @@ injected via ``SessionManager``; no-ops by default) — see the README's
 """
 from repro.serve.events import (HostTiming, SyncDriver, ThreadedDriver,
                                 TickPlan)
+from repro.serve.fleet import (FleetManager, SyncFleetDriver,
+                               ThreadedFleetDriver, serve_fleet)
 from repro.serve.session import SessionManager, ViewerSession
 from repro.serve.stepper import BatchedStepper, SequentialStepper, TickTiming
 from repro.serve.telemetry import (SessionTelemetry, aggregate, format_table,
@@ -41,5 +43,6 @@ __all__ = [
     'BatchedStepper', 'SequentialStepper', 'SessionManager', 'TickTiming',
     'ViewerSession', 'SessionTelemetry', 'aggregate', 'format_table',
     'tick_rollup', 'TickPlan', 'HostTiming', 'SyncDriver', 'ThreadedDriver',
+    'FleetManager', 'SyncFleetDriver', 'ThreadedFleetDriver', 'serve_fleet',
     'TrafficTrace', 'make_trace',
 ]

@@ -30,6 +30,12 @@ Fault kinds (the taxonomy README's "Failure model & recovery" documents):
   * ``worker_death``        — the threaded driver's planner worker dies
     without posting a completion; the main loop's bounded queue get times
     out, plans inline (degraded mode) and restarts the worker.
+  * ``device_loss``         — an entire device drops out of the serving
+    fleet (``ev.slot`` is the device index; -1 = the highest-numbered
+    alive device).  Only the fleet drivers (``repro.serve.fleet``) consume
+    it: the lost device's scene blocks are migrated onto survivors from
+    the last crash-consistent checkpoint and admission stays bounded while
+    capacity is degraded.  Single-device drivers leave it outstanding.
 
 The **injector** follows the NULL-object seam of ``repro.obs.trace``: the
 manager holds ``faults.NULL`` by default — every check is a cheap attribute
@@ -42,6 +48,7 @@ trace exactly.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import deque
 
 import jax
@@ -49,7 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 KINDS = ('plan_exc', 'dispatch_transient', 'dispatch_persistent', 'stall',
-         'nan_poison', 'worker_death')
+         'nan_poison', 'worker_death', 'device_loss')
 
 
 class InjectedFault(RuntimeError):
@@ -222,6 +229,32 @@ def poison_camera(cam):
             return jnp.full_like(x, jnp.nan)
         return x
     return jax.tree.map(leaf, cam)
+
+
+def account_unfired(injector, metrics=None) -> dict:
+    """End-of-run accounting for events that never fired.
+
+    An armed-but-unfired event usually means the run ended before the
+    event's seam was reached (a short trace), the driver has no such seam
+    (``worker_death`` on the sync driver), or — the case worth an alarm —
+    the injection wiring silently rotted.  Surface the residue instead of
+    dropping it: one ``RuntimeWarning`` summarising the counts and a
+    ``serve.faults_unfired{kind=...}`` counter per kind on ``metrics``
+    (a ``repro.obs.metrics.Registry``; None skips the counters).
+
+    Returns the ``outstanding()`` dict so CLI summaries can print it.
+    """
+    left = injector.outstanding()
+    if left:
+        detail = ', '.join(f'{k}={n}' for k, n in sorted(left.items()))
+        warnings.warn(
+            f'fault trace finished with unfired events: {detail} '
+            f'(driver never reached their seam — see FaultInjector docs)',
+            RuntimeWarning, stacklevel=2)
+        if metrics is not None:
+            for kind, n in sorted(left.items()):
+                metrics.counter('serve.faults_unfired', kind=kind).inc(n)
+    return left
 
 
 class _NullInjector:

@@ -1,0 +1,874 @@
+"""Elastic multi-device serving fleet: scene-sharded workers, live session
+migration, and device-loss recovery.
+
+Scene blocks shard across a 1-D ``devices`` mesh axis (``launch.mesh
+.make_serve_mesh`` / ``repro.runtime.sharding.DEVICES_AXIS``): one host
+worker per device, each a full single-device serving stack — a
+``BatchedStepper`` whose arrays live on that device plus a
+``SessionManager`` driving the plan/apply/observe seam
+(``repro.serve.events``).  On top sits a shared admission queue and a
+deterministic placement layer:
+
+  * ``plan_route``      — FIFO routing of arrived sessions onto the
+    least-loaded alive device (sticky per-scene when viewers share scene
+    caches), pure numpy/python like ``plan_tick``;
+  * ``plan_rebalance``  — greedy max->min moves of *queued* sessions until
+    the load spread is within ``slack``; deterministic, a no-op when
+    already balanced, never targets a dead device;
+  * ``plan_shrink``     — device-loss placement: the lost device's slotted
+    viewers map onto survivors' free slots **at the same slot index**
+    wherever possible (``aligned`` — bit-identical continuation, see
+    below), the rest ``spill`` back to the admission queue.
+
+**Lockstep clock.** Every alive worker runs exactly one manager tick per
+fleet tick, and idle ticks advance the stepper's ``global_tick`` too, so
+all steppers share one sort-cadence clock (``global_tick == fleet tick``).
+That invariant is what makes cross-device moves exact: a viewer restored
+at the same slot index on a stepper at the same ``global_tick`` sees the
+same cadence residue, the same pool-freshness windows and the same lane
+state — its continuation is bit-identical to never having moved.
+
+**Drivers.** ``SyncFleetDriver`` is the virtual N-device oracle: workers
+tick sequentially in device order on a pure tick counter — replaying a
+traffic trace reproduces images, cache tags, LRU ages and sort cadence
+bit-for-bit.  ``ThreadedFleetDriver`` runs one persistent thread per
+worker (the real-time shape: devices crunch their ticks concurrently,
+barrier at the tick boundary).  Workers touch disjoint state and run the
+same ``run_tick`` code, and all fleet-level decisions (routing, loss
+handling) happen on the main thread between barriers — so the threaded
+fleet is structurally bit-identical to the sync oracle (the conformance
+suite in ``tests/test_fleet.py`` asserts it on both backends).  Per-worker
+wall times feed a ``repro.runtime.straggler.StragglerDetector``;
+``exclude_stragglers=True`` turns a persistent straggler into a
+``lose_device`` shrink at the tick boundary (wall-clock-driven, so it is
+off by default to preserve bit-identity).
+
+**Live migration** (``FleetManager.migrate``) moves one viewer between
+devices at a tick boundary via ``BatchedStepper.extract_viewer`` /
+``restore_viewer`` payloads — the per-viewer slice of the PR-7 snapshot
+format (``ViewerPrivate`` lane + camera, plus the ``SceneShared`` block
+and pool bookkeeping when the move is slot-aligned).  Aligned moves are
+bit-identical; unaligned moves restore cold and re-sort on admission, so
+the viewer observes at most one sort-window of sharing staleness — the
+same bound every freshly admitted viewer already lives under.
+
+**Device loss.** A ``device_loss`` fault event (``repro.serve.faults``) or
+a straggler exclusion marks a device dead at a tick boundary.  With
+checkpointing enabled (all workers snapshot at the same tick multiples,
+so the per-device checkpoints form one crash-consistent fleet snapshot)
+recovery is a whole-fleet rollback — synchronous elastic-training
+semantics, like ``repro.runtime.elastic`` shrinking a training mesh:
+
+  1. every survivor restores its own checkpoint (bit-identical per-worker
+     resume — the PR-7 kill-and-restore oracle);
+  2. the victim's checkpoint is read host-side; its slotted viewers are
+     placed onto survivors by ``plan_shrink`` — aligned ones restore their
+     exact lane (bit-identical continuation vs the unfaulted golden run),
+     spilled ones re-queue with their checkpoint cursor;
+  3. per-session telemetry rolls back to the restored cursors
+     (``SessionTelemetry.rollback``) so replayed frames are not
+     double-counted; delivery is at-least-once;
+  4. anything admitted after the snapshot re-queues from the start.
+
+Without checkpoints the recovery is cold: host-side cursors are
+crash-consistent in-process, so victims re-queue at their current frame
+and re-admit cold on survivors — zero dropped viewers either way.  While
+capacity is degraded the bounded fleet admission queue (``max_pending``)
+sheds *new* load instead of collapsing: accepted viewers always drain.
+
+Fault scope: the fleet consumes only ``device_loss`` from its injector;
+per-worker host-loop faults (plan_exc, nan_poison, ...) belong to the
+single-device drivers and keep their existing seams there.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import warnings
+import time
+from collections import deque
+from pathlib import Path
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.launch.mesh import serve_devices
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.runtime.straggler import StragglerDetector
+from repro.serve import faults as serve_faults
+from repro.serve import telemetry as serve_telemetry
+from repro.serve.session import SessionManager, ViewerSession
+from repro.serve.stepper import BatchedStepper
+
+
+# -- pure placement planners (numpy/python only, no device state) -----------
+
+def plan_route(pending, loads, alive, scene_home=None):
+    """Route arrived sessions onto devices: ``((sid, device), ...)``.
+
+    ``pending`` is ``((sid, scene_id), ...)`` in FIFO order; ``loads`` maps
+    device -> current load (active + queued); ``alive`` is the live device
+    set.  A scene already homed on an alive device keeps attracting its
+    viewers (``scene_home``: scene_id -> device; cache sharing only pays
+    on-device); everything else goes to the least-loaded alive device,
+    lowest id breaking ties.  Pure and deterministic — same inputs, same
+    routing, on any host."""
+    alive_l = sorted(alive)
+    if not alive_l:
+        raise ValueError('plan_route: no alive devices')
+    loads = {d: int(loads.get(d, 0)) for d in alive_l}
+    out = []
+    for sid, scene_id in pending:
+        dev = None
+        if scene_home:
+            home = scene_home.get(scene_id)
+            if home in loads:
+                dev = home
+        if dev is None:
+            dev = min(alive_l, key=lambda d: (loads[d], d))
+        out.append((sid, dev))
+        loads[dev] += 1
+    return tuple(out)
+
+
+def plan_rebalance(assignments, alive, *, slack=1, fixed=None):
+    """Even out *movable* load: ``((sid, src, dst), ...)`` moves.
+
+    ``assignments`` maps device -> tuple of movable sids (queue order);
+    ``fixed`` maps device -> immovable load (slotted viewers — migrating
+    those costs state, queued ones are free to move).  Movable sids
+    stranded on dead devices evacuate first; then greedy max->min moves
+    run until the load spread is within ``slack`` (>= 1 — a spread of one
+    is already balanced for integer loads).  Deterministic (sorted device
+    order, LIFO pops), a no-op when balanced, and never targets a device
+    outside ``alive``."""
+    alive_l = sorted(alive)
+    if not alive_l:
+        raise ValueError('plan_rebalance: no alive devices')
+    slack = max(1, int(slack))
+    fixed = {d: int((fixed or {}).get(d, 0)) for d in alive_l}
+    movable = {d: list(assignments.get(d, ())) for d in alive_l}
+    moves = []
+
+    def load(d):
+        return fixed[d] + len(movable[d])
+
+    for dead in sorted(assignments):
+        if dead in movable:
+            continue
+        for sid in assignments[dead]:
+            dst = min(alive_l, key=lambda d: (load(d), d))
+            movable[dst].append(sid)
+            moves.append((sid, dead, dst))
+    while True:
+        candidates = [d for d in alive_l if movable[d]]
+        if not candidates:
+            break
+        src = max(candidates, key=lambda d: (load(d), -d))
+        dst = min(alive_l, key=lambda d: (load(d), d))
+        if load(src) - load(dst) <= slack:
+            break
+        sid = movable[src].pop()
+        movable[dst].append(sid)
+        moves.append((sid, src, dst))
+    return tuple(moves)
+
+
+def plan_shrink(victims, free, alive):
+    """Device-loss placement: ``(aligned, spilled)``.
+
+    ``victims`` is ``((sid, slot), ...)`` from the lost device's checkpoint;
+    ``free`` maps alive device -> iterable of free slot indices.  Each
+    victim lands on the lowest-id alive device with **the same slot index**
+    free (``aligned`` — the only placement whose restored lane replays
+    bit-identically: pool ownership and sort-cadence residue are keyed by
+    slot index); the rest return as ``spilled`` sids for cold
+    re-admission.  Pure and deterministic."""
+    alive_l = sorted(alive)
+    free = {d: set(free.get(d, ())) for d in alive_l}
+    aligned, spilled = [], []
+    for sid, slot in victims:
+        target = next((d for d in alive_l if slot in free[d]), None)
+        if target is None:
+            spilled.append(sid)
+        else:
+            free[target].discard(slot)
+            aligned.append((sid, target, slot))
+    return tuple(aligned), tuple(spilled)
+
+
+def viewer_payload_from_state(arrays, meta, slot, viewers_per_scene=1):
+    """Build an ``extract_viewer``-format payload for ``slot`` out of a
+    checkpointed ``BatchedStepper.state_dict`` — the device is gone, so its
+    last crash-consistent snapshot is the source of truth.  Valid for an
+    aligned restore only (same slot index, same ``global_tick``; see
+    ``BatchedStepper.extract_viewer``)."""
+    scene_i = slot // viewers_per_scene
+    payload = {
+        'priv': jax.tree.map(lambda x: np.asarray(x)[slot], arrays['priv']),
+        'cam': jax.tree.map(lambda x: np.asarray(x)[slot],
+                            arrays['slot_cams']),
+        'frames_since_due': int(meta['frames_since_due'][slot]),
+        'pending_sort': slot in set(meta['pending_sort']),
+        'shared': None,
+        'pool_rows': None,
+    }
+    if viewers_per_scene == 1:
+        payload['shared'] = jax.tree.map(
+            lambda x: np.asarray(x)[scene_i], arrays['shared'])
+        payload['pool_rows'] = {
+            'pool_cell': np.asarray(meta['pool_cell'][scene_i], np.int64),
+            'pool_tick': np.asarray(meta['pool_tick'][scene_i], np.int64),
+            'pool_owner': np.asarray(meta['pool_owner'][scene_i], np.int64),
+            'slot_pool': int(meta['slot_pool'][slot]),
+            'refs': np.asarray(meta['refs'][scene_i], np.int64),
+        }
+    return payload
+
+
+# -- the fleet ---------------------------------------------------------------
+
+@dataclasses.dataclass
+class FleetWorker:
+    """One device's serving stack: its own stepper (arrays committed to
+    ``device``), its own ``SessionManager`` with a private metrics registry
+    (``tick.*`` series are per-manager — sharing one registry across
+    workers would interleave their tick streams), and optionally its own
+    checkpoint directory."""
+
+    device_id: int
+    device: object
+    mgr: SessionManager
+    ckpt: object = None
+
+
+class FleetManager:
+    """Scene-sharded serving across N device workers (see module docs).
+
+    All mutations happen on the driver's main thread at tick boundaries;
+    worker ``run_tick`` legs touch only their own worker's state, which is
+    what lets ``ThreadedFleetDriver`` run them concurrently without locks
+    or divergence from the sync oracle.
+    """
+
+    def __init__(self, workers, *, tracer=None, metrics=None, injector=None,
+                 max_pending: Optional[int] = None):
+        self.workers = list(workers)
+        if not self.workers:
+            raise ValueError('fleet needs at least one worker')
+        self.tracer = tracer if tracer is not None else obs_trace.NULL
+        self.metrics = metrics if metrics is not None else \
+            obs_metrics.Registry()
+        self.injector = injector if injector is not None else \
+            serve_faults.NULL
+        self.max_pending = max_pending
+        self.alive = {w.device_id for w in self.workers}
+        self.tick = 0
+        self.pending: deque[ViewerSession] = deque()
+        self.shed: list[ViewerSession] = []
+        self.sessions: dict[int, ViewerSession] = {}
+        self.home: dict[int, int] = {}          # sid -> device
+        self.scene_home: dict[int, int] = {}    # scene_id -> device (vps>1)
+        #: finished sessions recovered from a lost device's checkpoint meta
+        #: (their worker is dead; they are done and must still be counted)
+        self.orphan_finished: list[ViewerSession] = []
+        self._gauge_alive()
+
+    # -- construction ------------------------------------------------------
+
+    @classmethod
+    def build(cls, scene, cfg, cam0, *, num_devices: int,
+              slots_per_device: int, viewers_per_scene: int = 1,
+              profile_every: int = 0, ckpt_root=None, ckpt_every: int = 0,
+              max_pending: Optional[int] = None, injector=None,
+              tracer=None, metrics=None, stepper_cls=BatchedStepper):
+        """One worker per device (``launch.mesh.serve_devices`` — distinct
+        devices when available, oversubscribed on single-device CI).  Each
+        stepper is constructed under ``jax.default_device`` so its arrays
+        commit to its worker's device."""
+        from repro.checkpoint.manager import CheckpointManager
+        devices = serve_devices(num_devices)
+        workers = []
+        for d, dev in enumerate(devices):
+            with jax.default_device(dev):
+                stepper = stepper_cls(
+                    scene, cfg, cam0, slots_per_device,
+                    profile_every=profile_every,
+                    viewers_per_scene=viewers_per_scene)
+            mgr = SessionManager(stepper, slots_per_device,
+                                 metrics=obs_metrics.Registry())
+            ckpt = None
+            if ckpt_root is not None and ckpt_every > 0:
+                ckpt = CheckpointManager(Path(ckpt_root) / f'device{d}',
+                                         metrics=mgr.metrics)
+                mgr.enable_checkpoints(ckpt, ckpt_every)
+            workers.append(FleetWorker(d, dev, mgr, ckpt))
+        return cls(workers, tracer=tracer, metrics=metrics,
+                   injector=injector, max_pending=max_pending)
+
+    # -- admission ---------------------------------------------------------
+
+    def submit(self, session: ViewerSession) -> bool:
+        """Bounded fleet-level admission: beyond ``max_pending`` queued
+        sessions the arrival is shed (recorded + counted), never silently
+        dropped — degraded capacity sheds NEW load; accepted viewers always
+        drain."""
+        if self.max_pending is not None \
+                and len(self.pending) >= self.max_pending:
+            self.shed.append(session)
+            self.metrics.counter(
+                'fleet.shed',
+                'arrivals rejected by the bounded fleet queue').inc()
+            return False
+        self.pending.append(session)
+        self.sessions[session.sid] = session
+        self.metrics.gauge('fleet.pending_depth',
+                           'fleet admission queue depth').set(
+                               len(self.pending))
+        return True
+
+    # -- tick legs (shared by both fleet drivers) --------------------------
+
+    def alive_workers(self) -> list[FleetWorker]:
+        return [w for w in self.workers if w.device_id in self.alive]
+
+    def _check_device_loss(self) -> None:
+        """Consume a pending ``device_loss`` event at the tick boundary."""
+        if not self.injector.enabled:
+            return
+        ev = self.injector.take('device_loss', self.tick)
+        if ev is None:
+            return
+        victim = ev.slot if ev.slot in self.alive else max(self.alive)
+        if len(self.alive) <= 1:
+            warnings.warn(
+                f'device_loss at tick {self.tick} ignored: device '
+                f'{victim} is the last alive device (a real loss here is '
+                f'a total outage, not a shrink)', RuntimeWarning,
+                stacklevel=2)
+            self.metrics.counter(
+                'fleet.device_loss_ignored',
+                'loss events on the last alive device').inc()
+            return
+        self.lose_device(victim)
+
+    def _route_tick(self) -> None:
+        """Route arrived queued sessions onto alive workers."""
+        arrived = [s for s in self.pending if s.arrival_tick <= self.tick]
+        if not arrived:
+            return
+        vps = max(getattr(w.mgr.stepper, 'viewers_per_scene', 1)
+                  for w in self.workers)
+        loads = {w.device_id: len(w.mgr.active_slots()) + len(w.mgr.pending)
+                 for w in self.alive_workers()}
+        routes = plan_route(
+            tuple((s.sid, s.scene_id) for s in arrived), loads, self.alive,
+            scene_home=self.scene_home if vps > 1 else None)
+        by_sid = {s.sid: s for s in arrived}
+        for sid, dev in routes:
+            sess = by_sid[sid]
+            self.pending.remove(sess)
+            self.workers[dev].mgr.submit(sess)
+            self.home[sid] = dev
+            if vps > 1:
+                self.scene_home.setdefault(sess.scene_id, dev)
+            self.metrics.counter('fleet.routed',
+                                 'sessions routed to a device worker',
+                                 device=dev).inc()
+        self.metrics.gauge('fleet.pending_depth',
+                           'fleet admission queue depth').set(
+                               len(self.pending))
+
+    def _worker_tick(self, w: FleetWorker) -> int:
+        """One worker's tick leg: run, evict, and keep the stepper clock in
+        lockstep (idle ticks advance ``global_tick`` too — the fleet-wide
+        shared sort-cadence clock that slot-aligned moves rely on)."""
+        frames = w.mgr.run_tick()
+        stepper = w.mgr.stepper
+        if getattr(stepper, 'global_tick', w.mgr.tick) < w.mgr.tick:
+            stepper.global_tick = w.mgr.tick
+        w.mgr.evict_finished()
+        return frames
+
+    def _after_tick(self) -> None:
+        self.tick += 1
+        for w in self.alive_workers():
+            w.mgr.maybe_checkpoint()
+
+    def run_tick(self) -> int:
+        """One synchronous fleet tick (the virtual N-device oracle leg)."""
+        self._check_device_loss()
+        self._route_tick()
+        frames = 0
+        for w in self.alive_workers():
+            frames += self._worker_tick(w)
+        self._after_tick()
+        return frames
+
+    # -- live migration ----------------------------------------------------
+
+    def migrate(self, sid: int, dst: int) -> Optional[int]:
+        """Move one slotted viewer to device ``dst`` at a tick boundary.
+
+        Slot-aligned moves (the same slot index is free on ``dst``, private
+        scene blocks) carry the whole scene lane — bit-identical
+        continuation.  Otherwise the viewer restores cold into the lowest
+        free slot and re-sorts on admission (at most one sort-window of
+        staleness).  With no free slot on ``dst`` the viewer re-queues on
+        the fleet with its cursor preserved.  Returns the destination slot,
+        or None when re-queued."""
+        if dst not in self.alive:
+            raise ValueError(f'migrate: device {dst} is not alive')
+        src = self.home.get(sid)
+        if src is None or src not in self.alive:
+            raise ValueError(f'migrate: sid {sid} has no alive home device')
+        if src == dst:
+            raise ValueError(f'migrate: sid {sid} already on device {dst}')
+        sw, dw = self.workers[src], self.workers[dst]
+        slot = next((i for i, s in enumerate(sw.mgr.slot_session)
+                     if s is not None and s.sid == sid), None)
+        if slot is None:
+            raise ValueError(f'migrate: sid {sid} is not slotted on '
+                             f'device {src}')
+        free = dw.mgr.free_slots()
+        if not free:
+            sess = sw.mgr.vacate(slot)
+            sess.telemetry.admitted_tick = -1
+            self.pending.append(sess)
+            self.home.pop(sid, None)
+            self.metrics.counter('fleet.migrations',
+                                 'viewer moves between devices',
+                                 kind='requeued').inc()
+            return None
+        vps1 = getattr(sw.mgr.stepper, 'viewers_per_scene', 1) == 1
+        aligned = vps1 and slot in free
+        payload = sw.mgr.stepper.extract_viewer(slot, with_scene=aligned)
+        sess = sw.mgr.vacate(slot)
+        target = slot if aligned else free[0]
+        dw.mgr.place(target, sess, payload=payload,
+                     admitted_tick=sess.telemetry.admitted_tick)
+        self.home[sid] = dst
+        self.metrics.counter('fleet.migrations',
+                             'viewer moves between devices',
+                             kind='aligned' if aligned else 'cold').inc()
+        return target
+
+    # -- device loss -------------------------------------------------------
+
+    def lose_device(self, victim: int) -> None:
+        """Shrink the fleet: mark ``victim`` dead and migrate every session
+        off it (checkpoint rollback when available, cold re-queue
+        otherwise).  Zero dropped viewers either way."""
+        if victim not in self.alive:
+            raise ValueError(f'device {victim} is not alive')
+        if len(self.alive) <= 1:
+            raise ValueError('cannot lose the last alive device')
+        vw = self.workers[victim]
+        self.alive.discard(victim)
+        self.metrics.counter('fleet.device_lost',
+                             'devices dropped from the fleet',
+                             device=victim).inc()
+        self.tracer.instant('device_loss', device=victim, tick=self.tick)
+        with self.tracer.span('device_recovery', device=victim,
+                              tick=self.tick):
+            if vw.ckpt is not None and vw.ckpt.latest() is not None:
+                self._recover_from_checkpoint(vw)
+            else:
+                self._recover_cold(vw)
+        self._gauge_alive()
+
+    def _gauge_alive(self) -> None:
+        self.metrics.gauge('fleet.alive_devices',
+                           'devices currently serving').set(len(self.alive))
+
+    def _recover_cold(self, vw: FleetWorker) -> None:
+        """No checkpoint: host-side cursors are crash-consistent in-process
+        (every delivered frame advanced them before the loss), so victims
+        re-queue at their current frame and re-admit cold on survivors.
+        Rendered frames are never re-rendered; the viewers just lose their
+        warm caches."""
+        mgr = vw.mgr
+        victims = [mgr.vacate(slot) for slot in mgr.active_slots()]
+        victims.extend(mgr.pending)
+        mgr.pending.clear()
+        self.orphan_finished.extend(mgr.finished)
+        mgr.finished = []
+        for sess in sorted(victims, key=lambda s: (s.arrival_tick, s.sid)):
+            sess.telemetry.admitted_tick = -1
+            self.home.pop(sess.sid, None)
+            self.pending.append(sess)
+        self.scene_home = {sc: d for sc, d in self.scene_home.items()
+                           if d != vw.device_id}
+        self.metrics.counter('fleet.requeued',
+                             'sessions re-queued off a lost device').inc(
+                                 len(victims))
+
+    def _recover_from_checkpoint(self, vw: FleetWorker) -> None:
+        """Whole-fleet rollback to the last crash-consistent snapshot.
+
+        All workers checkpoint at the same tick multiples under the
+        lockstep clock, so the newest per-device checkpoints form one
+        consistent fleet state.  Survivors restore their own snapshots
+        (bit-identical per-worker resume); the victim's snapshot is read
+        host-side and its viewers shrink onto survivors via
+        ``plan_shrink``.  Replay from the snapshot is at-least-once
+        delivery — telemetry rolls back so nothing double-counts."""
+        for w in self.workers:
+            if w.ckpt is not None:
+                w.ckpt.wait()
+        all_sessions = list(self.sessions.values())
+        survivors = self.alive_workers()
+        ticks = set()
+        for w in survivors:
+            step = w.mgr.restore_serving(w.ckpt, all_sessions)
+            if step is None:
+                raise RuntimeError(
+                    f'device {w.device_id} has no usable checkpoint — '
+                    f'fleet snapshots are taken in lockstep, so this is '
+                    f'checkpoint corruption, not a race')
+            ticks.add(w.mgr.tick)
+        if len(ticks) != 1:
+            raise RuntimeError(f'fleet checkpoints out of sync: restored '
+                               f'ticks {sorted(ticks)}')
+        restore_tick = ticks.pop()
+        for w in survivors:
+            # rolled-back frames will replay: truncate per-session frame
+            # telemetry to the restored cursors and drop post-snapshot tick
+            # log entries (restore_serving leaves pending cursors alone —
+            # a PR-7 fresh-process restore never needed the fix-up, an
+            # in-process rollback does)
+            for sess in w.mgr.slot_session:
+                if sess is not None:
+                    sess.telemetry.rollback(sess.cursor)
+            for sess in w.mgr.pending:
+                sess.cursor = 0
+                sess.telemetry.rollback(0)
+                sess.telemetry.admitted_tick = -1
+            w.mgr.tick_log = [t for t in w.mgr.tick_log
+                              if t['tick'] < restore_tick]
+
+        # the victim's snapshot, read host-side
+        template, _ = vw.mgr.stepper.state_dict()
+        out = vw.ckpt.restore_latest(template)
+        if out is None:
+            raise RuntimeError(f'device {vw.device_id}: checkpoint '
+                               f'vanished between latest() and restore')
+        arrays, _step, meta = out
+        if int(meta['tick']) != restore_tick:
+            raise RuntimeError(
+                f'victim checkpoint tick {meta["tick"]} != fleet restore '
+                f'tick {restore_tick}')
+        vps = getattr(vw.mgr.stepper, 'viewers_per_scene', 1)
+        slotted = [(m['sid'], slot, int(m['cursor']),
+                    int(m['admitted_tick']))
+                   for slot, m in enumerate(meta['slots']) if m is not None]
+        info = {sid: (cursor, adm) for sid, _, cursor, adm in slotted}
+        free = {w.device_id: tuple(w.mgr.free_slots()) for w in survivors}
+        aligned, spilled = plan_shrink(
+            tuple((sid, slot) for sid, slot, _, _ in slotted), free,
+            self.alive)
+        for sid, dev, slot in aligned:
+            sess = self.sessions[sid]
+            cursor, adm = info[sid]
+            sess.cursor = cursor
+            sess.telemetry.rollback(cursor)
+            payload = viewer_payload_from_state(
+                arrays, meta['stepper'], slot, viewers_per_scene=vps)
+            self.workers[dev].mgr.place(slot, sess, payload=payload,
+                                        admitted_tick=adm)
+            self.home[sid] = dev
+            self.metrics.counter('fleet.migrations',
+                                 'viewer moves between devices',
+                                 kind='loss_aligned').inc()
+        requeue = []
+        for sid in spilled:
+            sess = self.sessions[sid]
+            cursor, _adm = info[sid]
+            sess.cursor = cursor
+            sess.telemetry.rollback(cursor)
+            sess.telemetry.admitted_tick = -1
+            self.home.pop(sid, None)
+            requeue.append(sess)
+            self.metrics.counter('fleet.migrations',
+                                 'viewer moves between devices',
+                                 kind='loss_spilled').inc()
+        for sid in meta['pending']:
+            sess = self.sessions[sid]
+            sess.cursor = 0
+            sess.telemetry.rollback(0)
+            sess.telemetry.admitted_tick = -1
+            self.home.pop(sid, None)
+            requeue.append(sess)
+        for sid in meta['finished']:
+            sess = self.sessions[sid]
+            sess.cursor = len(sess.cams)
+            self.orphan_finished.append(sess)
+        # the victim's live (post-snapshot) state is dead with the device
+        vw.mgr.slot_session = [None] * vw.mgr.slots
+        vw.mgr.pending.clear()
+        vw.mgr.finished = []
+        vw.mgr.tick_log = [t for t in vw.mgr.tick_log
+                           if t['tick'] < restore_tick]
+        self.scene_home = {sc: d for sc, d in self.scene_home.items()
+                           if d != vw.device_id}
+
+        # reconcile: sessions accepted after the snapshot are nowhere in
+        # the restored state — they restart from frame 0
+        placed = {s.sid for s in self.orphan_finished}
+        placed |= {s.sid for s in requeue}
+        placed |= {s.sid for s in self.pending}
+        placed |= {s.sid for s in self.shed}
+        for w in survivors:
+            placed |= {s.sid for s in w.mgr.slot_session if s is not None}
+            placed |= {s.sid for s in w.mgr.pending}
+            placed |= {s.sid for s in w.mgr.finished}
+        for sid in sorted(self.sessions):
+            if sid in placed:
+                continue
+            sess = self.sessions[sid]
+            sess.cursor = 0
+            sess.telemetry.rollback(0)
+            sess.telemetry.admitted_tick = -1
+            self.home.pop(sid, None)
+            requeue.append(sess)
+        merged = list(self.pending) + requeue
+        self.pending = deque(sorted(merged,
+                                    key=lambda s: (s.arrival_tick, s.sid)))
+        self.metrics.counter('fleet.requeued',
+                             'sessions re-queued off a lost device').inc(
+                                 len(requeue))
+        self.tick = restore_tick
+
+    # -- draining / results ------------------------------------------------
+
+    def drained(self) -> bool:
+        return (not self.pending
+                and all(w.mgr.drained() for w in self.alive_workers()))
+
+    def finished_sessions(self) -> list[ViewerSession]:
+        out = list(self.orphan_finished)
+        for w in self.workers:
+            out.extend(w.mgr.finished)
+        return sorted(out, key=lambda s: s.sid)
+
+    def summaries(self) -> list[dict]:
+        return [s.telemetry.summary() for s in self.finished_sessions()]
+
+    def aggregate(self) -> dict:
+        agg = serve_telemetry.aggregate(self.summaries())
+        agg['devices'] = len(self.workers)
+        agg['alive_devices'] = len(self.alive)
+        agg['shed'] = len(self.shed)
+        return agg
+
+    def merged_tick_log(self) -> list[dict]:
+        """All workers' tick logs in tick order (ticks repeat across
+        workers — and, after a rollback, replayed ranges repeat in time;
+        per-frame percentiles over the merged log are at-least-once
+        accounting, consistent with the replayed frames)."""
+        log = []
+        for w in self.workers:
+            log.extend(w.mgr.tick_log)
+        return sorted(log, key=lambda t: t['tick'])
+
+
+# -- fleet drivers -----------------------------------------------------------
+
+class SyncFleetDriver:
+    """The virtual N-device oracle: workers tick sequentially in device
+    order on a pure tick counter.  Bit-identical trace replay — the
+    conformance baseline ``ThreadedFleetDriver`` is judged against."""
+
+    def __init__(self, fleet: FleetManager):
+        self.fleet = fleet
+
+    def run_tick(self) -> int:
+        return self.fleet.run_tick()
+
+    def run(self, max_ticks: int = 100_000) -> list[ViewerSession]:
+        fleet = self.fleet
+        while not fleet.drained():
+            self.run_tick()
+            if fleet.tick >= max_ticks:
+                raise RuntimeError('fleet serve loop did not drain')
+        return fleet.finished_sessions()
+
+
+class ThreadedFleetDriver:
+    """Real-time fleet driver: one persistent thread per worker, barrier at
+    every tick boundary.
+
+    Main-thread loop per fleet tick::
+
+        _check_device_loss()        # consume device_loss, maybe shrink
+        _route_tick()               # fleet queue -> worker queues
+        cmd[w].put(tick)            # alive workers tick concurrently
+        barrier: done[w].get()      # collect frames + wall time per worker
+        straggler.observe_step(...) # EWMA per device; optional exclusion
+        _after_tick()               # clock + lockstep checkpoints
+
+    Workers touch disjoint state and run the same ``run_tick`` code as the
+    sync oracle, and every fleet-level decision happens between barriers on
+    the main thread — so control flow (and therefore images, cache tags,
+    sort cadence) is bit-identical to ``SyncFleetDriver``; only wall-clock
+    telemetry differs.  ``exclude_stragglers=True`` trades that determinism
+    for availability: a device flagged by the ``StragglerDetector``
+    (threshold x fleet-median EWMA, ``patience`` consecutive slow ticks)
+    is dropped via ``lose_device`` at the next boundary."""
+
+    JOIN_TIMEOUT_S = 5.0
+
+    def __init__(self, fleet: FleetManager, *,
+                 exclude_stragglers: bool = False,
+                 straggler_threshold: float = 1.25,
+                 straggler_patience: int = 3,
+                 watchdog_s: Optional[float] = None):
+        self.fleet = fleet
+        self.exclude_stragglers = exclude_stragglers
+        self.detector = StragglerDetector(
+            len(fleet.workers), threshold=straggler_threshold,
+            patience=straggler_patience, metrics=fleet.metrics)
+        self.watchdog_s = watchdog_s if watchdog_s is not None \
+            else SessionManager.default_watchdog_s
+        self._cmd: dict[int, queue.Queue] = {}
+        self._done: dict[int, queue.Queue] = {}
+        self._threads: dict[int, threading.Thread] = {}
+
+    # -- worker lifecycle --------------------------------------------------
+
+    def _start(self) -> None:
+        for w in self.fleet.workers:
+            cmd: queue.Queue = queue.Queue()
+            done: queue.Queue = queue.Queue()
+
+            def loop(w=w, cmd=cmd, done=done):
+                while True:
+                    msg = cmd.get()
+                    if msg is None:
+                        return
+                    t0 = time.perf_counter()
+                    try:
+                        frames = self.fleet._worker_tick(w)
+                        done.put(('ok', frames,
+                                  time.perf_counter() - t0))
+                    except BaseException as exc:
+                        done.put(('error', exc,
+                                  time.perf_counter() - t0))
+
+            th = threading.Thread(
+                target=loop, name=f'fleet-worker-{w.device_id}',
+                daemon=True)
+            th.start()
+            self._cmd[w.device_id] = cmd
+            self._done[w.device_id] = done
+            self._threads[w.device_id] = th
+
+    def _stop(self) -> None:
+        for d, cmd in self._cmd.items():
+            cmd.put(None)
+        for d, th in self._threads.items():
+            th.join(timeout=self.JOIN_TIMEOUT_S)
+            if th.is_alive():
+                self.fleet.metrics.counter(
+                    'serve.thread_leaks',
+                    'planner threads alive past their join deadline').inc()
+                warnings.warn(f'{th.name} did not exit within '
+                              f'{self.JOIN_TIMEOUT_S}s; daemon thread '
+                              f'leaked', RuntimeWarning, stacklevel=2)
+        self._cmd, self._done, self._threads = {}, {}, {}
+
+    # -- the loop ----------------------------------------------------------
+
+    def run_tick(self) -> int:
+        fleet = self.fleet
+        fleet._check_device_loss()
+        fleet._route_tick()
+        alive = fleet.alive_workers()
+        for w in alive:
+            self._cmd[w.device_id].put(fleet.tick)
+        frames = 0
+        timings: dict[int, float] = {}
+        failures = []
+        for w in alive:
+            try:
+                kind, payload, dt = self._done[w.device_id].get(
+                    timeout=self.watchdog_s)
+            except queue.Empty:
+                raise RuntimeError(
+                    f'fleet watchdog: device {w.device_id} posted no tick '
+                    f'completion within {self.watchdog_s}s') from None
+            if kind == 'error':
+                failures.append((w.device_id, payload))
+                continue
+            frames += payload
+            timings[w.device_id] = dt
+        if failures:
+            dev, exc = failures[0]
+            raise RuntimeError(
+                f'fleet worker {dev} failed at tick {fleet.tick}') from exc
+        flagged = self.detector.observe_step(timings)
+        if self.exclude_stragglers:
+            for dev in sorted(flagged):
+                if dev in fleet.alive and len(fleet.alive) > 1:
+                    warnings.warn(
+                        f'excluding straggler device {dev} at tick '
+                        f'{fleet.tick}', RuntimeWarning, stacklevel=2)
+                    fleet.lose_device(dev)
+        fleet._after_tick()
+        return frames
+
+    def run(self, max_ticks: int = 100_000) -> list[ViewerSession]:
+        fleet = self.fleet
+        self._start()
+        try:
+            while not fleet.drained():
+                self.run_tick()
+                if fleet.tick >= max_ticks:
+                    raise RuntimeError('fleet serve loop did not drain')
+        finally:
+            self._stop()
+        return fleet.finished_sessions()
+
+
+FLEET_DRIVERS = {'sync': SyncFleetDriver, 'threaded': ThreadedFleetDriver}
+
+
+def get_fleet_driver(name: str, fleet: FleetManager, **kw):
+    try:
+        return FLEET_DRIVERS[name](fleet, **kw)
+    except KeyError:
+        raise ValueError(f'unknown fleet driver {name!r} '
+                         f'(expected one of {sorted(FLEET_DRIVERS)})') \
+            from None
+
+
+def serve_fleet(scene, cfg, cam0, sessions, *, num_devices: int,
+                slots_per_device: int, driver: str = 'sync',
+                viewers_per_scene: int = 1, profile_every: int = 0,
+                ckpt_root=None, ckpt_every: int = 0,
+                max_pending: Optional[int] = None, injector=None,
+                tracer=None, max_ticks: int = 100_000,
+                **driver_kw) -> tuple:
+    """Build a fleet, submit ``sessions``, drive it to drain.
+
+    Returns ``(fleet, finished_sessions)``; end-of-run fault accounting
+    (``serve.faults_unfired``) runs against the fleet registry."""
+    fleet = FleetManager.build(
+        scene, cfg, cam0, num_devices=num_devices,
+        slots_per_device=slots_per_device,
+        viewers_per_scene=viewers_per_scene, profile_every=profile_every,
+        ckpt_root=ckpt_root, ckpt_every=ckpt_every,
+        max_pending=max_pending, injector=injector, tracer=tracer)
+    for sess in sessions:
+        fleet.submit(sess)
+    drv = get_fleet_driver(driver, fleet, **driver_kw)
+    finished = drv.run(max_ticks)
+    for w in fleet.workers:
+        if w.ckpt is not None:
+            w.ckpt.wait()
+    if fleet.injector.enabled:
+        serve_faults.account_unfired(fleet.injector, fleet.metrics)
+    return fleet, finished

@@ -73,7 +73,8 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
           faults: str = '', fault_rate: float = 0.05, fault_seed: int = 0,
           watchdog: float | None = None, max_pending: int | None = None,
           checkpoint_dir: str | None = None, checkpoint_every: int = 0,
-          restore: bool = False, print_fn=print) -> dict:
+          restore: bool = False, devices: int = 1,
+          print_fn=print) -> dict:
     """Run the serving loop to completion; returns the aggregate rollup.
 
     ``backend`` selects the shade implementation ('reference' | 'pallas');
@@ -100,6 +101,15 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     ``checkpoint_every`` snapshot the full serving state every N ticks
     (atomic, crash-consistent — ``repro.checkpoint``); ``restore`` resumes
     from the newest complete snapshot instead of starting cold.
+
+    ``devices`` > 1 serves through the elastic multi-device fleet
+    (``repro.serve.fleet``): ``slots`` render slots *per device*, a shared
+    bounded admission queue with deterministic routing, and device-loss
+    recovery (inject it with ``--faults device_loss``; checkpointing makes
+    the recovery a whole-fleet rollback with slot-aligned bit-identical
+    continuation).  On CPU, launch with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` for distinct
+    devices; otherwise workers oversubscribe the one device.
     """
     if viewers < 1 or frames < 1:
         raise SystemExit('--viewers and --frames must be >= 1')
@@ -122,13 +132,6 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
                               arrivals=trace.arrivals, paces=trace.paces)
     cam0 = sessions[0].cams[0]
 
-    if sequential:
-        stepper = SequentialStepper(scene, cfg, cam0, slots,
-                                    profile_every=profile_every)
-    else:
-        stepper = BatchedStepper(scene, cfg, cam0, slots,
-                                 profile_every=profile_every,
-                                 viewers_per_scene=viewers_per_scene)
     injector = serve_faults.NULL
     fault_trace = None
     if faults:
@@ -140,6 +143,28 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
         fault_trace = serve_faults.make_trace(kinds, horizon, seed=fault_seed,
                                               rate=fault_rate, slots=slots)
         injector = serve_faults.FaultInjector(fault_trace)
+
+    if devices > 1:
+        if sequential:
+            raise SystemExit('--devices > 1 needs the batched engine')
+        return _serve_fleet_path(
+            scene, cfg, cam0, sessions, devices=devices, slots=slots,
+            driver=driver, viewers_per_scene=viewers_per_scene,
+            profile_every=profile_every, injector=injector,
+            fault_trace=fault_trace, fault_rate=fault_rate,
+            fault_seed=fault_seed, max_pending=max_pending,
+            checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every, backend=backend,
+            arrivals=arrivals, trace_out=trace_out,
+            metrics_out=metrics_out, print_fn=print_fn)
+
+    if sequential:
+        stepper = SequentialStepper(scene, cfg, cam0, slots,
+                                    profile_every=profile_every)
+    else:
+        stepper = BatchedStepper(scene, cfg, cam0, slots,
+                                 profile_every=profile_every,
+                                 viewers_per_scene=viewers_per_scene)
 
     tracer = obs.Tracer() if trace_out else None
     mgr = SessionManager(stepper, slots, tracer=tracer, injector=injector,
@@ -163,6 +188,8 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     finished = mgr.run(driver=driver)
     if ckpt is not None:
         ckpt.wait()   # flush any in-flight background save
+    if injector.enabled:
+        serve_faults.account_unfired(injector, mgr.metrics)
     if trace_out:
         obs.write_trace(trace_out, tracer)
         print_fn(f'-- trace: {len(tracer.events)} events -> {trace_out} '
@@ -209,8 +236,7 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     print_fn(format_table(summaries))
     print_fn(f"-- {agg['mode']} ({backend}): {agg['sessions']} sessions, "
              f"{agg['frames']} frames in {agg['ticks']} ticks, "
-             f"fleet {agg['fleet_fps']:.2f} fps/viewer "
-             f"(frame-weighted; unweighted mean {agg['mean_fps']:.2f}), "
+             f"fleet {agg['fleet_fps']:.2f} fps/viewer (frame-weighted), "
              f"mean hit rate {agg['mean_hit_rate']:.2f}, "
              f"worst p99 {agg['worst_p99_ms']:.0f} ms, "
              f"sort/shade {agg['mean_sort_ms']:.1f}/"
@@ -240,14 +266,86 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
         fired_s = ' '.join(f'{k}={v}' for k, v in sorted(fired.items())) \
             or 'none'
         out = injector.outstanding()
-        out_s = (' (' + ' '.join(f'{k}={v}' for k, v in sorted(out.items()))
-                 + ' never reached their seam)') if out else ''
+        out_s = (' (unfired: '
+                 + ' '.join(f'{k}={v}' for k, v in sorted(out.items()))
+                 + ' — counted in serve.faults_unfired)') if out else ''
+        unfired = sum(out.values())
         print_fn(f"-- faults (seed {fault_seed}, rate {fault_rate}, "
                  f"{len(fault_trace.events)} scheduled): fired {fired_s}"
-                 f"{out_s}; retries {agg['retries']}, "
+                 f"{out_s}; unfired {unfired}, retries {agg['retries']}, "
                  f"degraded ticks {agg['degraded_ticks']}, "
                  f"quarantined {_counter('serve.quarantined')}, "
                  f"shed arrivals {_counter('serve.shed')}")
+    return agg
+
+
+def _serve_fleet_path(scene, cfg, cam0, sessions, *, devices, slots, driver,
+                      viewers_per_scene, profile_every, injector,
+                      fault_trace, fault_rate, fault_seed, max_pending,
+                      checkpoint_dir, checkpoint_every, backend, arrivals,
+                      trace_out, metrics_out, print_fn) -> dict:
+    """The ``--devices N`` serving path: the elastic multi-device fleet
+    (``repro.serve.fleet``) with ``slots`` render slots per device."""
+    from repro.serve.fleet import serve_fleet
+    tracer = obs.Tracer() if trace_out else None
+    fleet, finished = serve_fleet(
+        scene, cfg, cam0, sessions, num_devices=devices,
+        slots_per_device=slots, driver=driver,
+        viewers_per_scene=viewers_per_scene, profile_every=profile_every,
+        ckpt_root=checkpoint_dir if checkpoint_every else None,
+        ckpt_every=checkpoint_every, max_pending=max_pending,
+        injector=injector, tracer=tracer)
+    if trace_out:
+        obs.write_trace(trace_out, tracer)
+        print_fn(f'-- trace: {len(tracer.events)} events -> {trace_out} '
+                 f'(load in https://ui.perfetto.dev)')
+    if metrics_out:
+        with open(metrics_out, 'w') as f:
+            f.write(fleet.metrics.to_json(indent=1))
+        print_fn(f'-- metrics: {len(fleet.metrics.names())} instruments -> '
+                 f'{metrics_out}')
+    summaries = [s.telemetry.summary() for s in finished]
+    agg = fleet.aggregate()
+    agg['ticks'] = fleet.tick
+    agg['mode'] = 'fleet'
+    agg['backend'] = backend
+    agg['viewers_per_scene'] = viewers_per_scene
+    agg['driver'] = driver
+    agg['arrivals'] = arrivals
+    agg['fault_rate'] = fault_rate if fault_trace is not None else 0.0
+    agg['faults_injected'] = sum(injector.fired_counts().values())
+    roll = tick_rollup(fleet.merged_tick_log(), warmup_ticks=1)
+    for key in ('p50_frame_ms', 'p95_frame_ms', 'host_ms', 'host_overlap'):
+        if key in roll:
+            agg[key] = roll[key]
+    print_fn(format_table(summaries))
+
+    def _counter(name: str) -> int:
+        # labelled counters register as 'name{k=v,...}': sum all series
+        return sum(fleet.metrics[key].value for key in fleet.metrics.names()
+                   if key == name or key.startswith(name + '{'))
+
+    print_fn(f"-- fleet ({backend}, {driver}): "
+             f"{agg['devices']} devices ({agg['alive_devices']} alive), "
+             f"{agg['sessions']} sessions, {agg['frames']} frames in "
+             f"{agg['ticks']} ticks, "
+             f"fleet {agg['fleet_fps']:.2f} fps/viewer (frame-weighted), "
+             f"mean hit rate {agg['mean_hit_rate']:.2f}, "
+             f"worst p99 {agg['worst_p99_ms']:.0f} ms, "
+             f"shed arrivals {agg['shed']}")
+    if injector.enabled:
+        fired = injector.fired_counts()
+        fired_s = ' '.join(f'{k}={v}' for k, v in sorted(fired.items())) \
+            or 'none'
+        out = injector.outstanding()
+        out_s = (' (unfired: '
+                 + ' '.join(f'{k}={v}' for k, v in sorted(out.items()))
+                 + ' — counted in serve.faults_unfired)') if out else ''
+        print_fn(f"-- faults (seed {fault_seed}, rate {fault_rate}, "
+                 f"{len(fault_trace.events)} scheduled): fired {fired_s}"
+                 f"{out_s}; unfired {sum(out.values())}, "
+                 f"devices lost {_counter('fleet.device_lost')}, "
+                 f"re-queued {_counter('fleet.requeued')}")
     return agg
 
 
@@ -329,6 +427,13 @@ def main(argv=None):
     ap.add_argument('--restore', action='store_true',
                     help='resume from the newest complete checkpoint in '
                          '--checkpoint-dir instead of starting cold')
+    ap.add_argument('--devices', type=int, default=1, metavar='N',
+                    help='serve through the elastic multi-device fleet: N '
+                         'scene-sharded workers with --slots slots each, a '
+                         'shared bounded admission queue and device-loss '
+                         'recovery (repro.serve.fleet; on CPU launch with '
+                         'XLA_FLAGS=--xla_force_host_platform_device_count'
+                         '=N for distinct devices)')
     ap.add_argument('--seed', type=int, default=0)
     args = ap.parse_args(argv)
     serve(args.viewers, args.frames, slots=args.slots, width=args.width,
@@ -345,7 +450,8 @@ def main(argv=None):
           fault_seed=args.fault_seed, watchdog=args.watchdog,
           max_pending=args.max_pending,
           checkpoint_dir=args.checkpoint_dir,
-          checkpoint_every=args.checkpoint_every, restore=args.restore)
+          checkpoint_every=args.checkpoint_every, restore=args.restore,
+          devices=args.devices)
 
 
 if __name__ == '__main__':

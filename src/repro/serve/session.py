@@ -242,6 +242,42 @@ class SessionManager:
         self.pending = waiting
         return admitted
 
+    def vacate(self, slot: int) -> ViewerSession:
+        """Remove the session occupying ``slot`` WITHOUT marking it finished
+        — the fleet's migration seam (the viewer continues on another
+        device).  The slot's device state is left as-is; the next admit
+        into it cold-starts it."""
+        with self._lock:
+            sess = self.slot_session[slot]
+            if sess is None:
+                raise RuntimeError(f'vacate: slot {slot} is empty')
+            self.slot_session[slot] = None
+            return sess
+
+    def place(self, slot: int, sess: ViewerSession,
+              payload: Optional[dict] = None,
+              admitted_tick: Optional[int] = None) -> None:
+        """Direct placement into a free slot, bypassing the FIFO queue —
+        the fleet's migration / device-loss recovery seam.  With
+        ``payload`` the stepper restores an extracted viewer lane
+        (warm scene-carry or cold, per the payload — see
+        ``BatchedStepper.extract_viewer``); without one, a plain cold
+        admit.  ``admitted_tick`` preserves the original admission tick so
+        a paced session keeps its frame cadence across the move (defaults
+        to the current tick, matching a fresh admit)."""
+        with self._lock:
+            occupant = self.slot_session[slot]
+            if occupant is not None:
+                raise RuntimeError(f'place: slot {slot} occupied by sid '
+                                   f'{occupant.sid}')
+            sess.telemetry.admitted_tick = (
+                self.tick if admitted_tick is None else int(admitted_tick))
+            self.slot_session[slot] = sess
+            if payload is None:
+                self.stepper.admit(slot)
+            else:
+                self.stepper.restore_viewer(slot, payload)
+
     def evict_finished(self) -> list[int]:
         with self._lock:
             return self._evict_finished_locked()

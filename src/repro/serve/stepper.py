@@ -918,6 +918,86 @@ class BatchedStepper:
                                             np.int64)
         self._pending_sort = set(int(i) for i in meta['pending_sort'])
 
+    # -- viewer extraction / injection (fleet migration) ---------------------
+
+    def extract_viewer(self, slot: int, with_scene: bool = False) -> dict:
+        """Snapshot one viewer's lane for re-admission on another stepper.
+
+        The payload always carries the ``ViewerPrivate`` lane and the slot's
+        last camera (pose-prediction continuity across the move).  With
+        ``with_scene`` (private mode only) it additionally carries the slot's
+        whole ``SceneShared`` block plus the host pool mirrors for it — a
+        *scene-carry* move that keeps the radiance cache warm.  Scene-carry
+        payloads are only valid for an **aligned** restore (same slot index
+        on a stepper at the same ``global_tick``): ``pool_owner`` stores slot
+        ids and ``pool_tick`` stores absolute ticks, and neither is
+        re-encoded here.  Cross-slot moves must restore cold
+        (``shared=None``) and eat the documented sort-on-admit staleness."""
+        scene_i = int(self._scene_of[slot])
+        payload = {
+            'priv': jax.tree.map(lambda x: np.asarray(x[slot]), self.priv),
+            'cam': jax.tree.map(np.asarray, self._slot_cams[slot]),
+            'frames_since_due': int(self._frames_since_due[slot]),
+            'pending_sort': slot in self._pending_sort,
+            'shared': None,
+            'pool_rows': None,
+        }
+        if with_scene:
+            if self.viewers_per_scene != 1:
+                raise ValueError('scene-carry extraction needs a private '
+                                 'scene block (viewers_per_scene == 1)')
+            payload['shared'] = jax.tree.map(
+                lambda x: np.asarray(x[scene_i]), self.shared)
+            payload['pool_rows'] = {
+                'pool_cell': self._pool_cell[scene_i].copy(),
+                'pool_tick': self._pool_tick[scene_i].copy(),
+                'pool_owner': self._pool_owner[scene_i].copy(),
+                'slot_pool': int(self._slot_pool[slot]),
+                'refs': self._refs[scene_i].copy(),
+            }
+        return payload
+
+    def restore_viewer(self, slot: int, payload: dict) -> None:
+        """Re-admit an ``extract_viewer`` payload into ``slot``.
+
+        Scene-carry payloads reuse the jitted private-mode admit scatter
+        (lane shapes match the cold templates, so no recompilation) and
+        restore the pool mirrors — bit-identical continuation when the
+        alignment contract above holds.  Cold payloads go through the normal
+        ``admit`` (fresh scene, sort-on-admit queued) and then overwrite
+        just the private lane, so the migrated viewer resumes its pose
+        trajectory against a cold cache: at most one sort-window of sharing
+        staleness, never a wrong image."""
+        scene_i = int(self._scene_of[slot])
+        priv_lane = jax.tree.map(jnp.asarray, payload['priv'])
+        if payload.get('shared') is not None:
+            if self.viewers_per_scene != 1:
+                raise ValueError('scene-carry restore needs a private '
+                                 'scene block (viewers_per_scene == 1)')
+            shared_lane = jax.tree.map(jnp.asarray, payload['shared'])
+            self.shared, self.priv = self._admit_scene(
+                self.shared, self.priv, shared_lane, priv_lane,
+                jnp.int32(scene_i), jnp.int32(slot))
+            rows = payload['pool_rows']
+            self._pool_cell[scene_i] = np.asarray(rows['pool_cell'],
+                                                  np.int64)
+            self._pool_tick[scene_i] = np.asarray(rows['pool_tick'],
+                                                  np.int64)
+            self._pool_owner[scene_i] = np.asarray(rows['pool_owner'],
+                                                   np.int64)
+            self._slot_pool[slot] = int(rows['slot_pool'])
+            self._refs[scene_i] = np.asarray(rows['refs'], np.int64)
+            self._frames_since_due[slot] = int(payload['frames_since_due'])
+            if payload['pending_sort']:
+                self._pending_sort.add(slot)
+            else:
+                self._pending_sort.discard(slot)
+        else:
+            self.admit(slot)
+            self.priv = self._admit_priv(self.priv, priv_lane,
+                                         jnp.int32(slot))
+        self._slot_cams[slot] = jax.tree.map(jnp.asarray, payload['cam'])
+
 
 class SequentialStepper:
     """Reference engine: one single-viewer jitted step per active slot,

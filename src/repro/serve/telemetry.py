@@ -56,6 +56,18 @@ class SessionTelemetry:
     def frames(self) -> int:
         return len(self.latencies_s)
 
+    def rollback(self, frames: int) -> None:
+        """Truncate to the first ``frames`` observations — the fleet's
+        device-loss recovery rolls sessions back to a checkpoint cursor and
+        *replays* the tail, so without truncation every replayed frame
+        would be double-counted.  Also clears ``finished_tick``: a rolled-
+        back session is live again."""
+        frames = max(0, int(frames))
+        for name in ('latencies_s', 'hit_rates', 'saved_fracs',
+                     'sorted_flags', 'sort_mss', 'shade_mss'):
+            del getattr(self, name)[frames:]
+        self.finished_tick = -1
+
     def summary(self) -> dict:
         lat = np.asarray(self.latencies_s, np.float64)
         wall = float(lat.sum())
@@ -111,8 +123,8 @@ def aggregate(summaries: list[dict]) -> dict:
 
     ``fleet_fps`` is the frame-weighted per-viewer rate (each session's fps
     weighted by the frames it rendered — a 2-frame session no longer counts
-    as much as a 200-frame one); ``mean_fps`` keeps the legacy unweighted
-    session mean for continuity (deprecated — see README "Observability").
+    as much as a 200-frame one).  The legacy unweighted ``mean_fps`` field
+    is gone; ``fleet_fps`` is the standard.
     """
     if not summaries:
         return {'sessions': 0, 'frames': 0}
@@ -126,7 +138,6 @@ def aggregate(summaries: list[dict]) -> dict:
         'sessions': len(summaries),
         'frames': frames,
         'fleet_fps': fleet_fps,
-        'mean_fps': float(np.mean([s['fps'] for s in summaries])),
         'mean_hit_rate': float(np.mean([s['hit_rate'] for s in summaries])),
         'worst_p99_ms': float(max(s['p99_ms'] for s in summaries)),
         'mean_sort_ms': float(np.mean([s.get('sort_ms', 0.0)

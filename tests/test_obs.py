@@ -344,8 +344,8 @@ def test_aggregate_fleet_fps_is_frame_weighted():
     agg = aggregate([_summary(10.0, 2), _summary(100.0, 198)])
     assert agg['fleet_fps'] == pytest.approx(np.average([10.0, 100.0],
                                                         weights=[2, 198]))
-    # the deprecated unweighted mean is preserved for continuity
-    assert agg['mean_fps'] == pytest.approx(55.0)
+    # the deprecated unweighted mean_fps field is gone for good
+    assert 'mean_fps' not in agg
     # zero-frame / non-finite sessions cannot poison the fleet rate
     agg = aggregate([_summary(float('inf'), 0), _summary(50.0, 10)])
     assert agg['fleet_fps'] == pytest.approx(50.0)
