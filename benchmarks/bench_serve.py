@@ -25,6 +25,13 @@ of concurrent viewers grows, across three axes:
   dispatch).  Threaded rows gate ``host_overlap > 0`` — host planning must
   actually hide behind the device step — and report the per-frame p50/p95
   latency an open-loop client sees;
+* **dropless allocation** — paced (pace=2) rows priced two ways: a static
+  one-slot-per-viewer baseline on worst-case per-scene pools vs the same
+  doubled population **oversubscribed** into half the slots on power-of-two
+  capacity buckets that track live refcounts.  The run gates (and CI
+  re-asserts) that the oversubscribed row admits strictly more viewers per
+  allocated state byte, and that dynamic pools allocate strictly less than
+  the static reservation (``state_alloc_bytes`` < ``state_reserved_bytes``);
 * **fault_rate** — degraded-mode rows: the threaded driver under a seeded
   fault trace (``repro.serve.faults``: transient dispatch failures, worker
   deaths, poisoned frames) reports what recovery costs — fps_per_viewer and
@@ -88,22 +95,36 @@ class _Cell:
 
     def __init__(self, scene, viewers: int, frames: int, mode: str,
                  backend: str, vps: int = 1, stagger: int = 0,
-                 driver: str = 'sync', fault_rate: float = 0.0):
+                 driver: str = 'sync', fault_rate: float = 0.0,
+                 pace: int = 1, oversub: bool = False,
+                 slots: int | None = None, pool_size: int | None = None,
+                 sess_vps: int | None = None):
         self.viewers, self.frames = viewers, frames
         self.mode, self.backend = mode, backend
         self.vps, self.stagger = vps, stagger
         self.driver = driver
         self.fault_rate = fault_rate
+        # dropless-allocation axis: paced viewers (pace >= 2) optionally
+        # oversubscribed into fewer physical slots than viewers;
+        # ``pool_size`` forces the static worst-case per-scene pool the
+        # capacity buckets replaced (the comparison baseline); ``sess_vps``
+        # overrides the session-side scene grouping when the slot count
+        # diverges from the viewer count
+        self.pace, self.oversub = pace, oversub
+        self.slots = viewers if slots is None else slots
+        self.pool_size = pool_size
+        self.sess_vps = vps if sess_vps is None else sess_vps
         cfg = LuminaConfig(capacity=CAPACITY, window=WINDOW, backend=backend)
         profile = PROFILE_EVERY if backend == 'pallas' else 0
         cam0 = build_sessions(1, 1, width=WIDTH)[0].cams[0]
         if mode == 'sequential':
-            self.stepper = SequentialStepper(scene, cfg, cam0, viewers,
+            self.stepper = SequentialStepper(scene, cfg, cam0, self.slots,
                                              profile_every=profile)
         else:
-            self.stepper = BatchedStepper(scene, cfg, cam0, viewers,
+            self.stepper = BatchedStepper(scene, cfg, cam0, self.slots,
                                           profile_every=profile,
-                                          viewers_per_scene=vps)
+                                          viewers_per_scene=vps,
+                                          pool_size=pool_size)
         self.best = None
 
     def run_once(self) -> None:
@@ -112,7 +133,9 @@ class _Cell:
         self.stepper.reset()
         sessions = build_sessions(self.viewers, self.frames, width=WIDTH,
                                   stagger=self.stagger,
-                                  viewers_per_scene=self.vps)
+                                  viewers_per_scene=self.sess_vps,
+                                  paces=([self.pace] * self.viewers
+                                         if self.pace > 1 else None))
         injector = serve_faults.NULL
         if self.fault_rate:
             # the same seeded trace every repetition: degraded rows time
@@ -121,9 +144,10 @@ class _Cell:
             injector = serve_faults.FaultInjector(serve_faults.make_trace(
                 self.FAULT_KINDS, horizon, seed=0, rate=self.fault_rate,
                 slots=self.viewers))
-        mgr = SessionManager(self.stepper, self.viewers, injector=injector,
+        mgr = SessionManager(self.stepper, self.slots, injector=injector,
                              watchdog_s=(self.FAULT_WATCHDOG_S
-                                         if self.fault_rate else None))
+                                         if self.fault_rate else None),
+                             oversubscribe=self.oversub)
         for s in sessions:
             mgr.submit(s)
         # warm-up tick compiles the step on the first repetition (and
@@ -161,7 +185,7 @@ class _Cell:
         fps = rendered / wall if wall > 0 else float('inf')
         cohort_bound = -(-self.viewers // WINDOW)
         if self.mode == 'batched' and self.stagger == 0 \
-                and not self.fault_rate:
+                and not self.fault_rate and self.pace == 1:
             # steady-state bound: sort-on-admit is outside the scheduled
             # cohort by design, so staggered-arrival rows (admits landing
             # after the warm-up tick) are exempt — as are faulted rows,
@@ -173,12 +197,16 @@ class _Cell:
                 f"(bound ceil(S/window) = {cohort_bound})")
         if self.mode == 'batched' and self.vps > 1 and self.stagger == 0:
             # co-located viewers of one scene must collapse to one live
-            # sort buffer per scene — the pool holds O(distinct cells)
-            scenes = -(-self.viewers // self.vps)
-            assert roll['max_sort_pool_live'] <= scenes, (
+            # sort buffer per scene — the pool holds O(distinct cells).
+            # Oversubscribed slots interleave residue classes at offset
+            # cursors, so each scene may hold up to `pace` live entries
+            # (one per class), still independent of the viewer count.
+            scenes = -(-self.slots // self.vps)
+            limit = scenes * (self.pace if self.oversub else 1)
+            assert roll['max_sort_pool_live'] <= limit, (
                 f"sort pool regressed: {roll['max_sort_pool_live']} live "
                 f"buffers for {self.viewers} co-located viewers over "
-                f"{scenes} scene(s)")
+                f"{scenes} scene(s) (bound {limit})")
         if self.driver == 'threaded' and not self.fault_rate:
             # the async host pipeline must actually hide host planning
             # behind the device step: zero overlap means admission/eviction
@@ -199,6 +227,12 @@ class _Cell:
             'faults_injected': stats['faults_injected'],
             'degraded_ticks': stats['degraded_ticks'],
             'retries': stats['retries'],
+            'pace': self.pace,
+            'oversub': int(self.oversub),
+            'slots': self.slots,
+            'pool': ('dynamic' if (self.mode == 'batched' and self.vps > 1
+                                   and self.pool_size is None)
+                     else 'static'),
             'window': WINDOW,
             'frames': rendered,
             'wall_s': wall,
@@ -217,9 +251,10 @@ class _Cell:
         # state_metrics docstring)
         for key in ('last_occupancy', 'max_sort_pool_live',
                     'sort_pool_bytes', 'sort_pool_alloc_bytes',
-                    'cache_bytes', 'state_bytes', 'state_alloc_bytes',
-                    'p50_frame_ms', 'p95_frame_ms', 'host_ms',
-                    'host_overlap'):
+                    'sort_pool_reserved_bytes', 'cache_bytes',
+                    'state_bytes', 'state_alloc_bytes',
+                    'state_reserved_bytes', 'p50_frame_ms', 'p95_frame_ms',
+                    'host_ms', 'host_overlap'):
             row[key] = roll.get(key)
         return row
 
@@ -312,6 +347,10 @@ class _FleetCell:
             'faults_injected': stats['faults_injected'],
             'degraded_ticks': 0,
             'retries': 0,
+            'pace': 1,
+            'oversub': 0,
+            'slots': self.slots * self.devices,
+            'pool': 'static',
             'window': WINDOW,
             'frames': rendered,
             'wall_s': wall,
@@ -327,9 +366,10 @@ class _FleetCell:
         }
         for key in ('last_occupancy', 'max_sort_pool_live',
                     'sort_pool_bytes', 'sort_pool_alloc_bytes',
-                    'cache_bytes', 'state_bytes', 'state_alloc_bytes',
-                    'p50_frame_ms', 'p95_frame_ms', 'host_ms',
-                    'host_overlap'):
+                    'sort_pool_reserved_bytes', 'cache_bytes',
+                    'state_bytes', 'state_alloc_bytes',
+                    'state_reserved_bytes', 'p50_frame_ms', 'p95_frame_ms',
+                    'host_ms', 'host_overlap'):
             row[key] = roll.get(key)
         # the fleet axis proper (identity key + degraded-mode accounting;
         # history.py matches `devices`, older baselines default it to 1)
@@ -367,6 +407,20 @@ def run(quick: bool = False, reps: int = 4):
                        vps=shared_at, stagger=2))
     cells.append(_Cell(scene, shared_at, frames, 'batched', 'reference',
                        vps=1, stagger=2))
+    # the dropless-allocation axis: one doubled, half-rate (pace 2) viewer
+    # population served two ways —
+    #  (A) static: one slot per viewer, worst-case per-scene pools
+    #      (pool_size=vps, the allocation scheme capacity buckets replaced)
+    #  (B) dropless: oversubscribed into HALF the slots (co-residents
+    #      interleave on alternating ticks) on capacity-bucketed pools
+    # the run gates strictly more admitted viewers per allocated byte on B
+    over_v = 2 * shared_at
+    cells.append(_Cell(scene, over_v, frames, 'batched', 'reference',
+                       vps=shared_at, stagger=0, pace=2,
+                       pool_size=shared_at))
+    cells.append(_Cell(scene, over_v, frames, 'batched', 'reference',
+                       vps=shared_at, stagger=0, pace=2, oversub=True,
+                       slots=shared_at, sess_vps=over_v))
     # the fault_rate axis: degraded-mode cost on the threaded driver at the
     # largest viewer count (paired with the clean threaded row above)
     for fault_rate in (0.1, 0.3):
@@ -401,6 +455,30 @@ def run(quick: bool = False, reps: int = 4):
                 f"{r['hit_rate']:.3f} (shared) vs "
                 f"{base[0]['hit_rate'] if base else float('nan'):.3f} "
                 f"(private) at {r['viewers']} viewers")
+    # dropless gates (CI re-asserts both from BENCH_serve.json):
+    #  1. capacity buckets must track live work — every dynamic co-located
+    #     row allocates strictly less than its static worst-case reservation
+    for r in rows:
+        if r.get('pool') == 'dynamic' and r['stagger'] == 0 \
+                and not r.get('oversub'):
+            assert r['state_alloc_bytes'] < r['state_reserved_bytes'], (
+                f"dropless allocation regressed: dynamic pool allocated "
+                f"{r['state_alloc_bytes']} B >= the {r['state_reserved_bytes']}"
+                f" B static reservation at {r['viewers']} viewers")
+    #  2. the paced oversubscribed row must admit strictly more viewers per
+    #     allocated byte than the one-slot-per-viewer static baseline
+    over = [r for r in rows if r.get('oversub')]
+    base = [r for r in rows
+            if r.get('pace', 1) > 1 and not r.get('oversub')]
+    assert over and base, 'dropless comparison rows missing'
+    o, b = over[0], base[0]
+    density_o = o['viewers'] / o['state_alloc_bytes']
+    density_b = b['viewers'] / b['state_alloc_bytes']
+    assert density_o > density_b, (
+        f"oversubscription lost its memory edge: "
+        f"{density_o:.3e} viewers/byte (oversubscribed, "
+        f"{o['state_alloc_bytes']} B) vs {density_b:.3e} (static, "
+        f"{b['state_alloc_bytes']} B) at {o['viewers']} viewers")
     return rows
 
 

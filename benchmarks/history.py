@@ -11,8 +11,8 @@ render tick is caught by the build, not by the next person rereading BENCH
 JSON by hand.
 
 Rows are matched by identity (viewers / mode / backend / viewers_per_scene
-/ driver / stagger / fault_rate / devices for serve; metric name for
-kernel) and only the intersection is gated — a missing key on either side
+/ driver / stagger / fault_rate / devices / pace / oversub for serve;
+metric name for kernel) and only the intersection is gated — a missing key on either side
 takes its default (``devices`` defaults to 1), so single-device baselines
 recorded before the fleet axis existed still compare — a quick CI run gates the viewer counts it measures
 against the same rows of the full committed baseline.  Tolerance bands are
@@ -26,6 +26,9 @@ quick runs render fewer frames) and tight for structural ones:
                      above 10% of it
     hit_rate         may drop 10% relative (cache decisions are
                      deterministic; this is a structural metric)
+    state_alloc_bytes  may grow at most 25% over baseline (a hard ceiling
+                     on dropless-allocation creep: buckets that stop
+                     shrinking double the footprint, not +25%)
     chunk_savings_%  must stay positive and above 10% of baseline
 
 Usage::
@@ -51,7 +54,8 @@ SUITES = ('serve', 'kernel')
 ROW_KEYS = {
     'serve': (('viewers', None), ('mode', None), ('backend', None),
               ('viewers_per_scene', 1), ('driver', 'sync'), ('stagger', 0),
-              ('fault_rate', 0.0), ('devices', 1)),
+              ('fault_rate', 0.0), ('devices', 1), ('pace', 1),
+              ('oversub', 0)),
     'kernel': (('metric', None),),
 }
 
@@ -85,6 +89,11 @@ BANDS = {
         Band('host_overlap', higher_is_better=True, rel_tol=0.9,
              abs_floor=0.0),
         Band('hit_rate', higher_is_better=True, rel_tol=0.1),
+        # allocated state bytes are deterministic (capacity buckets over a
+        # deterministic schedule), but quick CI runs render fewer frames
+        # and may peak at one bucket below the full run: gate growth with
+        # a modest band — a pool that stops shrinking doubles, not +25%
+        Band('state_alloc_bytes', higher_is_better=False, rel_tol=0.25),
     ),
     'kernel': (
         Band('chunk_savings_%', higher_is_better=True, rel_tol=0.9,

@@ -178,6 +178,19 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def manifest_extra(self, step: int) -> Optional[dict]:
+        """The ``extra`` metadata a step was saved with, WITHOUT loading any
+        array shards — restore paths peek this first to build a shape
+        template matching the snapshot's geometry (e.g. a serving stepper's
+        dynamic pool capacity).  Returns None when the manifest is missing
+        or unreadable (caller falls back a step, as ``restore_latest``
+        does)."""
+        try:
+            with open(self.dir / f'step_{step:010d}' / 'manifest.json') as f:
+                return json.load(f).get('extra', {})
+        except (OSError, ValueError):
+            return None
+
     # -- save ---------------------------------------------------------------
     def save(self, tree: Any, *, step: int, extra: Optional[dict] = None,
              blocking: bool = False) -> None:

@@ -66,6 +66,10 @@ class TickPlan:
     sort_plan : the stepper's precomputed pose-cell sort plan
             (``BatchedStepper.plan_step``), or None for steppers without a
             host planning phase
+    switches : ``(slot, sid)`` lane swaps for oversubscribed slots — the
+            named (stashed) co-resident session becomes the slot's lane
+            occupant before this tick renders; the outgoing occupant is
+            stashed, or retired if it already finished
     """
 
     tick: int
@@ -73,6 +77,7 @@ class TickPlan:
     admit: tuple
     cams: dict
     sort_plan: object = None
+    switches: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)

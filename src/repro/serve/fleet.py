@@ -362,7 +362,9 @@ class FleetManager:
             return
         vps = max(getattr(w.mgr.stepper, 'viewers_per_scene', 1)
                   for w in self.workers)
-        loads = {w.device_id: len(w.mgr.active_slots()) + len(w.mgr.pending)
+        # resident_count (not occupied-slot count): an oversubscribed slot
+        # carries several paced viewers and weighs as all of them
+        loads = {w.device_id: w.mgr.resident_count() + len(w.mgr.pending)
                  for w in self.alive_workers()}
         routes = plan_route(
             tuple((s.sid, s.scene_id) for s in arrived), loads, self.alive,
@@ -433,6 +435,10 @@ class FleetManager:
         if slot is None:
             raise ValueError(f'migrate: sid {sid} is not slotted on '
                              f'device {src}')
+        if getattr(sw.mgr, '_coresidents', {}).get(slot):
+            raise ValueError(
+                f'migrate: slot {slot} on device {src} is oversubscribed — '
+                f'stashed co-residents cannot follow a single-viewer move')
         free = dw.mgr.free_slots()
         if not free:
             sess = sw.mgr.vacate(slot)
@@ -543,6 +549,9 @@ class FleetManager:
             for sess in w.mgr.slot_session:
                 if sess is not None:
                     sess.telemetry.rollback(sess.cursor)
+            for lst in w.mgr._coresidents.values():
+                for sess in lst:
+                    sess.telemetry.rollback(sess.cursor)
             for sess in w.mgr.pending:
                 sess.cursor = 0
                 sess.telemetry.rollback(0)
@@ -550,9 +559,9 @@ class FleetManager:
             w.mgr.tick_log = [t for t in w.mgr.tick_log
                               if t['tick'] < restore_tick]
 
-        # the victim's snapshot, read host-side
-        template, _ = vw.mgr.stepper.state_dict()
-        out = vw.ckpt.restore_latest(template)
+        # the victim's snapshot, read host-side (per-step shape template:
+        # the snapshot's pool capacity is part of its geometry)
+        out = vw.mgr._restore_arrays(vw.ckpt)
         if out is None:
             raise RuntimeError(f'device {vw.device_id}: checkpoint '
                                f'vanished between latest() and restore')
@@ -595,6 +604,20 @@ class FleetManager:
             self.metrics.counter('fleet.migrations',
                                  'viewer moves between devices',
                                  kind='loss_spilled').inc()
+        # stashed co-residents of the victim's oversubscribed slots restore
+        # cold onto the fleet queue with their cursors preserved — their
+        # lane context died with the device, but not their progress
+        for lst in meta.get('coresidents', {}).values():
+            for m in lst:
+                sess = self.sessions[m['sid']]
+                sess.cursor = int(m['cursor'])
+                sess.telemetry.rollback(sess.cursor)
+                sess.telemetry.admitted_tick = -1
+                self.home.pop(m['sid'], None)
+                requeue.append(sess)
+                self.metrics.counter('fleet.migrations',
+                                     'viewer moves between devices',
+                                     kind='loss_spilled').inc()
         for sid in meta['pending']:
             sess = self.sessions[sid]
             sess.cursor = 0
@@ -608,6 +631,7 @@ class FleetManager:
             self.orphan_finished.append(sess)
         # the victim's live (post-snapshot) state is dead with the device
         vw.mgr.slot_session = [None] * vw.mgr.slots
+        vw.mgr._coresidents = {}
         vw.mgr.pending.clear()
         vw.mgr.finished = []
         vw.mgr.tick_log = [t for t in vw.mgr.tick_log
@@ -623,6 +647,8 @@ class FleetManager:
         placed |= {s.sid for s in self.shed}
         for w in survivors:
             placed |= {s.sid for s in w.mgr.slot_session if s is not None}
+            placed |= {s.sid for lst in w.mgr._coresidents.values()
+                       for s in lst}
             placed |= {s.sid for s in w.mgr.pending}
             placed |= {s.sid for s in w.mgr.finished}
         for sid in sorted(self.sessions):

@@ -67,7 +67,7 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
           backend: str = 'reference', profile_every: int = 0,
           viewers_per_scene: int = 1, arrivals: str = 'stagger',
           rate: float = 0.5, burst: int = 4, gap: int = 8, jitter: int = 0,
-          pace: int = 1, pace_jitter: int = 0,
+          pace: int = 1, pace_jitter: int = 0, oversubscribe: bool = False,
           driver: str = 'sync', trace_out: str | None = None,
           metrics_out: str | None = None,
           faults: str = '', fault_rate: float = 0.05, fault_seed: int = 0,
@@ -86,6 +86,9 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     ``seed`` — see ``repro.serve.traffic``) and ``driver`` the host loop:
     'sync' (virtual clock, deterministic replay) or 'threaded' (host
     admission/planning double-buffered against the device step).
+    ``oversubscribe`` lets paced viewers whose render ticks provably never
+    collide share one physical slot (dropless allocation; batched engine
+    with ``viewers_per_scene`` >= 2 and ``pace`` >= 2 only).
 
     ``trace_out`` writes the run's span trace as Chrome trace-event JSON
     (open in https://ui.perfetto.dev — host / host-worker / device tracks);
@@ -118,6 +121,13 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     if sequential and viewers_per_scene > 1:
         raise SystemExit('--viewers-per-scene > 1 needs the batched engine '
                          '(the sequential baseline is fully private state)')
+    if oversubscribe and (sequential or viewers_per_scene < 2):
+        raise SystemExit('--oversubscribe needs the batched engine with '
+                         '--viewers-per-scene >= 2 (co-residents interleave '
+                         'through a shared scene block)')
+    if oversubscribe and pace < 2:
+        raise SystemExit('--oversubscribe needs --pace >= 2: only paced '
+                         'viewers have the off ticks co-residents render in')
     slots = slots or min(viewers, 8)
     # scene blocks are static: round slots up to whole blocks
     slots = -(-slots // viewers_per_scene) * viewers_per_scene
@@ -147,6 +157,9 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     if devices > 1:
         if sequential:
             raise SystemExit('--devices > 1 needs the batched engine')
+        if oversubscribe:
+            raise SystemExit('--oversubscribe is a single-device feature '
+                             '(fleet workers place one viewer per slot)')
         return _serve_fleet_path(
             scene, cfg, cam0, sessions, devices=devices, slots=slots,
             driver=driver, viewers_per_scene=viewers_per_scene,
@@ -168,7 +181,8 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
 
     tracer = obs.Tracer() if trace_out else None
     mgr = SessionManager(stepper, slots, tracer=tracer, injector=injector,
-                         watchdog_s=watchdog, max_pending=max_pending)
+                         watchdog_s=watchdog, max_pending=max_pending,
+                         oversubscribe=oversubscribe)
 
     ckpt = None
     restored = None
@@ -222,14 +236,17 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     agg['faults_injected'] = sum(injector.fired_counts().values())
     agg['degraded_ticks'] = _counter('serve.degraded_ticks')
     agg['retries'] = _counter('serve.retries')
+    agg['oversubscribed'] = _counter('serve.oversubscribed')
+    agg['pool_resizes'] = _counter('pool.resizes')
     agg['mean_sorts_per_tick'] = roll['mean_sorts_per_tick']
     agg['max_sorts_per_tick'] = roll['max_sorts_per_tick']
     agg['tick_sort_ms'] = roll['mean_sort_ms']
     agg['tick_shade_ms'] = roll['mean_shade_ms']
     agg['kernel_ms'] = roll['kernel_ms']
     for key in ('last_occupancy', 'max_sort_pool_live', 'sort_pool_bytes',
-                'sort_pool_alloc_bytes', 'cache_bytes', 'state_bytes',
-                'state_alloc_bytes', 'p50_frame_ms', 'p95_frame_ms',
+                'sort_pool_alloc_bytes', 'sort_pool_reserved_bytes',
+                'cache_bytes', 'state_bytes', 'state_alloc_bytes',
+                'state_reserved_bytes', 'p50_frame_ms', 'p95_frame_ms',
                 'host_ms', 'host_overlap'):
         if key in roll:
             agg[key] = roll[key]
@@ -250,7 +267,9 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
                  f"{agg['state_bytes'] / 1e6:.1f} MB live state "
                  f"(cache {agg['cache_bytes'] / 1e6:.1f} MB + sort pool "
                  f"{agg['sort_pool_bytes'] / 1e6:.1f} MB; "
-                 f"{agg['state_alloc_bytes'] / 1e6:.1f} MB allocated)"
+                 f"{agg['state_alloc_bytes'] / 1e6:.1f} MB allocated, "
+                 f"{agg.get('state_reserved_bytes', 0) / 1e6:.1f} MB static "
+                 f"reservation)"
                  f"{occ_s}")
     if roll['kernel_ms']:
         parts = '  '.join(f'{k} {v:.1f}' for k, v in roll['kernel_ms'].items())
@@ -394,6 +413,10 @@ def main(argv=None):
     ap.add_argument('--pace-jitter', type=int, default=0,
                     help='mix client rates: pace drawn from '
                          '[pace, pace + jitter] per viewer')
+    ap.add_argument('--oversubscribe', action='store_true',
+                    help='interleave paced viewers whose render ticks '
+                         'provably never collide through one physical slot '
+                         '(needs --viewers-per-scene >= 2 and --pace >= 2)')
     ap.add_argument('--driver', choices=('sync', 'threaded'), default='sync',
                     help='host loop: sync virtual clock (deterministic '
                          'replay) or threaded (admission/eviction/pose-cell '
@@ -444,7 +467,8 @@ def main(argv=None):
           viewers_per_scene=args.viewers_per_scene,
           arrivals=args.arrivals, rate=args.rate, burst=args.burst,
           gap=args.gap, jitter=args.jitter, pace=args.pace,
-          pace_jitter=args.pace_jitter, driver=args.driver,
+          pace_jitter=args.pace_jitter, oversubscribe=args.oversubscribe,
+          driver=args.driver,
           trace_out=args.trace_out, metrics_out=args.metrics_out,
           faults=args.faults, fault_rate=args.fault_rate,
           fault_seed=args.fault_seed, watchdog=args.watchdog,

@@ -33,11 +33,21 @@ device step).
 ``p`` ticks (open-loop clients slower than the tick clock, see
 ``repro.serve.traffic``); its slot stays occupied on off ticks but renders
 nothing.  ``pace = 1`` (the default) is the legacy every-tick behavior.
+
+**Slot oversubscription** (``oversubscribe=True``, shared-scene steppers
+only): paced sessions whose render ticks provably never collide — admission
+requires ``(tick - admitted_tick_r) % gcd(pace_r, pace_new) != 0`` against
+every current resident, which pins the newcomer to a disjoint residue class
+forever — interleave in ONE physical slot.  The lane's occupant renders;
+co-residents are parked in the stepper's stash (``stash_lane``) and swapped
+in on their due ticks (``TickPlan.switches``).  A half-rate pace-2 pair
+thus serves two viewers from one slot's worth of device state.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 import threading
 import time
 import warnings
@@ -113,7 +123,8 @@ class SessionManager:
     def __init__(self, stepper, slots: int, tracer=None,
                  metrics: Optional[obs_metrics.Registry] = None,
                  injector=None, watchdog_s: Optional[float] = None,
-                 max_pending: Optional[int] = None):
+                 max_pending: Optional[int] = None,
+                 oversubscribe: bool = False):
         self.stepper = stepper
         self.slots = slots
         # Observability (repro.obs): a span tracer (NULL no-op by default)
@@ -142,6 +153,19 @@ class SessionManager:
         self._ckpt_extra: Optional[dict] = None
         self.viewers_per_scene = getattr(stepper, 'viewers_per_scene', 1)
         self.num_scenes = max(1, slots // self.viewers_per_scene)
+        # Slot oversubscription needs the stepper's lane stash AND a shared
+        # scene block (a private-mode scene is one pool-of-one per slot —
+        # interleaving two viewers through it would thrash the cache the
+        # block exists to keep warm).
+        self.oversubscribe = bool(
+            oversubscribe and hasattr(stepper, 'stash_lane')
+            and self.viewers_per_scene > 1)
+        if oversubscribe and not self.oversubscribe:
+            raise ValueError('oversubscribe requires a shared-scene stepper '
+                             '(viewers_per_scene > 1) with a lane stash')
+        # stashed co-resident sessions per slot (the lane's occupant stays
+        # in slot_session; everyone else parks here + in the stepper stash)
+        self._coresidents: dict[int, list[ViewerSession]] = {}
         self.slot_session: list[Optional[ViewerSession]] = [None] * slots
         self.pending: deque[ViewerSession] = deque()
         self.finished: list[ViewerSession] = []
@@ -197,6 +221,13 @@ class SessionManager:
     def active_slots(self) -> list[int]:
         return [i for i, s in enumerate(self.slot_session) if s is not None]
 
+    def resident_count(self) -> int:
+        """Sessions currently holding serving state: lane occupants plus
+        stashed co-residents.  The fleet's load figure — an oversubscribed
+        worker is carrying more viewers than its occupied slot count."""
+        return (sum(1 for s in self.slot_session if s is not None)
+                + sum(len(v) for v in self._coresidents.values()))
+
     def _scene_block(self, scene_id: int) -> range:
         """Slot range of a session's scene block (scene ids beyond the
         stepper's scene count wrap — the block is a cache domain, not a
@@ -251,7 +282,11 @@ class SessionManager:
             sess = self.slot_session[slot]
             if sess is None:
                 raise RuntimeError(f'vacate: slot {slot} is empty')
+            if self._coresidents.get(slot):
+                raise RuntimeError(f'vacate: slot {slot} has stashed '
+                                   'co-residents (drain them first)')
             self.slot_session[slot] = None
+            self._release_slot(slot)
             return sess
 
     def place(self, slot: int, sess: ViewerSession,
@@ -282,13 +317,34 @@ class SessionManager:
         with self._lock:
             return self._evict_finished_locked()
 
+    def _release_slot(self, slot: int) -> None:
+        """Tell the stepper the slot no longer hosts a viewer, so a dynamic
+        pool can stop protecting (and eventually reclaim) its sort entry."""
+        release = getattr(self.stepper, 'release', None)
+        if release is not None:
+            release(slot)
+
     def _evict_finished_locked(self) -> list[int]:
         evicted = []
         for slot, sess in enumerate(self.slot_session):
             if sess is not None and sess.done:
+                co = self._coresidents.get(slot)
+                if co:
+                    # promote a stashed co-resident instead of freeing the
+                    # slot (cursors only advance while active, so stashed
+                    # sessions are never done themselves)
+                    succ = min(co, key=lambda c: c.telemetry.admitted_tick)
+                    co.remove(succ)
+                    sess.telemetry.finished_tick = self.tick
+                    self.finished.append(sess)
+                    self.slot_session[slot] = succ
+                    self.stepper.unstash_lane(slot, str(succ.sid))
+                    evicted.append(slot)
+                    continue
                 sess.telemetry.finished_tick = self.tick
                 self.finished.append(sess)
                 self.slot_session[slot] = None
+                self._release_slot(slot)
                 evicted.append(slot)
         return evicted
 
@@ -331,19 +387,46 @@ class SessionManager:
         adv = frozenset(advanced)
 
         def cursor_of(slot: int, sess: ViewerSession) -> int:
+            # the in-flight frame (if any) belongs to the slot's current
+            # lane occupant; stashed co-residents never render in flight,
+            # so their cursors read literally
             return sess.cursor + (1 if slot in adv else 0)
 
+        cor_slots = {slot for slot, lst in self._coresidents.items() if lst}
         evict = tuple(
             slot for slot, sess in enumerate(self.slot_session)
-            if sess is not None and cursor_of(slot, sess) >= len(sess.cams))
+            if sess is not None and slot not in cor_slots
+            and cursor_of(slot, sess) >= len(sess.cams))
         free = sorted(set(self.free_slots()) | set(evict))
         placements = self._plan_admissions(free, tick)
         admit = tuple((slot, sess.sid) for slot, sess in placements)
         admitted_slots = {slot for slot, _ in admit}
 
+        # Oversubscribed lanes: at most one resident (occupant or stashed
+        # co-resident) is due per tick — the admission-time residue check
+        # guarantees it.  A due co-resident swaps in; a finished occupant
+        # retires into the swap (its lane needs no stashing).
         cams: dict[int, Camera] = {}
+        switches = []
+        for slot in sorted(cor_slots):
+            sess = self.slot_session[slot]
+            occupant_done = cursor_of(slot, sess) >= len(sess.cams)
+            due_co = [c for c in self._coresidents[slot] if not c.done
+                      and (tick - c.telemetry.admitted_tick) % c.pace == 0]
+            if due_co:
+                inc = due_co[0]
+                switches.append((slot, inc.sid))
+                cams[slot] = inc.cams[inc.cursor]
+            elif occupant_done:
+                inc = min(self._coresidents[slot],
+                          key=lambda c: c.telemetry.admitted_tick)
+                switches.append((slot, inc.sid))
+            elif self._frame_due(sess, tick):
+                cams[slot] = sess.cams[cursor_of(slot, sess)]
+
         for slot, sess in enumerate(self.slot_session):
-            if sess is None or slot in evict or slot in admitted_slots:
+            if sess is None or slot in evict or slot in admitted_slots \
+                    or slot in cor_slots:
                 continue
             if self._frame_due(sess, tick):
                 cams[slot] = sess.cams[cursor_of(slot, sess)]
@@ -353,9 +436,14 @@ class SessionManager:
         sort_plan = None
         plan_step = getattr(self.stepper, 'plan_step', None)
         if plan_step is not None:
-            sort_plan = plan_step(cams, pending_admits=admitted_slots)
+            if switches:
+                sort_plan = plan_step(
+                    cams, pending_admits=admitted_slots,
+                    lane_swaps={slot: str(sid) for slot, sid in switches})
+            else:
+                sort_plan = plan_step(cams, pending_admits=admitted_slots)
         return TickPlan(tick=tick, evict=evict, admit=admit, cams=cams,
-                        sort_plan=sort_plan)
+                        sort_plan=sort_plan, switches=tuple(switches))
 
     def _plan_admissions(self, free: list, tick: int) -> list:
         """Pure mirror of ``admit_ready`` over a hypothetical free-slot list:
@@ -380,6 +468,7 @@ class SessionManager:
                 k += 1
             return placements
         remaining = set(free)
+        co_placed: set[int] = set()
         for sess in pending:
             if sess.arrival_tick > tick:
                 continue
@@ -388,6 +477,30 @@ class SessionManager:
             if block:
                 placements.append((block[0], sess))
                 remaining.discard(block[0])
+                continue
+            if not self.oversubscribe or sess.pace < 2:
+                continue
+            # Block full: co-place onto an occupied slot whose residents'
+            # render ticks are residue-disjoint from the newcomer's.  The
+            # newcomer renders on ticks ≡ tick (mod pace); resident r on
+            # ticks ≡ admitted_r (mod pace_r) — they never collide iff
+            # tick ≢ admitted_r (mod gcd(pace_r, pace)), and that residue
+            # relation is permanent, so one admission-time check covers
+            # the whole co-residency.  One co-placement per slot per tick
+            # (two same-tick admits would share a residue by definition).
+            for slot in self._scene_block(sess.scene_id):
+                occ = self.slot_session[slot]
+                if occ is None or slot in co_placed or slot in remaining:
+                    continue
+                residents = [occ] + self._coresidents.get(slot, [])
+                if any(r.pace < 2 for r in residents):
+                    continue
+                if all((tick - r.telemetry.admitted_tick)
+                       % math.gcd(r.pace, sess.pace) != 0
+                       for r in residents):
+                    placements.append((slot, sess))
+                    co_placed.add(slot)
+                    break
         return placements
 
     def apply_plan(self, plan: TickPlan) -> None:
@@ -401,6 +514,7 @@ class SessionManager:
             if plan.tick != self.tick:
                 raise RuntimeError(f'stale plan: tick {plan.tick} applied at '
                                    f'manager tick {self.tick}')
+            retired = 0
             for slot in plan.evict:
                 sess = self.slot_session[slot]
                 if sess is None or not sess.done:
@@ -409,18 +523,52 @@ class SessionManager:
                 sess.telemetry.finished_tick = plan.tick
                 self.finished.append(sess)
                 self.slot_session[slot] = None
+                self._release_slot(slot)
                 self.tracer.instant('evict', slot=slot, sid=sess.sid,
+                                    tick=plan.tick)
+            for slot, sid in getattr(plan, 'switches', ()):
+                sess = self.slot_session[slot]
+                co = self._coresidents.get(slot, [])
+                inc = next((c for c in co if c.sid == sid), None)
+                if inc is None:
+                    raise RuntimeError(f'planned switch-in {sid} is not a '
+                                       f'co-resident of slot {slot}')
+                co.remove(inc)
+                if sess.done:
+                    # the outgoing occupant retires through the swap — its
+                    # lane state needs no stashing
+                    sess.telemetry.finished_tick = plan.tick
+                    self.finished.append(sess)
+                    retired += 1
+                    self.tracer.instant('evict', slot=slot, sid=sess.sid,
+                                        tick=plan.tick)
+                else:
+                    self.stepper.stash_lane(slot, str(sess.sid))
+                    co.append(sess)
+                self.slot_session[slot] = inc
+                self.stepper.unstash_lane(slot, str(inc.sid))
+                self.tracer.instant('switch', slot=slot, sid=inc.sid,
                                     tick=plan.tick)
             self.metrics.counter(
                 'serve.evicted', 'sessions leaving their slot').inc(
-                    len(plan.evict))
+                    len(plan.evict) + retired)
             for slot, sid in plan.admit:
-                if self.slot_session[slot] is not None:
-                    raise RuntimeError(f'plan admits into occupied slot '
-                                       f'{slot}')
+                occupant = self.slot_session[slot]
                 sess = next((s for s in self.pending if s.sid == sid), None)
                 if sess is None:
                     raise RuntimeError(f'planned session {sid} not pending')
+                if occupant is not None:
+                    if not self.oversubscribe:
+                        raise RuntimeError(f'plan admits into occupied slot '
+                                           f'{slot}')
+                    # co-placement: park the lane's occupant, cold-start the
+                    # newcomer into the lane (the scene cache persists — the
+                    # sharing the block exists for)
+                    self.stepper.stash_lane(slot, str(occupant.sid))
+                    self._coresidents.setdefault(slot, []).append(occupant)
+                    self.metrics.counter(
+                        'serve.oversubscribed',
+                        'sessions co-placed onto an occupied slot').inc()
                 self.pending.remove(sess)
                 self._admit_into(slot, sess)
                 self.tracer.instant('admit', slot=slot, sid=sid,
@@ -457,11 +605,15 @@ class SessionManager:
                 self.metrics.histogram(
                     'rc.saved_frac', 'integration skipped via RC',
                     scene=sess.scene_id).observe(saved_frac)
-            # paced-idle accounting: occupied slots that rendered nothing
+            # paced-idle accounting: resident sessions that rendered nothing
             # this tick (pace gaps; a done session awaiting eviction also
-            # counts — its slot is held either way)
-            idle = sum(1 for s in self.slot_session
-                       if s is not None) - len(outputs)
+            # counts — its slot is held either way).  Stashed co-residents
+            # are idle residents too: oversubscription converts their idle
+            # slot-ticks into another viewer's frames, and this counter is
+            # the denominator that shows it.
+            idle = (sum(1 for s in self.slot_session if s is not None)
+                    + sum(len(v) for v in self._coresidents.values())
+                    - len(outputs))
             if idle > 0:
                 self.metrics.counter(
                     'serve.paced_idle',
@@ -732,6 +884,12 @@ class SessionManager:
                             'sid': s.sid, 'cursor': s.cursor,
                             'admitted_tick': s.telemetry.admitted_tick}
                         for s in self.slot_session],
+                    'coresidents': {
+                        str(slot): [{'sid': c.sid, 'cursor': c.cursor,
+                                     'admitted_tick':
+                                         c.telemetry.admitted_tick}
+                                    for c in lst]
+                        for slot, lst in self._coresidents.items() if lst},
                     'pending': [s.sid for s in self.pending],
                     'finished': [s.sid for s in self.finished],
                     'shed': [s.sid for s in self.shed],
@@ -751,9 +909,15 @@ class SessionManager:
         restore; a subsequent run continues bit-identically to the
         uninterrupted one (the kill-and-restore oracle in
         ``tests/test_chaos.py``).  Returns the restored tick, or None when
-        no usable checkpoint exists (caller falls back to a fresh run)."""
-        template, _ = self.stepper.state_dict()
-        out = ckpt.restore_latest(template)
+        no usable checkpoint exists (caller falls back to a fresh run).
+
+        The shape template is built per checkpoint step: a snapshot's pool
+        capacity (and stash population) is part of its geometry, so the
+        manifest's ``extra`` is peeked first and handed to the stepper's
+        ``state_template`` — a freshly constructed stepper's own
+        ``state_dict`` only matches snapshots taken at its initial
+        capacity."""
+        out = self._restore_arrays(ckpt)
         if out is None:
             return None
         arrays, step, meta = out
@@ -770,6 +934,15 @@ class SessionManager:
                 sess.cursor = int(m['cursor'])
                 sess.telemetry.admitted_tick = int(m['admitted_tick'])
                 self.slot_session.append(sess)
+            self._coresidents = {}
+            for slot_s, lst in meta.get('coresidents', {}).items():
+                co = []
+                for m in lst:
+                    sess = by_sid.pop(m['sid'])
+                    sess.cursor = int(m['cursor'])
+                    sess.telemetry.admitted_tick = int(m['admitted_tick'])
+                    co.append(sess)
+                self._coresidents[int(slot_s)] = co
             self.finished = []
             for sid in meta['finished']:
                 sess = by_sid.pop(sid)
@@ -782,6 +955,37 @@ class SessionManager:
         self.metrics.counter('serve.restores',
                              'runs resumed from a checkpoint').inc()
         return int(step)
+
+    def _restore_arrays(self, ckpt) -> Optional[tuple]:
+        """Newest loadable checkpoint as ``(arrays, step, meta)``, building
+        the shape template per step from the manifest's stepper geometry.
+        Falls back to the plain ``restore_latest`` protocol for steppers
+        without ``state_template`` (or checkpoint stores without manifest
+        peeking), and one step back on any unreadable snapshot — the same
+        fallback ladder ``CheckpointManager.restore_latest`` walks."""
+        state_template = getattr(self.stepper, 'state_template', None)
+        manifest_extra = getattr(ckpt, 'manifest_extra', None)
+        if state_template is None or manifest_extra is None:
+            template, _ = self.stepper.state_dict()
+            return ckpt.restore_latest(template)
+        from repro.checkpoint.manager import load_checkpoint
+        ckpt.wait()
+        for step in reversed(ckpt.all_steps()):
+            try:
+                extra = manifest_extra(step)
+                if extra is None:
+                    raise ValueError('manifest unreadable')
+                template = state_template(extra.get('stepper', {}))
+                arrays, meta = load_checkpoint(ckpt.dir, template, step=step)
+                return arrays, step, meta
+            except Exception as e:   # corrupt / partial: fall back one step
+                ckpt.metrics.counter(
+                    'ckpt.restore_fallback',
+                    'checkpoints skipped as unreadable at restore').inc()
+                warnings.warn(f'checkpoint step {step} unreadable ({e}); '
+                              'falling back to previous',
+                              RuntimeWarning, stacklevel=2)
+        return None
 
     # -- the serving loop --------------------------------------------------
 

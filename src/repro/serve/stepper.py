@@ -89,6 +89,7 @@ import numpy as np
 
 from repro.core import posecell
 from repro.core import radiance_cache as rc
+from repro.core.buckets import pow2_bucket
 from repro.obs import metrics as obs_metrics
 from repro.obs import trace as obs_trace
 from repro.core.camera import Camera, stack_cameras
@@ -175,6 +176,17 @@ class BatchedStepper:
         self.num_scenes = slots // viewers_per_scene
         self.pool_size = (viewers_per_scene if pool_size is None
                           else pool_size)
+        # Dropless allocation: in shared mode the pool no longer reserves
+        # the every-viewer-its-own-cell worst case (``pool_size`` entries
+        # per scene) up front.  Capacity starts at one entry and
+        # grows/shrinks with the live pose-cell count in power-of-two
+        # buckets (``_resize_pool``), the same capacity-bucket routing a
+        # dropless-MoE router applies to token -> expert dispatch.  An
+        # explicit ``pool_size`` pins the static worst-case layout (the
+        # baseline the benchmark compares against); private mode (one
+        # viewer per scene) is already a pool-of-one.
+        self.dynamic_pool = pool_size is None and viewers_per_scene > 1
+        self.pool_cap = 1 if self.dynamic_pool else self.pool_size
         self.cell_size = cell_size
         self.cell_ang_bins = cell_ang_bins
         self.window = max(1, cfg.window) if cfg.use_s2 else 1
@@ -190,22 +202,27 @@ class BatchedStepper:
         self.priv: ViewerPrivate
         self.shared, self.priv = init_fleet(
             scene, cfg, cam0, slots, viewers_per_scene=viewers_per_scene,
-            pool_size=self.pool_size)
+            pool_size=self.pool_cap)
         self._fresh_shared = init_scene_shared(scene, cfg, cam0,
-                                               pool_size=self.pool_size)
+                                               pool_size=self.pool_cap)
         self._fresh_priv = init_viewer_private(cam0)
 
         # slot -> scene (static block layout) and host-side scheduler
         # mirrors of the device pool bookkeeping
         self._scene_of = np.arange(slots) // viewers_per_scene
-        self._pool_cell = np.full((self.num_scenes, self.pool_size), -1,
+        self._pool_cell = np.full((self.num_scenes, self.pool_cap), -1,
                                   np.int64)
-        self._pool_tick = np.full((self.num_scenes, self.pool_size),
+        self._pool_tick = np.full((self.num_scenes, self.pool_cap),
                                   -self.window, np.int64)
-        self._pool_owner = np.full((self.num_scenes, self.pool_size), -1,
+        self._pool_owner = np.full((self.num_scenes, self.pool_cap), -1,
                                    np.int64)
         self._slot_pool = np.zeros((slots,), np.int64)
-        self._refs = np.zeros((self.num_scenes, self.pool_size), np.int64)
+        self._refs = np.zeros((self.num_scenes, self.pool_cap), np.int64)
+        # occupied slots (admit .. release) and stashed co-resident viewer
+        # contexts (slot oversubscription): both hold pool references, so
+        # a paced-idle or stashed viewer's sort entry is never reclaimed
+        self._resident: set[int] = set()
+        self._stash: dict[str, dict] = {}
 
         # observability: the SessionManager shares its tracer/registry with
         # the stepper; standalone steppers default to no-op/private ones
@@ -227,8 +244,12 @@ class BatchedStepper:
             functools.partial(batched_shade_phase, cfg=cfg,
                               viewers_per_scene=viewers_per_scene),
             donate_argnums=(1, 2))
-        self._shade_sub = jax.jit(self._shade_sub_fn, donate_argnums=(1, 2))
+        # scene-block shade jits per within-scene lane width (lane
+        # compaction; the full-width instance is the legacy _shade_sub)
+        self._lane_jits: dict[int, object] = {}
+        self._shade_sub = self._get_lane_jit(viewers_per_scene)
         self._sort_pool = jax.jit(self._sort_pool_fn, donate_argnums=(1,))
+        self._resize = jax.jit(self._resize_pool_fn, donate_argnums=(0, 2))
         self._admit_scene = jax.jit(self._admit_scene_fn,
                                     donate_argnums=(0, 1))
         self._admit_priv = jax.jit(self._admit_priv_fn, donate_argnums=(0,))
@@ -236,7 +257,7 @@ class BatchedStepper:
         self._build_kernel_stages()
         # static byte accounting for state_metrics()
         self._pool_entry_bytes = (pytree_nbytes(self.shared.pool)
-                                  // (self.num_scenes * self.pool_size))
+                                  // (self.num_scenes * self.pool_cap))
         self._cache_bytes = pytree_nbytes(self.shared.cache)
 
     # -- jitted bodies ------------------------------------------------------
@@ -267,20 +288,26 @@ class BatchedStepper:
                 tick, mode='drop'))
 
     def _shade_sub_fn(self, scene, shared, priv, cams, sorted_mask,
-                      scene_idx, scene_tgt, slot_idx, slot_tgt, act_sub):
+                      scene_idx, scene_tgt, slot_idx, slot_tgt, act_sub,
+                      lanes=None):
         """Active-scene-prefix shade: gather the ``scene_idx`` scene blocks
         (and their ``slot_idx`` slots), shade only them, scatter the
         advanced state back.  ``scene_tgt``/``slot_tgt`` use
         ``num_scenes``/``slots`` (= dropped) for padding lanes; ``act_sub``
-        [B*V] bool is False for padding and for idle slots inside active
-        scenes.  Untouched scenes' state passes through unchanged.
-        """
+        [B*L] bool is False for padding and for idle slots inside active
+        scenes.  ``lanes`` is the within-scene lane width L of the gathered
+        sub-batch: the full ``viewers_per_scene`` on the legacy scene-block
+        path, or a smaller power-of-two bucket when lane compaction gathers
+        only each scene's live lanes.  Untouched scenes' state — and, under
+        lane compaction, the idle lanes of shaded scenes — pass through
+        unchanged."""
+        lanes = self.viewers_per_scene if lanes is None else lanes
         sub_shared = jax.tree.map(lambda x: x[scene_idx], shared)
         sub_priv = jax.tree.map(lambda x: x[slot_idx], priv)
         sub_cams = jax.tree.map(lambda x: x[slot_idx], cams)
         new_sh, new_pr, images, stats = batched_shade_phase(
             scene, sub_shared, sub_priv, sub_cams, sorted_mask[slot_idx],
-            act_sub, self.cfg, self.viewers_per_scene)
+            act_sub, self.cfg, lanes)
         shared2 = jax.tree.map(
             lambda full, upd: full.at[scene_tgt].set(upd, mode='drop'),
             shared, new_sh)
@@ -288,6 +315,37 @@ class BatchedStepper:
             lambda full, upd: full.at[slot_tgt].set(upd, mode='drop'),
             priv, new_pr)
         return shared2, priv2, images, stats
+
+    def _get_lane_jit(self, lanes: int):
+        """Jitted scene-block shade at within-scene lane width ``lanes``
+        (one compile per power-of-two width, so at most log2(V) variants
+        ever build — the same bound the scene-bucket compaction holds)."""
+        fn = self._lane_jits.get(lanes)
+        if fn is None:
+            fn = jax.jit(functools.partial(self._shade_sub_fn, lanes=lanes),
+                         donate_argnums=(1, 2))
+            self._lane_jits[lanes] = fn
+        return fn
+
+    def _resize_pool_fn(self, cache, pool, priv, perm, remap, cell, tick,
+                        refs):
+        """Device half of a pool-capacity resize: gather the kept entries
+        into the new layout (``perm`` [C, new_cap] old entry index per
+        scene) and remap every viewer's ``pool_idx`` (``remap`` [C,
+        old_cap] new index per old entry).  Entry payloads move bit-intact
+        and every referencing lane follows its entry, so per-viewer output
+        is unchanged by construction.  The pool is passed (and returned)
+        separately from the rest of ``SceneShared``: its leaves change
+        shape across the call, so only the shape-stable cache/priv buffers
+        are donated."""
+        c_idx = jnp.arange(self.num_scenes, dtype=jnp.int32)[:, None]
+        new_pool = jax.tree.map(lambda x: x[c_idx, perm], pool)
+        scene_of = jnp.asarray(self._scene_of, jnp.int32)
+        new_idx = remap[scene_of, priv.pool_idx]
+        shared = SceneShared(cache=cache, pool=new_pool, pool_cell=cell,
+                             pool_tick=tick, pool_refs=refs)
+        priv = dataclasses.replace(priv, pool_idx=new_idx)
+        return shared, priv
 
     @staticmethod
     def _admit_scene_fn(shared, priv, fresh_shared, fresh_priv, scene_i,
@@ -307,6 +365,135 @@ class BatchedStepper:
         cross-viewer reuse this engine exists for."""
         return jax.tree.map(lambda full, one: full.at[slot].set(one),
                             priv, fresh_priv)
+
+    # -- dropless pool capacity ---------------------------------------------
+
+    def _resize_pool(self, new_cap: int,
+                     keep: Optional[list] = None) -> None:
+        """Resize the per-scene pool to ``new_cap`` entries.
+
+        ``keep`` (shrink only) lists the entry indices each scene must
+        preserve; they compact to a dense prefix in index order.  Growth
+        passes ``keep=None`` and pads: old entries keep their indices, new
+        entries start free (cell -1, aged tick, zero refs — their gathered
+        payload is whatever entry 0 held, which nothing ever reads before a
+        sort overwrites it).  Host mirrors, ``_slot_pool``, stashed lane
+        contexts and the device state all move through the same mapping.
+        """
+        old = self.pool_cap
+        c = self.num_scenes
+        perm = np.zeros((c, new_cap), np.int64)
+        remap = np.zeros((c, old), np.int64)
+        cell = np.full((c, new_cap), -1, np.int64)
+        tick = np.full((c, new_cap), -self.window, np.int64)
+        owner = np.full((c, new_cap), -1, np.int64)
+        refs = np.zeros((c, new_cap), np.int64)
+        for ci in range(c):
+            kept = (sorted(keep[ci]) if keep is not None
+                    else list(range(min(old, new_cap))))
+            for j, p in enumerate(kept):
+                perm[ci, j] = p
+                remap[ci, p] = j
+                cell[ci, j] = self._pool_cell[ci, p]
+                tick[ci, j] = self._pool_tick[ci, p]
+                owner[ci, j] = self._pool_owner[ci, p]
+                refs[ci, j] = self._refs[ci, p]
+        self.shared, self.priv = self._resize(
+            self.shared.cache, self.shared.pool, self.priv,
+            jnp.asarray(perm, jnp.int32),
+            jnp.asarray(remap, jnp.int32), jnp.asarray(cell, jnp.int32),
+            jnp.asarray(tick, jnp.int32), jnp.asarray(refs, jnp.int32))
+        self._pool_cell, self._pool_tick = cell, tick
+        self._pool_owner, self._refs = owner, refs
+        self._slot_pool = remap[self._scene_of, self._slot_pool]
+        for ctx in self._stash.values():
+            ctx['slot_pool'] = int(
+                remap[int(self._scene_of[ctx['slot']]), ctx['slot_pool']])
+        self.pool_cap = new_cap
+        self.metrics.counter('pool.resizes',
+                             'sort-pool capacity resizes').inc()
+        self.metrics.gauge('pool.capacity',
+                           'allocated sort-pool entries per scene'
+                           ).set(new_cap)
+
+    def _grow_pool_for(self, groups) -> None:
+        """Grow capacity to cover the plan's highest entry index (the
+        planner allocates virtual indices past ``pool_cap`` when no free
+        entry exists — the dropless contract: route every live pose cell,
+        never drop one)."""
+        need = 1 + max((g.entry for g in groups), default=-1)
+        if need > self.pool_cap:
+            self._resize_pool(pow2_bucket(need))
+
+    def _keep_entries(self) -> list:
+        """Entries a shrink must preserve, per scene: referenced by any
+        resident lane (active, paced-idle or stashed), plus entries still
+        adoptable (sorted within the window by a still-resident owner) —
+        dropping those would turn a would-be adoption into a re-sort and
+        change per-viewer output vs the static pool."""
+        keep = [set() for _ in range(self.num_scenes)]
+        for ci in range(self.num_scenes):
+            for p in range(self.pool_cap):
+                if self._refs[ci, p] > 0:
+                    keep[ci].add(p)
+                elif (int(self._pool_owner[ci, p]) in self._resident
+                      and self.global_tick - self._pool_tick[ci, p]
+                      < self.window):
+                    keep[ci].add(p)
+        return keep
+
+    def _maybe_shrink_pool(self) -> None:
+        keep = self._keep_entries()
+        used = max((len(k) for k in keep), default=0)
+        target = pow2_bucket(used)
+        if target < self.pool_cap:
+            self._resize_pool(target, keep=keep)
+
+    # -- slot residency / oversubscription ----------------------------------
+
+    def release(self, slot: int) -> None:
+        """The manager vacated ``slot``: drop it from the resident set so
+        its pool entry no longer counts as referenced and the bucketed
+        pool may reclaim the capacity."""
+        self._resident.discard(slot)
+        self._pending_sort.discard(slot)
+
+    def stash_lane(self, slot: int, key: str) -> None:
+        """Park the slot's current viewer context under ``key`` so a
+        co-resident viewer can interleave into the same physical lane
+        (slot oversubscription).  The parked context keeps its pool
+        reference — a stashed viewer's sort entry is never reclaimed."""
+        self._stash[key] = {
+            'slot': int(slot),
+            'priv': jax.tree.map(lambda x: np.asarray(x[slot]), self.priv),
+            'cam': jax.tree.map(np.asarray, self._slot_cams[slot]),
+            'frames_since_due': int(self._frames_since_due[slot]),
+            'pending_sort': slot in self._pending_sort,
+            'slot_pool': int(self._slot_pool[slot]),
+        }
+        self._pending_sort.discard(slot)
+
+    def unstash_lane(self, slot: int, key: str) -> None:
+        """Swap a parked viewer context back into its physical lane (the
+        jitted admit scatter — lane shapes always match, no recompile)."""
+        ctx = self._stash.pop(key)
+        if ctx['slot'] != slot:
+            raise ValueError(f'stash {key!r} belongs to slot '
+                             f'{ctx["slot"]}, not {slot}')
+        priv_lane = jax.tree.map(jnp.asarray, ctx['priv'])
+        self.priv = self._admit_priv(self.priv, priv_lane, jnp.int32(slot))
+        self._slot_cams[slot] = jax.tree.map(jnp.asarray, ctx['cam'])
+        self._frames_since_due[slot] = ctx['frames_since_due']
+        self._slot_pool[slot] = ctx['slot_pool']
+        if ctx['pending_sort']:
+            self._pending_sort.add(slot)
+        else:
+            self._pending_sort.discard(slot)
+
+    def drop_stash(self, key: str) -> None:
+        """A stashed viewer was evicted: its parked context (and pool
+        reference) goes away."""
+        self._stash.pop(key, None)
 
     # -- per-kernel profiling ----------------------------------------------
 
@@ -408,17 +595,21 @@ class BatchedStepper:
         callables.  Benchmarks use this between repetitions — in shared mode
         ``admit`` deliberately keeps scene caches warm, so only a reset
         separates repetitions honestly."""
+        self.pool_cap = 1 if self.dynamic_pool else self.pool_size
         self.shared, self.priv = init_fleet(
             self.scene, self.cfg, self._fresh_priv.prev_cam, self.slots,
             viewers_per_scene=self.viewers_per_scene,
-            pool_size=self.pool_size)
-        self._pool_cell[:] = -1
-        self._pool_tick[:] = -self.window
-        self._pool_owner[:] = -1
-        self._slot_pool[:] = 0
-        self._refs[:] = 0
+            pool_size=self.pool_cap)
+        c = self.num_scenes
+        self._pool_cell = np.full((c, self.pool_cap), -1, np.int64)
+        self._pool_tick = np.full((c, self.pool_cap), -self.window, np.int64)
+        self._pool_owner = np.full((c, self.pool_cap), -1, np.int64)
+        self._slot_pool = np.zeros((self.slots,), np.int64)
+        self._refs = np.zeros((c, self.pool_cap), np.int64)
         self._frames_since_due[:] = 0
         self._pending_sort.clear()
+        self._resident.clear()
+        self._stash.clear()
         self.global_tick = 0
         self.sort_log = []
         self.last_timing = None
@@ -439,6 +630,7 @@ class BatchedStepper:
                                          jnp.int32(slot))
         self._slot_pool[slot] = 0
         self._frames_since_due[slot] = 0
+        self._resident.add(slot)
         # The slot's camera is only known at the next step(): run its
         # sort-on-admit there, outside the scheduled per-tick cohort.
         self._pending_sort.add(slot)
@@ -457,12 +649,18 @@ class BatchedStepper:
             owned = np.flatnonzero(self._pool_owner[scene_i] == slot)
             self._pool_owner[scene_i, owned] = -1
             self._pool_tick[scene_i, owned] = -self.window
+        # co-residents stashed on this physical lane may reference an
+        # invalidated entry: force them through a fresh sort on return
+        for ctx in self._stash.values():
+            if ctx['slot'] == slot:
+                ctx['pending_sort'] = True
         self.admit(slot)
         # the stacked camera batch reads _slot_cams every dispatch — a NaN
         # lane must not linger past containment
         self._slot_cams[slot] = self._fresh_priv.prev_cam
 
-    def _due_scheduled(self, active: set, exclude: set) -> list[int]:
+    def _due_scheduled(self, active: set, exclude: set,
+                       fsd=None) -> list[int]:
         """Slots due for a scheduled sort refresh this tick: the cohort
         residue leg (``global_tick % window == slot % window``) plus a
         staleness catch-up for frame-paced viewers.
@@ -483,14 +681,16 @@ class BatchedStepper:
         ``window`` frames), so the legacy cohort cadence — and its
         bit-parity oracles — are untouched.
         """
+        fsd = self._frames_since_due if fsd is None else fsd
         r = self.global_tick % self.window
         return [i for i in range(self.slots)
                 if i in active and i not in exclude
                 and (i % self.window == r
-                     or self._frames_since_due[i] >= self.window - 1)]
+                     or fsd[i] >= self.window - 1)]
 
     def _plan_groups(self, due: list[int], active: set,
-                     cells: dict[int, int]) -> list[_SortGroup]:
+                     cells: dict[int, int], slot_pool=None,
+                     protect=()) -> list[_SortGroup]:
         """Group the due slots by (scene, pose cell), elect leaders, pick
         pool entries, and decide which groups actually sort.
 
@@ -511,7 +711,17 @@ class BatchedStepper:
         margin-equivalent) entry keeps co-located fleets at one live buffer
         per cell instead of one per cadence phase.  Riders do not count as
         sorted — their cadence is untouched.
+
+        With the bucketed pool, entries referenced by paced-idle residents
+        and by stashed (oversubscribed) viewer contexts are seeded into the
+        refcounts too, so a viewer idling this tick never has its entry
+        stolen.  When every in-capacity entry is referenced, the dynamic
+        pool allocates *virtual* entry indices past ``pool_cap`` — the
+        dropless contract: ``_grow_pool_for`` resizes before the sorts
+        scatter, so no pose cell is ever dropped.  ``slot_pool``/``protect``
+        let ``plan_step`` substitute post-lane-swap entry assignments.
         """
+        sp = self._slot_pool if slot_pool is None else slot_pool
         groups: dict[tuple[int, int], list[int]] = {}
         for i in due:
             groups.setdefault((int(self._scene_of[i]), cells[i]),
@@ -522,12 +732,21 @@ class BatchedStepper:
             if i not in due and key in groups:
                 rider_pool.setdefault(key, []).append(i)
 
-        refs = np.zeros((self.num_scenes, self.pool_size), np.int64)
+        refs = np.zeros((self.num_scenes, self.pool_cap), np.int64)
         for i in active:
             if i not in due and (int(self._scene_of[i]), cells[i]) \
                     not in groups:
-                refs[self._scene_of[i], self._slot_pool[i]] += 1
+                refs[self._scene_of[i], sp[i]] += 1
+        for i in self._resident:
+            if i not in active and i not in self._pending_sort:
+                refs[self._scene_of[i], sp[i]] += 1
+        for ctx in self._stash.values():
+            if not ctx['pending_sort']:
+                refs[self._scene_of[ctx['slot']], ctx['slot_pool']] += 1
+        for scene_i, p in protect:
+            refs[scene_i, p] += 1
         claimed: set[tuple[int, int]] = set()
+        next_new: dict[int, int] = {}
         planned = []
         for (scene_i, cell), members in sorted(groups.items(),
                                                key=lambda kv: min(kv[1])):
@@ -555,17 +774,28 @@ class BatchedStepper:
                     refs[scene_i, entry] += len(members) + len(riders)
                     continue
             if entry < 0:
-                free = [p for p in range(self.pool_size)
+                free = [p for p in range(self.pool_cap)
                         if refs[scene_i, p] == 0
                         and (scene_i, p) not in claimed]
-                # a free entry always exists (each slot references at most
-                # one entry and the pool holds one per slot); fall back to
-                # overwriting the leader's current entry defensively
-                entry = free[0] if free else int(self._slot_pool[leader])
+                if free:
+                    entry = free[0]
+                elif self.dynamic_pool:
+                    # every in-capacity entry is referenced: allocate a
+                    # virtual index past pool_cap; _grow_pool_for resizes
+                    # before the sorts scatter (dropless)
+                    entry = next_new.get(scene_i, self.pool_cap)
+                    next_new[scene_i] = entry + 1
+                else:
+                    # static pool: a free entry always exists (each slot
+                    # references at most one entry and the pool holds one
+                    # per slot); fall back to overwriting the leader's
+                    # current entry defensively
+                    entry = int(self._slot_pool[leader])
             planned.append(_SortGroup(scene_i, cell, leader, tuple(members),
                                       riders, entry, True))
             claimed.add((scene_i, entry))
-            refs[scene_i, entry] += len(members) + len(riders)
+            if entry < self.pool_cap:
+                refs[scene_i, entry] += len(members) + len(riders)
         return planned
 
     def _run_sorts(self, cam_b: Camera, groups: list[_SortGroup]) -> None:
@@ -609,9 +839,17 @@ class BatchedStepper:
                     jnp.asarray(pools, jnp.int32)),
                 cell_id=self.priv.cell_id.at[idx].set(
                     jnp.asarray(cellv, jnp.int32)))
-        refs = np.zeros((self.num_scenes, self.pool_size), np.int64)
+        refs = np.zeros((self.num_scenes, self.pool_cap), np.int64)
         for i in active:
             refs[self._scene_of[i], self._slot_pool[i]] += 1
+        # paced-idle residents and stashed co-resident contexts hold their
+        # entries across idle ticks (not a steal candidate, not shrinkable)
+        for i in self._resident:
+            if i not in active and i not in self._pending_sort:
+                refs[self._scene_of[i], self._slot_pool[i]] += 1
+        for ctx in self._stash.values():
+            if not ctx['pending_sort']:
+                refs[self._scene_of[ctx['slot']], ctx['slot_pool']] += 1
         self._refs = refs
         self.shared = dataclasses.replace(
             self.shared, pool_refs=jnp.asarray(refs, jnp.int32))
@@ -625,8 +863,8 @@ class BatchedStepper:
         return posecell.pose_cell_key(cam, cell_size=self.cell_size,
                                       ang_bins=self.cell_ang_bins)
 
-    def plan_step(self, cams: dict[int, Camera],
-                  pending_admits=()) -> _StepPlan:
+    def plan_step(self, cams: dict[int, Camera], pending_admits=(),
+                  lane_swaps=None) -> _StepPlan:
         """Pure host planning for a coming ``step(cams)`` call: pose-cell
         quantization, the sort-on-admit set, the due cohort and the sort
         groups.  Reads only the host-side scheduler mirrors (never device
@@ -639,17 +877,42 @@ class BatchedStepper:
         yet applied — the manager plans ahead of admission, so those slots'
         sort-on-admit must be scheduled here even though ``_pending_sort``
         does not contain them yet.
+
+        ``lane_swaps`` maps slot -> stash key for oversubscribed lanes the
+        manager will swap before dispatch: the plan substitutes the
+        incoming context's pending/cadence/entry bookkeeping for the
+        slot's, and protects the outgoing occupant's entry (it is stashed,
+        not released) from the free-entry search.
         """
         active = set(cams)
         if not cams or not self.cfg.use_s2:
             return _StepPlan(frozenset(active), (), (), ())
+        swaps = dict(lane_swaps or {})
         cells = {i: self._slot_cell_key(i, cams[i]) for i in active}
+        pending = set(self._pending_sort)
+        slot_pool = self._slot_pool
+        fsd = self._frames_since_due
+        protect = []
+        if swaps:
+            slot_pool = slot_pool.copy()
+            fsd = fsd.copy()
+            for slot, key in swaps.items():
+                ctx = self._stash[key]
+                if slot not in self._pending_sort:
+                    protect.append((int(self._scene_of[slot]),
+                                    int(self._slot_pool[slot])))
+                pending.discard(slot)
+                if ctx['pending_sort']:
+                    pending.add(slot)
+                slot_pool[slot] = ctx['slot_pool']
+                fsd[slot] = ctx['frames_since_due']
         # Sort-on-admit outside the tick's scheduled cohort: newly
         # admitted slots must not render a stale or zero-filled entry.
-        admits = sorted((self._pending_sort | set(pending_admits)) & active)
-        sched = self._due_scheduled(active, exclude=set(admits))
+        admits = sorted((pending | set(pending_admits)) & active)
+        sched = self._due_scheduled(active, exclude=set(admits), fsd=fsd)
         due = sorted(set(admits) | set(sched))
-        groups = self._plan_groups(due, active, cells)
+        groups = self._plan_groups(due, active, cells, slot_pool=slot_pool,
+                                   protect=protect)
         return _StepPlan(active=frozenset(active), admits=tuple(admits),
                          due=tuple(due), groups=tuple(groups))
 
@@ -680,10 +943,19 @@ class BatchedStepper:
                 plan = self.plan_step(cams)
             groups = list(plan.groups)
             sorting = [g for g in groups if g.sorts]
+            if self.dynamic_pool:
+                # grow BEFORE the sorts scatter: the planner's virtual
+                # entry indices must be in capacity or the mode='drop'
+                # scatter would silently discard the sort
+                self._grow_pool_for(groups)
             if sorting:
                 self._run_sorts(cam_b, sorting)
             self._apply_assignments(groups, active)
             self._pending_sort -= active
+            if self.dynamic_pool:
+                # shrink AFTER assignments refreshed the refcounts, so
+                # capacity tracks the live pose-cell count this tick
+                self._maybe_shrink_pool()
             admit_set = set(plan.admits)
             n_admit = sum(1 for g in sorting if g.leader in admit_set)
             n_sched = len(sorting) - n_admit
@@ -761,24 +1033,29 @@ class BatchedStepper:
 
         v = self.viewers_per_scene
         active_scenes = sorted({int(self._scene_of[i]) for i in active})
+        per_scene = {c: [i for i in range(c * v, (c + 1) * v) if i in active]
+                     for c in active_scenes}
+        # within-scene lane width: the pow2 bucket of the busiest active
+        # scene's live lane count (lane compaction); v itself when every
+        # lane bucket rounds up to full width
+        lanes = (pow2_bucket(max(len(s) for s in per_scene.values()), cap=v)
+                 if v > 1 else 1)
         t1 = time.perf_counter()
-        if len(active_scenes) == self.num_scenes:
-            # every scene live: full-width shade, no gather/scatter (idle
-            # slots inside a scene still pass active=False)
+        if lanes == v and len(active_scenes) == self.num_scenes:
+            # every scene live at full lane width: full shade, no
+            # gather/scatter (idle slots inside a scene still pass
+            # active=False)
             active_mask = jnp.asarray([i in active
                                        for i in range(self.slots)], bool)
             self.shared, self.priv, images, stats = self._shade(
                 self.scene, self.shared, self.priv, cam_b, sorted_mask,
                 active_mask)
             pos = {slot: slot for slot in active}
-        else:
+        elif lanes == v:
             # idle-scene compaction: shade only the active scene blocks,
             # padded to a power-of-two bucket so shade widths compile at
             # most log2(C) times; idle scenes are untouched
-            bucket = 1
-            while bucket < len(active_scenes):
-                bucket *= 2
-            bucket = min(bucket, self.num_scenes)
+            bucket = pow2_bucket(len(active_scenes), cap=self.num_scenes)
             pad = bucket - len(active_scenes)
             scenes_g = active_scenes + [active_scenes[0]] * pad
             slots_g = [c * v + j for c in scenes_g for j in range(v)]
@@ -797,6 +1074,42 @@ class BatchedStepper:
                 scene_idx, scene_tgt, slot_idx, slot_tgt, act_sub)
             pos = {slot: j for j, slot in enumerate(slots_g[:len(
                 active_scenes) * v]) if slot in active}
+        else:
+            # within-scene lane compaction: gather each active scene's
+            # LIVE lanes (padded to the common ``lanes`` bucket with inert
+            # duplicates), shade the dense sub-batch, scatter only the
+            # live lanes back.  Idle lanes of active scenes are untouched
+            # — in particular never shaded and never charged a lane of
+            # shade width.  Bit-identical per-viewer output: inactive
+            # lanes contribute nothing to the shared cache/LRU, and the
+            # skipped idle-lane private update only bumps ``frame_idx``
+            # (read solely as ``frame_idx == 0``) and rewrites
+            # ``prev_cam`` with the value it already holds.
+            bucket = pow2_bucket(len(active_scenes), cap=self.num_scenes)
+            pad = bucket - len(active_scenes)
+            scenes_g = active_scenes + [active_scenes[0]] * pad
+            slots_g: list[int] = []
+            slot_tgt_l: list[int] = []
+            for c in active_scenes:
+                live = per_scene[c]
+                fill = lanes - len(live)
+                slots_g += live + [live[0]] * fill
+                slot_tgt_l += live + [self.slots] * fill
+            for _ in range(pad):
+                slots_g += [slots_g[0]] * lanes
+                slot_tgt_l += [self.slots] * lanes
+            scene_idx = jnp.asarray(scenes_g, jnp.int32)
+            scene_tgt = jnp.asarray(active_scenes + [self.num_scenes] * pad,
+                                    jnp.int32)
+            slot_idx = jnp.asarray(slots_g, jnp.int32)
+            slot_tgt = jnp.asarray(slot_tgt_l, jnp.int32)
+            act_sub = jnp.asarray([t < self.slots for t in slot_tgt_l])
+            shade = self._get_lane_jit(lanes)
+            self.shared, self.priv, images, stats = shade(
+                self.scene, self.shared, self.priv, cam_b, sorted_mask,
+                scene_idx, scene_tgt, slot_idx, slot_tgt, act_sub)
+            pos = {s: j for j, (s, t) in enumerate(zip(slots_g, slot_tgt_l))
+                   if t < self.slots}
 
         self.global_tick += 1
         self.sort_log.append({'scheduled': n_sched, 'admit': n_admit,
@@ -847,30 +1160,45 @@ class BatchedStepper:
     def state_metrics(self) -> dict:
         """Occupancy and state-memory footprint of the shared state.
 
-        ``sort_pool_live`` counts entries with live referencing viewers
-        (the number of distinct (scene, pose-cell) sorts actually held);
-        the ``*_bytes`` figures charge live pool entries plus the scene
-        caches, while ``*_alloc_bytes`` report what the device actually
-        allocates — the pool still reserves ``pool_size`` entries per scene
-        (the every-viewer-its-own-cell worst case; see ROADMAP), so only
-        the cache share of the collapse is an allocation saving today."""
+        Three tiers, finest to coarsest: ``*_bytes`` charge only entries
+        with live referencing viewers (the number of distinct (scene,
+        pose-cell) sorts actually held); ``*_alloc_bytes`` report what the
+        device currently allocates — under the dropless bucketed pool that
+        is ``pool_cap`` entries per scene, tracking live work instead of
+        the worst case; ``*_reserved_bytes`` report the static worst case
+        (``pool_size`` entries per scene, the every-viewer-its-own-cell
+        layout) the dynamic pool replaces — alloc == reserved when a
+        pinned ``pool_size`` disables bucketing."""
         live = int((self._refs > 0).sum())
         pool_bytes = live * self._pool_entry_bytes
-        pool_alloc = (self.num_scenes * self.pool_size
+        pool_alloc = (self.num_scenes * self.pool_cap
                       * self._pool_entry_bytes)
-        return {
+        pool_reserved = (self.num_scenes * self.pool_size
+                         * self._pool_entry_bytes)
+        m = {
             # dispatched async, NOT synced here: the serving tick must not
             # block on a telemetry reduction (tick_rollup converts to float
             # after the timed loop)
             'occupancy': self._occupancy(self.shared.cache),
             'sort_pool_live': live,
-            'sort_pool_total': self.num_scenes * self.pool_size,
+            'sort_pool_total': self.num_scenes * self.pool_cap,
             'sort_pool_bytes': pool_bytes,
             'sort_pool_alloc_bytes': pool_alloc,
+            'sort_pool_reserved_bytes': pool_reserved,
             'cache_bytes': self._cache_bytes,
             'state_bytes': pool_bytes + self._cache_bytes,
             'state_alloc_bytes': pool_alloc + self._cache_bytes,
+            'state_reserved_bytes': pool_reserved + self._cache_bytes,
         }
+        self.metrics.gauge(
+            'state.alloc_bytes',
+            'device bytes backing live serving state').set(
+                float(m['state_alloc_bytes']))
+        self.metrics.gauge(
+            'state.reserved_bytes',
+            'worst-case static-pool serving state bytes').set(
+                float(m['state_reserved_bytes']))
+        return m
 
     # -- checkpoint/restore --------------------------------------------------
 
@@ -884,8 +1212,12 @@ class BatchedStepper:
         donates these buffers)."""
         arrays = {'shared': self.shared, 'priv': self.priv,
                   'slot_cams': stack_cameras(self._slot_cams)}
+        if self._stash:
+            arrays['stash'] = {k: {'priv': ctx['priv'], 'cam': ctx['cam']}
+                               for k, ctx in self._stash.items()}
         meta = {
             'global_tick': int(self.global_tick),
+            'pool_cap': int(self.pool_cap),
             'pool_cell': self._pool_cell.tolist(),
             'pool_tick': self._pool_tick.tolist(),
             'pool_owner': self._pool_owner.tolist(),
@@ -893,13 +1225,22 @@ class BatchedStepper:
             'refs': self._refs.tolist(),
             'frames_since_due': self._frames_since_due.tolist(),
             'pending_sort': sorted(int(i) for i in self._pending_sort),
+            'resident': sorted(int(i) for i in self._resident),
+            'stash': {k: {'slot': int(ctx['slot']),
+                          'frames_since_due': int(ctx['frames_since_due']),
+                          'pending_sort': bool(ctx['pending_sort']),
+                          'slot_pool': int(ctx['slot_pool'])}
+                      for k, ctx in self._stash.items()},
         }
         return arrays, meta
 
     def load_state(self, arrays, meta: dict) -> None:
         """Restore a ``state_dict`` snapshot onto the already-compiled
-        callables (no recompilation: shapes/dtypes must match, which the
-        checkpoint loader verifies against a live ``state_dict`` template).
+        callables.  Shapes must match the snapshot (the checkpoint loader
+        verifies them against a ``state_template`` built for the saved
+        geometry); a snapshot taken at a different ``pool_cap`` than the
+        live stepper holds simply retraces the affected jits on the next
+        step — capacity is part of the crash-consistent state.
         ``jnp.asarray`` materializes fresh device buffers, so the next
         step's donation never aliases the caller's numpy copies."""
         self.shared = jax.tree.map(jnp.asarray, arrays['shared'])
@@ -909,6 +1250,7 @@ class BatchedStepper:
             jax.tree.map(lambda x, i=i: jnp.asarray(x)[i], cam_b)
             for i in range(self.slots)]
         self.global_tick = int(meta['global_tick'])
+        self.pool_cap = int(meta.get('pool_cap', self.pool_size))
         self._pool_cell = np.asarray(meta['pool_cell'], np.int64)
         self._pool_tick = np.asarray(meta['pool_tick'], np.int64)
         self._pool_owner = np.asarray(meta['pool_owner'], np.int64)
@@ -917,6 +1259,53 @@ class BatchedStepper:
         self._frames_since_due = np.asarray(meta['frames_since_due'],
                                             np.int64)
         self._pending_sort = set(int(i) for i in meta['pending_sort'])
+        # legacy snapshots (pre-oversubscription) default every slot
+        # resident — conservative: entries stay protected until the
+        # manager's occupancy catches up
+        self._resident = set(int(i) for i in
+                             meta.get('resident', range(self.slots)))
+        stash_arrays = arrays.get('stash', {})
+        self._stash = {}
+        for k, sm in meta.get('stash', {}).items():
+            sa = stash_arrays[k]
+            self._stash[k] = {
+                'slot': int(sm['slot']),
+                'priv': jax.tree.map(np.asarray, sa['priv']),
+                'cam': jax.tree.map(np.asarray, sa['cam']),
+                'frames_since_due': int(sm['frames_since_due']),
+                'pending_sort': bool(sm['pending_sort']),
+                'slot_pool': int(sm['slot_pool']),
+            }
+
+    def state_template(self, meta: dict):
+        """Arrays pytree matching a snapshot's geometry WITHOUT mutating
+        the live state: the checkpoint loader needs a shape template
+        before deserializing, and a crashed run may have saved at a
+        different pool capacity (or with stashed lanes) than a freshly
+        constructed stepper holds.  ``meta`` is the snapshot's manifest
+        extra (``state_dict()[1]``); only shapes matter — leaf values are
+        never read."""
+        shared = self.shared
+        cap = int(meta.get('pool_cap', self.pool_cap))
+        if cap != self.pool_cap:
+            c = self.num_scenes
+            shared = dataclasses.replace(
+                shared,
+                pool=jax.tree.map(
+                    lambda x: np.zeros((c, cap) + x.shape[2:], x.dtype),
+                    shared.pool),
+                pool_cell=np.zeros((c, cap), np.int32),
+                pool_tick=np.zeros((c, cap), np.int32),
+                pool_refs=np.zeros((c, cap), np.int32))
+        arrays = {'shared': shared, 'priv': self.priv,
+                  'slot_cams': stack_cameras(self._slot_cams)}
+        stash_meta = meta.get('stash', {})
+        if stash_meta:
+            lane = jax.tree.map(lambda x: np.asarray(x[0]), self.priv)
+            cam = jax.tree.map(np.asarray, self._slot_cams[0])
+            arrays['stash'] = {k: {'priv': lane, 'cam': cam}
+                               for k in stash_meta}
+        return arrays
 
     # -- viewer extraction / injection (fleet migration) ---------------------
 
@@ -1031,6 +1420,9 @@ class SequentialStepper:
     def admit(self, slot: int) -> None:
         self._states[slot] = copy_pytree(self._fresh)
 
+    def release(self, slot: int) -> None:
+        """No dynamic capacity to reclaim on the static engine."""
+
     def quarantine(self, slot: int) -> None:
         """Containment on the private engine is a full cold-start: every
         piece of the slot's state (cache included) is its own."""
@@ -1113,7 +1505,9 @@ class SequentialStepper:
             'sort_pool_total': self.slots,
             'sort_pool_bytes': pool_bytes,
             'sort_pool_alloc_bytes': self._pool_entry_bytes * self.slots,
+            'sort_pool_reserved_bytes': self._pool_entry_bytes * self.slots,
             'cache_bytes': self._cache_bytes * live,
             'state_bytes': pool_bytes + self._cache_bytes * live,
             'state_alloc_bytes': per_slot * self.slots,
+            'state_reserved_bytes': per_slot * self.slots,
         }

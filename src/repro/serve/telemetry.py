@@ -236,8 +236,9 @@ def tick_rollup(tick_log: list[dict], warmup_ticks: int = 0) -> dict:
         roll['max_sort_pool_live'] = int(max(pool))
     # byte figures are PEAKS over the run (staggered workloads drain toward
     # the end; the final-tick snapshot would understate the footprint)
-    for key in ('sort_pool_bytes', 'sort_pool_alloc_bytes', 'cache_bytes',
-                'state_bytes', 'state_alloc_bytes'):
+    for key in ('sort_pool_bytes', 'sort_pool_alloc_bytes',
+                'sort_pool_reserved_bytes', 'cache_bytes', 'state_bytes',
+                'state_alloc_bytes', 'state_reserved_bytes'):
         vals = [t[key] for t in log if key in t]
         if vals:
             roll[key] = int(max(vals))
