@@ -39,6 +39,13 @@ of concurrent viewers grows, across three axes:
   every viewer still finished every frame (faults degrade service, never
   drop it).  ``benchmarks.history`` gates these rows with widened
   wall-clock tolerances keyed on ``fault_rate``;
+* **stream_budget** — pose-cell scene streaming (``repro.serve.streaming``):
+  a co-watching pair served from a byte-budgeted residency arena instead of
+  the fully-resident scene.  The row records the resident/arena/full byte
+  split and the stream counters, and the run gates zero post-warmup stalls
+  with a resident footprint strictly below the full scene — CI re-asserts
+  both from ``BENCH_serve.json`` through ``benchmarks.history`` (the budget
+  is row identity, so the gate tracks this row across baselines);
 * **devices** — the elastic multi-device fleet (``repro.serve.fleet``):
   the same viewer population scene-sharded across N device workers
   (``mode='fleet'``), so the rows price the fleet layer's routing and
@@ -80,6 +87,11 @@ WINDOW = 4
 PROFILE_EVERY = 3   # per-kernel sampling cadence on pallas rows (odd, so
                     # samples do not all land on sort-cohort ticks or, in
                     # --quick runs, on the drained tail)
+# streaming row: arena budget in bytes (52 chunk frames of 64 gaussians).
+# Sized so the co-watching pair's ~44-chunk working set fits with prefetch
+# headroom (stalls stay 0) while the arena stays well below the 87-chunk
+# full partition — the row gates resident_bytes < full scene bytes.
+STREAM_BUDGET = 52 * 64 * 92
 
 
 class _Cell:
@@ -98,12 +110,13 @@ class _Cell:
                  driver: str = 'sync', fault_rate: float = 0.0,
                  pace: int = 1, oversub: bool = False,
                  slots: int | None = None, pool_size: int | None = None,
-                 sess_vps: int | None = None):
+                 sess_vps: int | None = None, stream_budget: int = 0):
         self.viewers, self.frames = viewers, frames
         self.mode, self.backend = mode, backend
         self.vps, self.stagger = vps, stagger
         self.driver = driver
         self.fault_rate = fault_rate
+        self.stream_budget = stream_budget
         # dropless-allocation axis: paced viewers (pace >= 2) optionally
         # oversubscribed into fewer physical slots than viewers;
         # ``pool_size`` forces the static worst-case per-scene pool the
@@ -121,10 +134,20 @@ class _Cell:
             self.stepper = SequentialStepper(scene, cfg, cam0, self.slots,
                                              profile_every=profile)
         else:
+            streaming = None
+            if stream_budget:
+                from repro.data.scenes import partition_scene
+                from repro.serve.streaming import ResidencyManager
+                chunked = partition_scene(scene, cell_size=0.4,
+                                          chunk_cap=64)
+                streaming = ResidencyManager(chunked, near_radius=3,
+                                             lod_radius=5,
+                                             budget_bytes=stream_budget)
             self.stepper = BatchedStepper(scene, cfg, cam0, self.slots,
                                           profile_every=profile,
                                           viewers_per_scene=vps,
-                                          pool_size=pool_size)
+                                          pool_size=pool_size,
+                                          streaming=streaming)
         self.best = None
 
     def run_once(self) -> None:
@@ -256,6 +279,14 @@ class _Cell:
                     'state_reserved_bytes', 'p50_frame_ms', 'p95_frame_ms',
                     'host_ms', 'host_overlap'):
             row[key] = roll.get(key)
+        # streaming axis: the arena budget is row identity (history.py keys
+        # on it, defaulting 0 for non-streaming rows/older baselines)
+        row['stream_budget'] = self.stream_budget
+        for key in ('stream_resident_bytes', 'stream_arena_bytes',
+                    'stream_full_bytes', 'stream_stalls',
+                    'stream_stalls_tail', 'stream_loads',
+                    'stream_prefetch_hits', 'stream_evictions'):
+            row[key] = roll.get(key)
         return row
 
 
@@ -371,6 +402,7 @@ class _FleetCell:
                     'state_reserved_bytes', 'p50_frame_ms', 'p95_frame_ms',
                     'host_ms', 'host_overlap'):
             row[key] = roll.get(key)
+        row['stream_budget'] = 0
         # the fleet axis proper (identity key + degraded-mode accounting;
         # history.py matches `devices`, older baselines default it to 1)
         row['devices'] = self.devices
@@ -380,33 +412,43 @@ class _FleetCell:
         return row
 
 
-def run(quick: bool = False, reps: int = 4):
+def _cell_specs(quick: bool) -> list[dict]:
+    """Pure cell parameterization for a quick or full run (no steppers
+    constructed).  Full runs stamp every row with ``quick_row`` — whether a
+    ``--quick`` CI run measures the same row identity — by membership in
+    the id-set of ``_cell_specs(True)``; ``benchmarks.history`` reads the
+    flag to tell *quick run legitimately measures fewer rows* apart from
+    *a bench cell was silently dropped*."""
     frames = 4 if quick else 8
     counts = (1, 2) if quick else (1, 2, 4)
     shared_at = counts[-1]      # the viewer count carrying the vps axis
-    scene = structured_scene(jax.random.PRNGKey(0), GAUSS)
     # (engine, backend) axes; sequential is the per-viewer-cadence baseline
     # and runs the reference backend only
-    variants = (('batched', 'reference'), ('batched', 'pallas'),
-                ('sequential', 'reference'))
-    cells = [_Cell(scene, viewers, frames, mode, backend)
-             for viewers in counts for mode, backend in variants]
+    specs = [dict(kind='cell', viewers=viewers, frames=frames, mode=mode,
+                  backend=backend)
+             for viewers in counts
+             for mode, backend in (('batched', 'reference'),
+                                   ('batched', 'pallas'),
+                                   ('sequential', 'reference'))]
     # the driver axis: the threaded host pipeline vs the sync virtual clock
     # at every viewer count (batched reference engine — the overlap story
     # is host planning vs the async device dispatch, not the kernel path)
-    cells += [_Cell(scene, viewers, frames, 'batched', 'reference',
-                    driver='threaded')
+    specs += [dict(kind='cell', viewers=viewers, frames=frames,
+                   mode='batched', backend='reference', driver='threaded')
               for viewers in counts]
     # the viewers_per_scene axis at the largest viewer count:
     #  - co-located shared rows (stagger 0) gate the sort-pool collapse
     #  - staggered shared-vs-private pairs gate the cache-sharing hit rate
     for backend in ('reference', 'pallas'):
-        cells.append(_Cell(scene, shared_at, frames, 'batched', backend,
-                           vps=shared_at, stagger=0))
-    cells.append(_Cell(scene, shared_at, frames, 'batched', 'reference',
-                       vps=shared_at, stagger=2))
-    cells.append(_Cell(scene, shared_at, frames, 'batched', 'reference',
-                       vps=1, stagger=2))
+        specs.append(dict(kind='cell', viewers=shared_at, frames=frames,
+                          mode='batched', backend=backend, vps=shared_at,
+                          stagger=0))
+    specs.append(dict(kind='cell', viewers=shared_at, frames=frames,
+                      mode='batched', backend='reference', vps=shared_at,
+                      stagger=2))
+    specs.append(dict(kind='cell', viewers=shared_at, frames=frames,
+                      mode='batched', backend='reference', vps=1,
+                      stagger=2))
     # the dropless-allocation axis: one doubled, half-rate (pace 2) viewer
     # population served two ways —
     #  (A) static: one slot per viewer, worst-case per-scene pools
@@ -415,29 +457,83 @@ def run(quick: bool = False, reps: int = 4):
     #      interleave on alternating ticks) on capacity-bucketed pools
     # the run gates strictly more admitted viewers per allocated byte on B
     over_v = 2 * shared_at
-    cells.append(_Cell(scene, over_v, frames, 'batched', 'reference',
-                       vps=shared_at, stagger=0, pace=2,
-                       pool_size=shared_at))
-    cells.append(_Cell(scene, over_v, frames, 'batched', 'reference',
-                       vps=shared_at, stagger=0, pace=2, oversub=True,
-                       slots=shared_at, sess_vps=over_v))
+    specs.append(dict(kind='cell', viewers=over_v, frames=frames,
+                      mode='batched', backend='reference', vps=shared_at,
+                      stagger=0, pace=2, pool_size=shared_at))
+    specs.append(dict(kind='cell', viewers=over_v, frames=frames,
+                      mode='batched', backend='reference', vps=shared_at,
+                      stagger=0, pace=2, oversub=True, slots=shared_at,
+                      sess_vps=over_v))
     # the fault_rate axis: degraded-mode cost on the threaded driver at the
     # largest viewer count (paired with the clean threaded row above)
     for fault_rate in (0.1, 0.3):
-        cells.append(_Cell(scene, shared_at, frames, 'batched', 'reference',
-                           driver='threaded', fault_rate=fault_rate))
+        specs.append(dict(kind='cell', viewers=shared_at, frames=frames,
+                          mode='batched', backend='reference',
+                          driver='threaded', fault_rate=fault_rate))
+    # the streaming axis: a co-watching pair over a budgeted residency
+    # arena (same identity in quick and full runs, so quick CI gates it
+    # against the committed baseline); the run asserts zero post-warmup
+    # stalls and a resident footprint strictly below the full scene
+    specs.append(dict(kind='cell', viewers=2, frames=frames,
+                      mode='batched', backend='reference', vps=2,
+                      stagger=0, stream_budget=STREAM_BUDGET))
     # the devices axis: the viewer population at the largest count sharded
     # across the serving fleet (sharding overhead on oversubscribed CPU;
     # these rows carry mode='fleet' so the single-device gates skip them)
     for devices in ((1, 2) if quick else (1, 2, 4)):
-        cells.append(_FleetCell(scene, shared_at, frames, devices))
+        specs.append(dict(kind='fleet', viewers=shared_at, frames=frames,
+                          devices=devices))
     # degraded fleet: seeded device_loss against a bounded admission queue —
     # the row must show load-shedding, not admission collapse
-    cells.append(_FleetCell(scene, shared_at, frames, 2, fault_rate=0.3))
+    specs.append(dict(kind='fleet', viewers=shared_at, frames=frames,
+                      devices=2, fault_rate=0.3))
+    return specs
+
+
+def _spec_row_id(spec: dict) -> tuple:
+    """The ``benchmarks.history`` row identity a spec's row will carry
+    (fleet cells pin the non-axis keys exactly as ``_FleetCell.row``
+    does)."""
+    from benchmarks import history
+    if spec['kind'] == 'fleet':
+        row = {'viewers': spec['viewers'], 'mode': 'fleet',
+               'backend': 'reference', 'viewers_per_scene': 1,
+               'driver': 'sync', 'stagger': 2,
+               'fault_rate': spec.get('fault_rate', 0.0),
+               'devices': spec['devices']}
+    else:
+        row = {'viewers': spec['viewers'], 'mode': spec['mode'],
+               'backend': spec['backend'],
+               'viewers_per_scene': spec.get('vps', 1),
+               'driver': spec.get('driver', 'sync'),
+               'stagger': spec.get('stagger', 0),
+               'fault_rate': spec.get('fault_rate', 0.0),
+               'pace': spec.get('pace', 1),
+               'oversub': int(spec.get('oversub', False)),
+               'stream_budget': spec.get('stream_budget', 0)}
+    return history._row_id('serve', row)
+
+
+def _make_cell(scene, spec: dict):
+    kw = dict(spec)
+    kind = kw.pop('kind')
+    if kind == 'fleet':
+        return _FleetCell(scene, **kw)
+    return _Cell(scene, **kw)
+
+
+def run(quick: bool = False, reps: int = 4):
+    from benchmarks import history
+    scene = structured_scene(jax.random.PRNGKey(0), GAUSS)
+    specs = _cell_specs(quick)
+    quick_ids = {_spec_row_id(s) for s in _cell_specs(True)}
+    cells = [_make_cell(scene, spec) for spec in specs]
     for _ in range(max(1, reps)):
         for cell in cells:
             cell.run_once()
     rows = [cell.row() for cell in cells]
+    for row in rows:
+        row['quick_row'] = history._row_id('serve', row) in quick_ids
 
     # cross-row gate: shared scene caches must serve staggered arrivals at
     # least as well as private ones (the warm-admission win); CI re-asserts
@@ -479,6 +575,19 @@ def run(quick: bool = False, reps: int = 4):
         f"{density_o:.3e} viewers/byte (oversubscribed, "
         f"{o['state_alloc_bytes']} B) vs {density_b:.3e} (static, "
         f"{b['state_alloc_bytes']} B) at {o['viewers']} viewers")
+    # streaming gates (CI re-asserts both from BENCH_serve.json): a budget
+    # sized to the live working set must serve without post-warmup stalls,
+    # on a resident footprint strictly below the fully-resident scene
+    for r in rows:
+        if r.get('stream_budget'):
+            assert r['stream_stalls_tail'] == 0, (
+                f"streaming stalled in steady state: "
+                f"{r['stream_stalls_tail']} post-warmup slot-stalls with "
+                f"budget {r['stream_budget']} B")
+            assert r['stream_resident_bytes'] < r['stream_full_bytes'], (
+                f"streaming kept the whole scene resident: "
+                f"{r['stream_resident_bytes']} B resident vs "
+                f"{r['stream_full_bytes']} B full scene")
     return rows
 
 

@@ -80,14 +80,18 @@ def measured_frames(scene, cams, cfg: LuminaConfig):
 
 
 def fmt_rows(rows: list[dict], title: str) -> str:
+    """Heterogeneous-tolerant table: columns are the union across rows in
+    first-appearance order (e.g. streaming rows carry stream_* fields the
+    plain rows lack); absent cells render blank."""
     if not rows:
         return f'== {title} ==\n(no rows)'
-    cols = list(rows[0].keys())
-    w = {c: max(len(c), max(len(_f(r[c])) for r in rows)) for c in cols}
+    cols = list(dict.fromkeys(c for r in rows for c in r))
+    w = {c: max(len(c), max(len(_f(r.get(c, ''))) for r in rows))
+         for c in cols}
     lines = [f'== {title} ==',
              '  '.join(c.ljust(w[c]) for c in cols)]
     for r in rows:
-        lines.append('  '.join(_f(r[c]).ljust(w[c]) for c in cols))
+        lines.append('  '.join(_f(r.get(c, '')).ljust(w[c]) for c in cols))
     return '\n'.join(lines)
 
 

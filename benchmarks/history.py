@@ -11,11 +11,31 @@ render tick is caught by the build, not by the next person rereading BENCH
 JSON by hand.
 
 Rows are matched by identity (viewers / mode / backend / viewers_per_scene
-/ driver / stagger / fault_rate / devices / pace / oversub for serve;
-metric name for kernel) and only the intersection is gated — a missing key on either side
+/ driver / stagger / fault_rate / devices / pace / oversub / stream_budget
+for serve; metric name for kernel).  A missing identity key on either side
 takes its default (``devices`` defaults to 1), so single-device baselines
-recorded before the fleet axis existed still compare — a quick CI run gates the viewer counts it measures
-against the same rows of the full committed baseline.  Tolerance bands are
+recorded before the fleet axis existed still compare.
+
+**Missing-row semantics.**  Metric pairs are gated over the intersection,
+but a *baseline row with no fresh counterpart is itself a regression*: a
+deleted bench cell silently un-gates every metric it carried, which is
+exactly the failure mode this module exists to catch.  The carve-outs, in
+precedence order:
+
+* rows listed in ``RETIRED_ROWS`` (an identity-subset allowlist) — retiring
+  a bench cell is a deliberate, reviewable edit to this file;
+* rows matched by the ``allow_missing`` parameter of ``check_payloads``
+  (the programmatic form of the same allowlist, for callers gating partial
+  payloads on purpose);
+* when the fresh payload is a ``--quick`` run (``payload['quick']``),
+  baseline rows stamped ``quick_row: false`` by the full bench run — a
+  quick run deliberately measures fewer rows, and the full run records
+  which ones via the ``_cell_specs(quick)`` id-set.  Baseline rows
+  *without* the stamp count as quick-measured, so a quick fresh payload
+  still fails when one of its own rows disappears.
+
+Fresh-only rows (new bench cells) are reported and skipped — they gate
+once committed.  Tolerance bands are
 deliberately wide for wall-clock metrics (the container clock is noisy and
 quick runs render fewer frames) and tight for structural ones:
 
@@ -55,8 +75,17 @@ ROW_KEYS = {
     'serve': (('viewers', None), ('mode', None), ('backend', None),
               ('viewers_per_scene', 1), ('driver', 'sync'), ('stagger', 0),
               ('fault_rate', 0.0), ('devices', 1), ('pace', 1),
-              ('oversub', 0)),
+              ('oversub', 0), ('stream_budget', 0)),
     'kernel': (('metric', None),),
+}
+
+# Baseline rows retired on purpose: identity-subset dicts matched against
+# baseline row ids (every listed key must equal the row's value).  Adding
+# an entry here is the explicit, reviewable act the missing-row gate
+# forces — without it a deleted bench cell silently un-gates its metrics.
+RETIRED_ROWS = {
+    'serve': (),
+    'kernel': (),
 }
 
 # degraded-mode rows (fault_rate > 0) time watchdog waits, retry backoff
@@ -120,13 +149,25 @@ def _fmt_id(suite: str, rid: tuple) -> str:
     return f"{suite}[{' '.join(parts)}]"
 
 
-def check_payloads(suite: str, baseline: dict, fresh: dict
-                   ) -> tuple[list, list]:
+def _matches_spec(suite: str, rid: tuple, spec: dict) -> bool:
+    keys = [key for key, _ in ROW_KEYS[suite]]
+    return all(k in keys and rid[keys.index(k)] == v
+               for k, v in spec.items())
+
+
+def check_payloads(suite: str, baseline: dict, fresh: dict,
+                   allow_missing: tuple = ()) -> tuple[list, list]:
     """Gate ``fresh`` rows against matching ``baseline`` rows.
 
     Returns ``(violations, report_lines)`` — human-readable lines for every
     gated metric, violations repeated in the first list.  Pure function of
     the two payloads (the unit tests drive it with synthetic degradations).
+
+    Baseline rows absent from ``fresh`` are regressions (a dropped bench
+    cell) unless retired via ``RETIRED_ROWS``, matched by an
+    ``allow_missing`` identity-subset dict, or — for ``--quick`` fresh
+    payloads — stamped ``quick_row: false`` by the full bench run (see the
+    module docstring's missing-row semantics).
     """
     base_rows = {_row_id(suite, r): r for r in baseline['rows']}
     violations, report = [], []
@@ -175,6 +216,31 @@ def check_payloads(suite: str, baseline: dict, fresh: dict
             else:
                 line += ' ok'
             report.append(line)
+    # baseline rows the fresh payload no longer measures: regressions
+    # unless retired, explicitly allowed, or full-run-only vs a quick fresh
+    fresh_ids = {_row_id(suite, r) for r in fresh['rows']}
+    quick_fresh = bool(fresh.get('quick'))
+    for rid, base in base_rows.items():
+        if rid in fresh_ids:
+            continue
+        fid = _fmt_id(suite, rid)
+        if any(_matches_spec(suite, rid, spec)
+               for spec in RETIRED_ROWS[suite]):
+            report.append(f'{fid}: baseline row retired (RETIRED_ROWS)')
+            continue
+        if any(_matches_spec(suite, rid, spec) for spec in allow_missing):
+            report.append(f'{fid}: baseline row allowed missing '
+                          f'(allow_missing)')
+            continue
+        if quick_fresh and not base.get('quick_row', True):
+            report.append(f'{fid}: full-run-only row, fresh payload is '
+                          f'--quick (skipped)')
+            continue
+        line = (f'{fid}: baseline row MISSING from fresh payload '
+                f'REGRESSED: dropped bench cell? (retire it explicitly '
+                f'via RETIRED_ROWS)')
+        violations.append(line)
+        report.append(line)
     if not gated:
         line = f'{suite}: no gateable metric pairs between payloads'
         violations.append(line)

@@ -1,4 +1,4 @@
-"""Procedural Gaussian scenes (the container ships no datasets).
+"""Procedural Gaussian scenes and the streaming chunk container.
 
 ``structured_scene`` builds a spatially-coherent ground-truth scene —
 Gaussians laid on parametric surfaces (sphere / plane / torus) with smooth
@@ -6,13 +6,42 @@ color fields — so the temporal/ray-coherence properties Lumina exploits
 (significant-Gaussian sparsity, tag stability across nearby rays) actually
 hold, as they do for trained scenes.  Purely random scenes would understate
 cache hit rates; see DESIGN.md §6.
+
+``partition_scene`` turns any ``GaussianScene`` into a ``ChunkedScene``: the
+Gaussians grouped into spatial-cell-indexed chunks (the same ``floor(p /
+cell_size)`` quantization ``core/posecell.py`` applies to camera positions),
+each chunk padded to a fixed ``chunk_cap`` lanes with **neutral** Gaussians
+— means far outside the frustum (``project`` culls them to opacity 0, depth
+inf, radius 0, so a neutral lane contributes exactly nothing to any render,
+including through a stale sorted tile list).  Within a chunk, Gaussians are
+ordered by descending significance (opacity x mean scale), so a
+significance-prefix of the chunk IS its LOD subset: ``level_rows`` maps a
+residency level to the row count to load/render, and ``masked_scene``
+neutralizes everything past the per-chunk row budget.  The streaming
+residency manager (``repro.serve.streaming``) pages these fixed-shape chunks
+in and out of a device arena.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.gaussians import GaussianScene
+
+# one Gaussian = 23 float32 fields (means 3 + log_scales 3 + quats 4 +
+# opacity_logit 1 + sh_dc 3 + sh_rest 9)
+BYTES_PER_GAUSSIAN = 92
+
+# a neutral lane: far outside any frustum (``project`` culls depth > far),
+# identity rotation, opacity ~ 0 even unculled
+_NEUTRAL_MEAN = 1.0e6
+_NEUTRAL_OPACITY_LOGIT = -30.0
+
+# residency levels, low to high: absent -> coarse LOD prefix -> full chunk
+LEVEL_ABSENT, LEVEL_LOD, LEVEL_FULL = 0, 1, 2
 
 
 def _sphere(key, n, center, radius, base_color):
@@ -59,12 +88,14 @@ def structured_scene(key: jax.Array, num_gaussians: int,
     n1 = num_gaussians // 3
     n2 = num_gaussians // 3
     n3 = num_gaussians - n1 - n2
+    assert n1 + n2 + n3 == num_gaussians, (n1, n2, n3, num_gaussians)
     m1, c1, key = _sphere(key, n1, (0.0, 0.1, 0.0), 0.45, (0.7, 0.3, 0.25))
     m2, c2, key = _plane(key, n2, (0.0, -0.5, 0.0), (1.2, 0.0, 0.0),
                          (0.0, 0.0, 1.2), (0.25, 0.55, 0.3))
     m3, c3, key = _torus(key, n3, (0.0, 0.35, 0.0), 0.7, 0.12, (0.3, 0.35, 0.75))
     means = jnp.concatenate([m1, m2, m3])
     colors = jnp.clip(jnp.concatenate([c1, c2, c3]), 0.02, 0.98)
+    assert means.shape[0] == num_gaussians, (means.shape, num_gaussians)
 
     k1, k2, k3, k4, k5 = jax.random.split(key, 5)
     n = num_gaussians
@@ -85,3 +116,194 @@ def structured_scene(key: jax.Array, num_gaussians: int,
                          opacity_logit.astype(jnp.float32),
                          sh_dc.astype(jnp.float32),
                          sh_rest.astype(jnp.float32))
+
+
+# -- streaming chunk container ------------------------------------------------
+
+def neutral_scene(n: int) -> GaussianScene:
+    """``n`` neutral lanes: culled by every frustum, zero contribution."""
+    return GaussianScene(
+        means=np.full((n, 3), _NEUTRAL_MEAN, np.float32),
+        log_scales=np.zeros((n, 3), np.float32),
+        quats=np.tile(np.asarray([1.0, 0.0, 0.0, 0.0], np.float32), (n, 1)),
+        opacity_logit=np.full((n,), _NEUTRAL_OPACITY_LOGIT, np.float32),
+        sh_dc=np.zeros((n, 3), np.float32),
+        sh_rest=np.zeros((n, 3, 3), np.float32))
+
+
+def scene_nbytes(scene_or_count) -> int:
+    """Payload bytes of a scene (or a Gaussian count)."""
+    n = (scene_or_count if isinstance(scene_or_count, int)
+         else int(scene_or_count.means.shape[0]))
+    return n * BYTES_PER_GAUSSIAN
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkedScene:
+    """A scene partitioned into fixed-capacity, cell-indexed chunks.
+
+    ``packed`` is host-side (numpy) — the "disk/flash" side of the streaming
+    data path; chunk ``i`` occupies rows ``[i*chunk_cap, (i+1)*chunk_cap)``,
+    its first ``fill[i]`` rows real Gaussians in descending significance,
+    the rest neutral padding.  ``cells[i]`` is the chunk's integer grid cell
+    (``floor(mean / cell_size)`` — every Gaussian of a chunk shares it).
+    """
+
+    packed: GaussianScene        # [num_chunks * chunk_cap] host arrays
+    cells: np.ndarray            # [num_chunks, 3] int64 grid cell per chunk
+    fill: np.ndarray             # [num_chunks] int64 real rows per chunk
+    cell_size: float
+    chunk_cap: int
+    source_count: int            # Gaussians in the source scene
+
+    @property
+    def num_chunks(self) -> int:
+        return int(self.fill.shape[0])
+
+    @property
+    def scene_bytes(self) -> int:
+        """Full-scene payload bytes (what a fully-resident run holds)."""
+        return scene_nbytes(self.source_count)
+
+    def chunk_block(self, chunk: int, rows: int,
+                    keep: int | None = None) -> GaussianScene:
+        """Host copy of one chunk's first ``rows`` lanes with only the first
+        ``keep`` real (default: the chunk's fill).  Lanes past ``keep`` are
+        neutral, so a device arena write of the block leaves no stale lanes
+        behind an LOD prefix."""
+        lo = chunk * self.chunk_cap
+        block = jax.tree.map(lambda x: np.array(x[lo:lo + rows]), self.packed)
+        keep = int(self.fill[chunk]) if keep is None else int(keep)
+        keep = min(rows, keep, int(self.fill[chunk]))
+        if keep < rows:
+            pad = neutral_scene(rows - keep)
+            block = jax.tree.map(
+                lambda b, p: np.concatenate([b[:keep], p]), block, pad)
+        return block
+
+    def meta_dict(self) -> dict:
+        """JSON-able partition geometry (checkpoint manifests carry it so a
+        restore can verify it resumes onto the same partition)."""
+        return {'num_chunks': self.num_chunks,
+                'chunk_cap': int(self.chunk_cap),
+                'cell_size': float(self.cell_size),
+                'source_count': int(self.source_count),
+                'fill': [int(f) for f in self.fill]}
+
+
+def partition_scene(scene: GaussianScene, cell_size: float = 0.4,
+                    chunk_cap: int = 64) -> ChunkedScene:
+    """Deterministically partition a scene into cell-indexed chunks.
+
+    Gaussians are bucketed by grid cell (``floor(mean / cell_size)``, the
+    position quantization ``core/posecell.py`` uses for camera poses), each
+    cell's population ordered by descending significance (``sigmoid(opacity)
+    * exp(mean log-scale)`` — the S² significance proxy; ties broken by
+    source index) and split into chunks of at most ``chunk_cap``.  Chunk
+    order is lexicographic in (cell, within-cell chunk index), so the same
+    scene always partitions identically.
+    """
+    host = jax.tree.map(np.asarray, scene)
+    n = int(host.means.shape[0])
+    cells = np.floor(host.means / cell_size).astype(np.int64)
+    sig = (1.0 / (1.0 + np.exp(-host.opacity_logit.astype(np.float64)))
+           * np.exp(host.log_scales.astype(np.float64).mean(axis=-1)))
+    # lexicographic (cell, -significance, index) order groups cells
+    # contiguously with each cell's rows significance-descending
+    order = np.lexsort((np.arange(n), -sig,
+                        cells[:, 2], cells[:, 1], cells[:, 0]))
+    sorted_cells = cells[order]
+    chunk_ids, chunk_cells, fill = [], [], []
+    start = 0
+    while start < n:
+        # the run of rows sharing this cell
+        end = start
+        while end < n and (sorted_cells[end] == sorted_cells[start]).all():
+            end += 1
+        for lo in range(start, end, chunk_cap):
+            hi = min(lo + chunk_cap, end)
+            chunk_ids.append(order[lo:hi])
+            chunk_cells.append(sorted_cells[start])
+            fill.append(hi - lo)
+        start = end
+    num_chunks = max(len(chunk_ids), 1)
+    packed = jax.tree.map(np.array, neutral_scene(num_chunks * chunk_cap))
+    for i, idx in enumerate(chunk_ids):
+        lo = i * chunk_cap
+        packed = jax.tree.map(
+            lambda p, s, lo=lo, idx=idx: _scatter_rows(p, lo, s[idx]),
+            packed, host)
+    return ChunkedScene(
+        packed=packed,
+        cells=(np.stack(chunk_cells) if chunk_cells
+               else np.zeros((1, 3), np.int64)),
+        fill=np.asarray(fill if fill else [0], np.int64),
+        cell_size=float(cell_size), chunk_cap=int(chunk_cap),
+        source_count=n)
+
+
+def _scatter_rows(dst: np.ndarray, lo: int, rows: np.ndarray) -> np.ndarray:
+    dst[lo:lo + rows.shape[0]] = rows
+    return dst
+
+
+def chunk_levels(chunked: ChunkedScene, cam_positions,
+                 near_radius: int, lod_radius: int) -> np.ndarray:
+    """Per-chunk residency level for a set of camera positions.
+
+    A chunk's level is the max over cameras of: FULL within ``near_radius``
+    grid cells (Chebyshev distance between the chunk's cell and the
+    camera's ``floor(pos / cell_size)`` cell), LOD within ``lod_radius``,
+    ABSENT beyond.  Pure host math — the residency planner and the
+    bench_quality LOD leg share it.
+    """
+    levels = np.zeros((chunked.num_chunks,), np.int64)
+    for pos in cam_positions:
+        cam_cell = np.floor(np.asarray(pos, np.float64)[:3]
+                            / chunked.cell_size).astype(np.int64)
+        dist = np.abs(chunked.cells - cam_cell[None, :]).max(axis=1)
+        lvl = np.where(dist <= near_radius, LEVEL_FULL,
+                       np.where(dist <= lod_radius, LEVEL_LOD, LEVEL_ABSENT))
+        levels = np.maximum(levels, lvl)
+    return levels
+
+
+def level_rows(chunked: ChunkedScene, levels: np.ndarray,
+               lod_frac: float = 0.5) -> np.ndarray:
+    """Rows to hold per chunk at the given residency levels: the full fill
+    at FULL, the significance prefix ``ceil(fill * lod_frac)`` at LOD
+    (never empty for a non-empty chunk), nothing when absent."""
+    fill = chunked.fill
+    lod = np.where(fill > 0,
+                   np.maximum(np.ceil(fill * lod_frac).astype(np.int64), 1),
+                   0)
+    return np.where(levels >= LEVEL_FULL, fill,
+                    np.where(levels == LEVEL_LOD, lod, 0))
+
+
+def masked_scene(packed: GaussianScene, rows: jax.Array,
+                 chunk_cap: int) -> GaussianScene:
+    """Neutralize every lane past its chunk's row budget (pure, jittable).
+
+    ``rows`` is [num_chunks] — lane ``j`` of chunk ``i`` survives iff
+    ``j < rows[i]``.  Surviving lanes keep their exact packed values, so a
+    mask covering each chunk's live requirement renders bit-identically to
+    the fully-resident scene regardless of what the hidden lanes hold.
+    """
+    lanes = packed.means.shape[0]
+    lane_in_chunk = jnp.arange(lanes, dtype=jnp.int32) % chunk_cap
+    keep = lane_in_chunk < jnp.asarray(rows, jnp.int32)[
+        jnp.arange(lanes, dtype=jnp.int32) // chunk_cap]
+
+    def _mask(x, neutral):
+        shape = (lanes,) + (1,) * (x.ndim - 1)
+        return jnp.where(keep.reshape(shape), x, neutral)
+
+    return GaussianScene(
+        means=_mask(packed.means, _NEUTRAL_MEAN),
+        log_scales=_mask(packed.log_scales, 0.0),
+        quats=_mask(packed.quats,
+                    jnp.asarray([1.0, 0.0, 0.0, 0.0], packed.quats.dtype)),
+        opacity_logit=_mask(packed.opacity_logit, _NEUTRAL_OPACITY_LOGIT),
+        sh_dc=_mask(packed.sh_dc, 0.0),
+        sh_rest=_mask(packed.sh_rest, 0.0))

@@ -301,13 +301,87 @@ class FleetManager:
             mgr = SessionManager(stepper, slots_per_device,
                                  metrics=obs_metrics.Registry())
             ckpt = None
-            if ckpt_root is not None and ckpt_every > 0:
+            if ckpt_root is not None:
+                # the manager exists whenever a checkpoint root is named —
+                # a restore-only launch (ckpt_every == 0) must still be
+                # able to read the previous run's snapshots
                 ckpt = CheckpointManager(Path(ckpt_root) / f'device{d}',
                                          metrics=mgr.metrics)
-                mgr.enable_checkpoints(ckpt, ckpt_every)
+                if ckpt_every > 0:
+                    mgr.enable_checkpoints(ckpt, ckpt_every)
             workers.append(FleetWorker(d, dev, mgr, ckpt))
         return cls(workers, tracer=tracer, metrics=metrics,
                    injector=injector, max_pending=max_pending)
+
+    # -- restore at launch -------------------------------------------------
+
+    def restore_at_launch(self, sessions) -> Optional[int]:
+        """Restore the whole fleet from its newest *common* snapshot step.
+
+        Lockstep checkpointing normally leaves every worker with the same
+        step set, but a kill can land mid-save on one device — so the
+        fleet restores to the newest step EVERY worker holds (``max_step``
+        threads through ``SessionManager.restore_serving``), keeping the
+        resumed state crash-consistent fleet-wide.  Fleet-level placement
+        (``home``/``scene_home``) rebuilds from the restored workers;
+        sessions absent from every snapshot (accepted after it, or never
+        routed) re-queue from frame 0.  Returns the restored fleet tick,
+        or None when any worker lacks a usable snapshot (caller decides
+        whether that is fatal)."""
+        steps = []
+        for w in self.workers:
+            if w.ckpt is None:
+                return None
+            w.ckpt.wait()
+            steps.append(set(w.ckpt.all_steps()))
+        common = set.intersection(*steps)
+        if not common:
+            return None
+        step = max(common)
+        self.sessions = {s.sid: s for s in sessions}
+        for w in self.workers:
+            if w.mgr.restore_serving(w.ckpt, sessions,
+                                     max_step=step) is None:
+                return None
+        ticks = {w.mgr.tick for w in self.workers}
+        if len(ticks) != 1:
+            raise RuntimeError(f'fleet checkpoints out of sync at restore: '
+                               f'ticks {sorted(ticks)}')
+        self.tick = ticks.pop()
+        vps = max(getattr(w.mgr.stepper, 'viewers_per_scene', 1)
+                  for w in self.workers)
+        self.home = {}
+        self.scene_home = {}
+        placed = set()
+        for w in self.workers:
+            for sess in w.mgr.slot_session:
+                if sess is None:
+                    continue
+                self.home[sess.sid] = w.device_id
+                placed.add(sess.sid)
+                if vps > 1:
+                    self.scene_home.setdefault(sess.scene_id, w.device_id)
+            for lst in w.mgr._coresidents.values():
+                for sess in lst:
+                    self.home[sess.sid] = w.device_id
+                    placed.add(sess.sid)
+            for sess in w.mgr.pending:
+                self.home[sess.sid] = w.device_id
+                placed.add(sess.sid)
+            placed |= {s.sid for s in w.mgr.finished}
+            placed |= {s.sid for s in w.mgr.shed}
+        requeue = [self.sessions[sid] for sid in sorted(self.sessions)
+                   if sid not in placed]
+        for sess in requeue:
+            sess.cursor = 0
+            sess.telemetry.rollback(0)
+            sess.telemetry.admitted_tick = -1
+        self.pending = deque(sorted(requeue,
+                                    key=lambda s: (s.arrival_tick, s.sid)))
+        self.metrics.counter('fleet.restores',
+                             'fleet runs resumed from checkpoints').inc()
+        self.tracer.instant('fleet_restore', tick=self.tick, step=step)
+        return self.tick
 
     # -- admission ---------------------------------------------------------
 
@@ -874,11 +948,18 @@ def get_fleet_driver(name: str, fleet: FleetManager, **kw):
 def serve_fleet(scene, cfg, cam0, sessions, *, num_devices: int,
                 slots_per_device: int, driver: str = 'sync',
                 viewers_per_scene: int = 1, profile_every: int = 0,
-                ckpt_root=None, ckpt_every: int = 0,
+                ckpt_root=None, ckpt_every: int = 0, restore: bool = False,
                 max_pending: Optional[int] = None, injector=None,
                 tracer=None, max_ticks: int = 100_000,
                 **driver_kw) -> tuple:
     """Build a fleet, submit ``sessions``, drive it to drain.
+
+    ``restore=True`` resumes from the newest fleet-consistent snapshot
+    under ``ckpt_root`` (``FleetManager.restore_at_launch``) instead of
+    starting cold — and fails fast with ``SystemExit`` when no usable
+    snapshot exists, because silently starting over is exactly the bug
+    this flag guards against.  The restored tick lands on
+    ``fleet.restored_tick`` (None for a cold start).
 
     Returns ``(fleet, finished_sessions)``; end-of-run fault accounting
     (``serve.faults_unfired``) runs against the fleet registry."""
@@ -888,8 +969,22 @@ def serve_fleet(scene, cfg, cam0, sessions, *, num_devices: int,
         viewers_per_scene=viewers_per_scene, profile_every=profile_every,
         ckpt_root=ckpt_root, ckpt_every=ckpt_every,
         max_pending=max_pending, injector=injector, tracer=tracer)
-    for sess in sessions:
-        fleet.submit(sess)
+    fleet.restored_tick = None
+    if restore:
+        if ckpt_root is None:
+            raise SystemExit('--restore with --devices > 1 needs '
+                             '--checkpoint-dir (the fleet restores from '
+                             'per-device lockstep snapshots)')
+        restored = fleet.restore_at_launch(sessions)
+        if restored is None:
+            raise SystemExit(
+                f'--restore: no usable fleet checkpoint under {ckpt_root} '
+                f'(every device worker needs a complete snapshot at a '
+                f'common step)')
+        fleet.restored_tick = restored
+    else:
+        for sess in sessions:
+            fleet.submit(sess)
     drv = get_fleet_driver(driver, fleet, **driver_kw)
     finished = drv.run(max_ticks)
     for w in fleet.workers:

@@ -74,6 +74,10 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
           watchdog: float | None = None, max_pending: int | None = None,
           checkpoint_dir: str | None = None, checkpoint_every: int = 0,
           restore: bool = False, devices: int = 1,
+          stream: bool = False, stream_budget: int = 0,
+          stream_near: int = 2, stream_lod: int = 4,
+          stream_lod_frac: float = 0.5, stream_cell: float = 0.4,
+          stream_chunk: int = 64, stream_max_loads: int = 0,
           print_fn=print) -> dict:
     """Run the serving loop to completion; returns the aggregate rollup.
 
@@ -105,6 +109,16 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     (atomic, crash-consistent — ``repro.checkpoint``); ``restore`` resumes
     from the newest complete snapshot instead of starting cold.
 
+    ``stream`` turns on pose-cell scene residency (``repro.serve
+    .streaming``): the scene is partitioned into pose-cell-keyed chunks
+    (``stream_cell`` cell size, ``stream_chunk`` Gaussians per chunk) and
+    only the live cells' chunks stay device-resident — FULL detail within
+    ``stream_near`` cells of a camera, a significance-prefix LOD subset
+    (``stream_lod_frac`` of each chunk) out to ``stream_lod`` cells.
+    ``stream_budget`` bounds the device arena in bytes (0 = one frame per
+    chunk) and ``stream_max_loads`` bounds chunk uploads per tick (0 =
+    unbounded; misses beyond it stall only the missing viewer's slot).
+
     ``devices`` > 1 serves through the elastic multi-device fleet
     (``repro.serve.fleet``): ``slots`` render slots *per device*, a shared
     bounded admission queue with deterministic routing, and device-loss
@@ -128,6 +142,12 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
     if oversubscribe and pace < 2:
         raise SystemExit('--oversubscribe needs --pace >= 2: only paced '
                          'viewers have the off ticks co-residents render in')
+    if stream and sequential:
+        raise SystemExit('--stream needs the batched engine (residency is '
+                         'a property of the shared scene arena)')
+    if stream and devices > 1:
+        raise SystemExit('--stream is a single-device feature for now '
+                         '(fleet workers hold fully-resident scene copies)')
     slots = slots or min(viewers, 8)
     # scene blocks are static: round slots up to whole blocks
     slots = -(-slots // viewers_per_scene) * viewers_per_scene
@@ -167,17 +187,29 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
             fault_trace=fault_trace, fault_rate=fault_rate,
             fault_seed=fault_seed, max_pending=max_pending,
             checkpoint_dir=checkpoint_dir,
-            checkpoint_every=checkpoint_every, backend=backend,
-            arrivals=arrivals, trace_out=trace_out,
+            checkpoint_every=checkpoint_every, restore=restore,
+            backend=backend, arrivals=arrivals, trace_out=trace_out,
             metrics_out=metrics_out, print_fn=print_fn)
 
     if sequential:
         stepper = SequentialStepper(scene, cfg, cam0, slots,
                                     profile_every=profile_every)
     else:
+        streaming = None
+        if stream:
+            from repro.data.scenes import partition_scene
+            from repro.serve.streaming import ResidencyManager
+            chunked = partition_scene(scene, cell_size=stream_cell,
+                                      chunk_cap=stream_chunk)
+            streaming = ResidencyManager(
+                chunked, near_radius=stream_near, lod_radius=stream_lod,
+                lod_frac=stream_lod_frac,
+                budget_bytes=stream_budget or None,
+                max_loads_per_tick=stream_max_loads or None)
         stepper = BatchedStepper(scene, cfg, cam0, slots,
                                  profile_every=profile_every,
-                                 viewers_per_scene=viewers_per_scene)
+                                 viewers_per_scene=viewers_per_scene,
+                                 streaming=streaming)
 
     tracer = obs.Tracer() if trace_out else None
     mgr = SessionManager(stepper, slots, tracer=tracer, injector=injector,
@@ -247,9 +279,13 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
                 'sort_pool_alloc_bytes', 'sort_pool_reserved_bytes',
                 'cache_bytes', 'state_bytes', 'state_alloc_bytes',
                 'state_reserved_bytes', 'p50_frame_ms', 'p95_frame_ms',
-                'host_ms', 'host_overlap'):
+                'host_ms', 'host_overlap', 'stream_resident_bytes',
+                'stream_arena_bytes', 'stream_full_bytes', 'stream_stalls',
+                'stream_stalls_tail', 'stream_loads',
+                'stream_prefetch_hits', 'stream_evictions'):
         if key in roll:
             agg[key] = roll[key]
+    agg['stream_budget'] = stream_budget if stream else 0
     print_fn(format_table(summaries))
     print_fn(f"-- {agg['mode']} ({backend}): {agg['sessions']} sessions, "
              f"{agg['frames']} frames in {agg['ticks']} ticks, "
@@ -271,6 +307,17 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
                  f"{agg.get('state_reserved_bytes', 0) / 1e6:.1f} MB static "
                  f"reservation)"
                  f"{occ_s}")
+    if stream and 'stream_resident_bytes' in agg:
+        print_fn(f"-- streaming: "
+                 f"{agg['stream_resident_bytes'] / 1e6:.2f} MB resident "
+                 f"peak of {agg['stream_full_bytes'] / 1e6:.2f} MB scene "
+                 f"(arena {agg['stream_arena_bytes'] / 1e6:.2f} MB, budget "
+                 f"{stream_budget or 'unbounded'}); "
+                 f"{agg['stream_loads']} loads, "
+                 f"{agg['stream_prefetch_hits']} prefetch hits, "
+                 f"{agg['stream_evictions']} evictions, "
+                 f"{agg['stream_stalls']} stalls "
+                 f"({agg.get('stream_stalls_tail', 0)} post-warmup)")
     if roll['kernel_ms']:
         parts = '  '.join(f'{k} {v:.1f}' for k, v in roll['kernel_ms'].items())
         print_fn(f"-- shade kernels (ms/tick, sampled): {parts}")
@@ -301,19 +348,26 @@ def serve(viewers: int, frames: int, *, slots: int = 0, width: int = 96,
 def _serve_fleet_path(scene, cfg, cam0, sessions, *, devices, slots, driver,
                       viewers_per_scene, profile_every, injector,
                       fault_trace, fault_rate, fault_seed, max_pending,
-                      checkpoint_dir, checkpoint_every, backend, arrivals,
-                      trace_out, metrics_out, print_fn) -> dict:
+                      checkpoint_dir, checkpoint_every, restore, backend,
+                      arrivals, trace_out, metrics_out, print_fn) -> dict:
     """The ``--devices N`` serving path: the elastic multi-device fleet
-    (``repro.serve.fleet``) with ``slots`` render slots per device."""
+    (``repro.serve.fleet``) with ``slots`` render slots per device.
+    ``restore`` resumes from the per-device lockstep checkpoints under
+    ``checkpoint_dir`` (fail-fast ``SystemExit`` when absent — see
+    ``serve_fleet``)."""
     from repro.serve.fleet import serve_fleet
     tracer = obs.Tracer() if trace_out else None
     fleet, finished = serve_fleet(
         scene, cfg, cam0, sessions, num_devices=devices,
         slots_per_device=slots, driver=driver,
         viewers_per_scene=viewers_per_scene, profile_every=profile_every,
-        ckpt_root=checkpoint_dir if checkpoint_every else None,
-        ckpt_every=checkpoint_every, max_pending=max_pending,
+        ckpt_root=checkpoint_dir, ckpt_every=checkpoint_every,
+        restore=restore, max_pending=max_pending,
         injector=injector, tracer=tracer)
+    if fleet.restored_tick is not None:
+        print_fn(f'-- restored serving state from tick '
+                 f'{fleet.restored_tick} ({checkpoint_dir}, '
+                 f'{devices} devices)')
     if trace_out:
         obs.write_trace(trace_out, tracer)
         print_fn(f'-- trace: {len(tracer.events)} events -> {trace_out} '
@@ -457,6 +511,28 @@ def main(argv=None):
                          'recovery (repro.serve.fleet; on CPU launch with '
                          'XLA_FLAGS=--xla_force_host_platform_device_count'
                          '=N for distinct devices)')
+    ap.add_argument('--stream', action='store_true',
+                    help='pose-cell scene residency: only live cells\' '
+                         'chunks stay device-resident, neighbors prefetch, '
+                         'far cells stream a coarser LOD subset '
+                         '(repro.serve.streaming; batched single-device)')
+    ap.add_argument('--stream-budget', type=int, default=0, metavar='BYTES',
+                    help='device arena byte budget for streamed chunks '
+                         '(0 = one arena frame per chunk)')
+    ap.add_argument('--stream-near', type=int, default=2, metavar='CELLS',
+                    help='full-detail radius in pose cells (Chebyshev)')
+    ap.add_argument('--stream-lod', type=int, default=4, metavar='CELLS',
+                    help='LOD radius in pose cells: cells between near and '
+                         'lod stream a significance-prefix subset')
+    ap.add_argument('--stream-lod-frac', type=float, default=0.5,
+                    help='fraction of each chunk kept at LOD detail')
+    ap.add_argument('--stream-cell', type=float, default=0.4,
+                    help='pose-cell edge length for the chunk partition')
+    ap.add_argument('--stream-chunk', type=int, default=64,
+                    help='Gaussians per chunk (the streaming granule)')
+    ap.add_argument('--stream-max-loads', type=int, default=0, metavar='N',
+                    help='chunk uploads per tick (0 = unbounded; misses '
+                         'beyond it stall only the missing viewer)')
     ap.add_argument('--seed', type=int, default=0)
     args = ap.parse_args(argv)
     serve(args.viewers, args.frames, slots=args.slots, width=args.width,
@@ -475,7 +551,12 @@ def main(argv=None):
           max_pending=args.max_pending,
           checkpoint_dir=args.checkpoint_dir,
           checkpoint_every=args.checkpoint_every, restore=args.restore,
-          devices=args.devices)
+          devices=args.devices, stream=args.stream,
+          stream_budget=args.stream_budget, stream_near=args.stream_near,
+          stream_lod=args.stream_lod,
+          stream_lod_frac=args.stream_lod_frac,
+          stream_cell=args.stream_cell, stream_chunk=args.stream_chunk,
+          stream_max_loads=args.stream_max_loads)
 
 
 if __name__ == '__main__':

@@ -899,7 +899,8 @@ class SessionManager:
             self._ckpt.save(arrays, step=self.tick, extra=meta,
                             blocking=blocking)
 
-    def restore_serving(self, ckpt, sessions) -> Optional[int]:
+    def restore_serving(self, ckpt, sessions,
+                        max_step: Optional[int] = None) -> Optional[int]:
         """Restore the newest complete checkpoint into this manager.
 
         ``sessions`` must be the same session list (sids + trajectories)
@@ -916,8 +917,13 @@ class SessionManager:
         manifest's ``extra`` is peeked first and handed to the stepper's
         ``state_template`` — a freshly constructed stepper's own
         ``state_dict`` only matches snapshots taken at its initial
-        capacity."""
-        out = self._restore_arrays(ckpt)
+        capacity.
+
+        ``max_step`` caps the restore at a given checkpoint step — the
+        fleet restores every worker to its newest *common* step so a kill
+        landing mid-save on one device cannot leave the workers on
+        different ticks."""
+        out = self._restore_arrays(ckpt, max_step=max_step)
         if out is None:
             return None
         arrays, step, meta = out
@@ -956,21 +962,28 @@ class SessionManager:
                              'runs resumed from a checkpoint').inc()
         return int(step)
 
-    def _restore_arrays(self, ckpt) -> Optional[tuple]:
+    def _restore_arrays(self, ckpt, max_step=None) -> Optional[tuple]:
         """Newest loadable checkpoint as ``(arrays, step, meta)``, building
         the shape template per step from the manifest's stepper geometry.
-        Falls back to the plain ``restore_latest`` protocol for steppers
-        without ``state_template`` (or checkpoint stores without manifest
-        peeking), and one step back on any unreadable snapshot — the same
-        fallback ladder ``CheckpointManager.restore_latest`` walks."""
+        ``max_step`` skips snapshots newer than the given step (fleet
+        common-step restore).  Falls back to the plain ``restore_latest``
+        protocol for steppers without ``state_template`` (or checkpoint
+        stores without manifest peeking), and one step back on any
+        unreadable snapshot — the same fallback ladder
+        ``CheckpointManager.restore_latest`` walks."""
         state_template = getattr(self.stepper, 'state_template', None)
         manifest_extra = getattr(ckpt, 'manifest_extra', None)
         if state_template is None or manifest_extra is None:
+            if max_step is not None:
+                raise ValueError('max_step needs the manifest-template '
+                                 'restore path')
             template, _ = self.stepper.state_dict()
             return ckpt.restore_latest(template)
         from repro.checkpoint.manager import load_checkpoint
         ckpt.wait()
-        for step in reversed(ckpt.all_steps()):
+        steps = [s for s in ckpt.all_steps()
+                 if max_step is None or s <= max_step]
+        for step in reversed(steps):
             try:
                 extra = manifest_extra(step)
                 if extra is None:

@@ -133,10 +133,11 @@ class _StepPlan(NamedTuple):
     ``BatchedStepper.plan_step``): the pure planning output the async host
     loop computes off-thread while the device executes the previous tick."""
 
-    active: frozenset    # slots rendering this step
+    active: frozenset    # slots rendering this step (stalled slots removed)
     admits: tuple        # slots sorting on admit (outside the cohort)
     due: tuple           # all slots consuming a sort refresh this step
     groups: tuple        # _SortGroup plan from the pose-cell scheduler
+    stream: object = None  # StreamPlan when scene residency is streamed
 
 
 class _InFlight(NamedTuple):
@@ -165,10 +166,24 @@ class BatchedStepper:
                  cam0: Camera, slots: int, profile_every: int = 0,
                  viewers_per_scene: int = 1, pool_size: int | None = None,
                  cell_size: float = posecell.CELL_SIZE,
-                 cell_ang_bins: int = posecell.ANG_BINS):
+                 cell_ang_bins: int = posecell.ANG_BINS,
+                 streaming=None):
         if slots % viewers_per_scene:
             raise ValueError(f'slots ({slots}) must be a multiple of '
                              f'viewers_per_scene ({viewers_per_scene})')
+        # Streaming residency (repro.serve.streaming.ResidencyManager): the
+        # effective scene is the manager's masked arena view — same shape
+        # every tick, so a residency change swaps ``self.scene`` without
+        # recompiling anything (the scene is an argument to every jitted
+        # call, never a closure capture).
+        self._streaming = streaming
+        if streaming is not None:
+            if streaming.grace_ticks is None:
+                # eviction grace must outlive any stale sorted tile list:
+                # one full sort window plus dispatch slack
+                streaming.grace_ticks = (max(1, cfg.window)
+                                         if cfg.use_s2 else 1) + 2
+            scene = streaming.scene()
         self.scene = scene
         self.cfg = cfg
         self.slots = slots
@@ -506,13 +521,14 @@ class BatchedStepper:
             return
         from repro.kernels import ops
         cfg = self.cfg
-        gauss = self.scene
         tx, ty = self.tiles_x, self.tiles_y
         chunk = cfg.shade_chunk
         v = self.viewers_per_scene
         c = self.num_scenes
 
-        def prep(shared, priv, cams):
+        # gauss is an argument (not a closure capture) so a streamed scene
+        # swap never invalidates the profiling stages
+        def prep(gauss, shared, priv, cams):
             feats_b = batched_prep_features(gauss, shared, priv, cams, cfg, v)
             feats_b = trim_features_slots(feats_b, tx)
             return ops.pad_features_slots(feats_b, chunk)
@@ -574,7 +590,7 @@ class BatchedStepper:
             stages.append((name, t0, t1))
             return out
 
-        feats_b = timed('prep', self._k_prep, shared, priv, cams)
+        feats_b = timed('prep', self._k_prep, self.scene, shared, priv, cams)
         st_a = timed('prefix', self._k_prefix, feats_b, active_mask)
         hit, ids_cv, hit_cv, live_cv = timed('lookup', self._k_lookup,
                                              shared.cache, st_a, active_mask)
@@ -595,6 +611,9 @@ class BatchedStepper:
         callables.  Benchmarks use this between repetitions — in shared mode
         ``admit`` deliberately keeps scene caches warm, so only a reset
         separates repetitions honestly."""
+        if self._streaming is not None:
+            self._streaming.reset()
+            self.scene = self._streaming.scene()
         self.pool_cap = 1 if self.dynamic_pool else self.pool_size
         self.shared, self.priv = init_fleet(
             self.scene, self.cfg, self._fresh_priv.prev_cam, self.slots,
@@ -884,9 +903,23 @@ class BatchedStepper:
         slot's, and protects the outgoing occupant's entry (it is stashed,
         not released) from the free-entry search.
         """
+        stream = None
+        if self._streaming is not None and cams:
+            # residency first: slots stalled on a missing chunk drop out of
+            # this tick entirely (no render, no sort, cursor retried), so
+            # the scheduling below sees only the slots that will run.
+            # Pending admits are named so their cold-start loads are exempt
+            # from the per-tick load budget.
+            admit_guess = ((set(self._pending_sort) | set(pending_admits))
+                           & set(cams))
+            stream = self._streaming.plan(self.global_tick, cams,
+                                          admit_guess)
+            if stream.stalled:
+                cams = {s: c for s, c in cams.items()
+                        if s not in stream.stalled}
         active = set(cams)
         if not cams or not self.cfg.use_s2:
-            return _StepPlan(frozenset(active), (), (), ())
+            return _StepPlan(frozenset(active), (), (), (), stream)
         swaps = dict(lane_swaps or {})
         cells = {i: self._slot_cell_key(i, cams[i]) for i in active}
         pending = set(self._pending_sort)
@@ -914,7 +947,24 @@ class BatchedStepper:
         groups = self._plan_groups(due, active, cells, slot_pool=slot_pool,
                                    protect=protect)
         return _StepPlan(active=frozenset(active), admits=tuple(admits),
-                         due=tuple(due), groups=tuple(groups))
+                         due=tuple(due), groups=tuple(groups),
+                         stream=stream)
+
+    def _apply_stream(self, stream) -> None:
+        """Execute a residency plan (evictions, loads, LOD render masks)
+        and swap the streamed scene view in for this tick's shade.  The
+        manager publishes through this stepper's registry/tracer so the
+        ``stream.*`` series land where the session rolls tick metrics up;
+        they are re-pointed every call because the session installs its
+        tracer after construction."""
+        mgr = self._streaming
+        mgr.metrics = self.metrics
+        mgr.tracer = self.tracer
+        mgr.apply(stream)
+        if mgr.dirty:
+            # scene is an argument to every jitted callable (same shapes:
+            # the arena is fixed-size), so the swap never recompiles
+            self.scene = mgr.scene()
 
     def step_dispatch(self, cams: dict[int, Camera],
                       plan: Optional[_StepPlan] = None):
@@ -931,6 +981,23 @@ class BatchedStepper:
 
     def _dispatch(self, cams: dict[int, Camera],
                   plan: Optional[_StepPlan]):
+        if plan is None:
+            plan = self.plan_step(cams)
+        if plan.stream is not None:
+            self._apply_stream(plan.stream)
+            if plan.stream.stalled:
+                # a stalled slot renders nothing this tick: its cursor is
+                # never advanced (no output), so the same frame retries
+                # next tick against the freshly loaded chunks
+                cams = {s: c for s, c in cams.items()
+                        if s not in plan.stream.stalled}
+            if not cams:
+                # every requested slot stalled — the loads above still ran,
+                # so the retried tick can make progress
+                self.global_tick += 1
+                self.sort_log.append({'scheduled': 0, 'admit': 0,
+                                      'joined': 0})
+                return None
         for slot, cam in cams.items():
             self._slot_cams[slot] = cam
         cam_b = stack_cameras(self._slot_cams)
@@ -939,8 +1006,6 @@ class BatchedStepper:
         t0 = time.perf_counter()
         n_admit = n_sched = n_joined = 0
         if self.cfg.use_s2:
-            if plan is None:
-                plan = self.plan_step(cams)
             groups = list(plan.groups)
             sorting = [g for g in groups if g.sorts]
             if self.dynamic_pool:
@@ -1190,6 +1255,18 @@ class BatchedStepper:
             'state_alloc_bytes': pool_alloc + self._cache_bytes,
             'state_reserved_bytes': pool_reserved + self._cache_bytes,
         }
+        if self._streaming is not None:
+            mgr = self._streaming
+            cnt = mgr.counters()
+            m.update({
+                'stream_resident_bytes': mgr.resident_bytes,
+                'stream_arena_bytes': mgr.arena_bytes,
+                'stream_full_bytes': mgr.chunked.scene_bytes,
+                'stream_stalls': cnt['stalls'],
+                'stream_loads': cnt['loads'],
+                'stream_prefetch_hits': cnt['prefetch_hits'],
+                'stream_evictions': cnt['evictions'],
+            })
         self.metrics.gauge(
             'state.alloc_bytes',
             'device bytes backing live serving state').set(
@@ -1215,6 +1292,10 @@ class BatchedStepper:
         if self._stash:
             arrays['stash'] = {k: {'priv': ctx['priv'], 'cam': ctx['cam']}
                                for k, ctx in self._stash.items()}
+        stream_meta = None
+        if self._streaming is not None:
+            stream_arrays, stream_meta = self._streaming.state_dict()
+            arrays['stream'] = stream_arrays
         meta = {
             'global_tick': int(self.global_tick),
             'pool_cap': int(self.pool_cap),
@@ -1232,6 +1313,8 @@ class BatchedStepper:
                           'slot_pool': int(ctx['slot_pool'])}
                       for k, ctx in self._stash.items()},
         }
+        if stream_meta is not None:
+            meta['stream'] = stream_meta
         return arrays, meta
 
     def load_state(self, arrays, meta: dict) -> None:
@@ -1276,6 +1359,9 @@ class BatchedStepper:
                 'pending_sort': bool(sm['pending_sort']),
                 'slot_pool': int(sm['slot_pool']),
             }
+        if self._streaming is not None and 'stream' in meta:
+            self._streaming.load_state(arrays['stream'], meta['stream'])
+            self.scene = self._streaming.scene()
 
     def state_template(self, meta: dict):
         """Arrays pytree matching a snapshot's geometry WITHOUT mutating
@@ -1305,6 +1391,8 @@ class BatchedStepper:
             cam = jax.tree.map(np.asarray, self._slot_cams[0])
             arrays['stash'] = {k: {'priv': lane, 'cam': cam}
                                for k in stash_meta}
+        if self._streaming is not None and 'stream' in meta:
+            arrays['stream'] = self._streaming.state_template()
         return arrays
 
     # -- viewer extraction / injection (fleet migration) ---------------------

@@ -1,0 +1,457 @@
+"""Streaming scene residency: page pose-cell chunks through a device arena.
+
+Large scenes do not fit device-resident.  ``ResidencyManager`` owns a
+fixed-size device **arena** of ``arena_slots`` chunk frames (sized from a
+byte budget) and pages the host-side ``ChunkedScene`` chunks in and out of
+it, driven by where the live cameras are:
+
+* chunks within ``near_radius`` grid cells (Chebyshev, the ``core/posecell``
+  ``floor(p / cell_size)`` quantization) of any active camera are held at
+  **FULL** level; within ``lod_radius`` at **LOD** level — the chunk's
+  significance-prefix subset (``data.scenes.level_rows``), the budgeted
+  approximate sibling of the significance-exact S² trim; beyond that a
+  chunk need not be resident at all;
+* the render mask per chunk is ``min(required_rows, loaded_rows)``: what the
+  trajectory requires, capped by what is actually loaded.  When nothing
+  stalls, the mask equals the requirement — a pure function of the camera
+  trajectory — so the effective scene (and every rendered frame) is
+  **bit-identical across arena budgets**, fully-resident included;
+* a chunk some camera requires beyond its loaded rows is a **miss**: the
+  load is scheduled, and if it cannot complete this tick (the per-tick load
+  budget ``max_loads_per_tick`` models streaming bandwidth; admit-tick
+  demand is exempt so cold starts never stall) only the missing viewers'
+  slots stall — ``stream.stalls`` counts them and the stepper drops just
+  those slots from the tick, so their cursors retry the same frame next
+  tick while everyone else renders on;
+* when even the **union** of the live working sets exceeds the arena,
+  slots reserve capacity in a priority order rotating every
+  ``grace_ticks + 2`` ticks: leading slots win the epoch, denied slots
+  stall and stop requiring their chunks, which age past the grace window
+  and free their frames for the next epoch's leaders — an oversized fleet
+  timeshares the arena (degraded but live) instead of livelocking; a
+  *single* slot whose own requirement exceeds the whole arena can never
+  render and raises immediately (configuration error, not a stall);
+* **prefetch**: with spare load budget the manager pulls the next ring in
+  (FULL at ``near_radius + 1``, LOD at ``lod_radius + 1``) — the pose-cell
+  neighbor structure as the prediction — on the host worker seam, so a
+  camera drifting into a new cell finds its chunks warm
+  (``stream.prefetch_hits``);
+* **eviction** frees arena frames only for chunks unrequired for at least
+  ``grace_ticks`` (sort window + slack): a stale sorted tile list may still
+  gather an evicted chunk's lanes, and the grace period guarantees every
+  such list has expired — meanwhile the render mask neutralizes unrequired
+  lanes, so a stale list gathering them contributes exactly nothing.
+
+The plan/apply split mirrors the stepper's scheduler seam: ``plan`` is a
+pure function of the host mirrors (safe on the async host worker thread,
+bit-identical under SyncDriver replay), ``apply`` mutates mirrors and the
+device arena inside dispatch.  ``apply`` is idempotent per tick, so the
+hardened dispatch path may retry a faulted tick without double-loading.
+
+Residency state is checkpoint geometry: ``state_dict``/``load_state``
+round-trip the arena pytree plus the JSON-able mirrors, so a restore at a
+partially-resident state resumes bit-identically.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.scenes import (BYTES_PER_GAUSSIAN, LEVEL_FULL, LEVEL_LOD,
+                               ChunkedScene, chunk_levels, level_rows,
+                               masked_scene, neutral_scene)
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+
+
+class StreamPlan(NamedTuple):
+    """One tick's residency decisions (pure output of ``plan``)."""
+
+    tick: int
+    evict: tuple          # chunk ids to free (grace-expired, farthest first)
+    assign: tuple         # ((chunk, arena_slot), ...) for newly placed chunks
+    loads: tuple          # ((chunk, rows, block_rows, is_prefetch), ...)
+    stalled: frozenset    # slots whose demand could not be satisfied
+    mask_rows: tuple      # [arena_slots] render rows per frame AFTER loads
+    hits: tuple           # chunk ids whose demand was served by a prefetch
+    required_now: tuple   # chunk ids required (> 0 rows) this tick
+
+
+class ResidencyManager:
+    """Pose-cell chunk residency over a fixed device arena (see module
+    docstring).  One per stepper; the stepper's effective ``scene`` is this
+    manager's masked arena view."""
+
+    def __init__(self, chunked: ChunkedScene, *, near_radius: int = 2,
+                 lod_radius: int = 4, lod_frac: float = 0.5,
+                 budget_bytes: Optional[int] = None,
+                 max_loads_per_tick: Optional[int] = None,
+                 grace_ticks: Optional[int] = None):
+        self.chunked = chunked
+        self.near_radius = int(near_radius)
+        self.lod_radius = int(lod_radius)
+        self.lod_frac = float(lod_frac)
+        self.budget_bytes = budget_bytes
+        self.max_loads_per_tick = max_loads_per_tick
+        # default grace is set by the stepper at attach (sort window + 2)
+        self.grace_ticks = grace_ticks
+        cap = chunked.chunk_cap
+        frame_bytes = cap * BYTES_PER_GAUSSIAN
+        if budget_bytes is None:
+            self.arena_slots = chunked.num_chunks
+        else:
+            self.arena_slots = max(1, min(chunked.num_chunks,
+                                          int(budget_bytes) // frame_bytes))
+        # LOD transfer block: one fixed height so loads compile twice (full
+        # and LOD), not once per distinct chunk fill
+        self.lod_block = max(1, int(np.ceil(cap * self.lod_frac)))
+        self.metrics = obs_metrics.Registry()
+        self.tracer = obs_trace.NULL
+        self._load_jit = jax.jit(self._load_fn, donate_argnums=(0,))
+        self._mask_jit = jax.jit(
+            lambda packed, rows: masked_scene(packed, rows, cap))
+        self._init_state()
+
+    # -- state ---------------------------------------------------------------
+
+    def _init_state(self) -> None:
+        n, r = self.chunked.num_chunks, self.arena_slots
+        self._loaded = np.zeros((n,), np.int64)     # rows resident per chunk
+        self._prefetched = np.zeros((n,), bool)     # loaded by prefetch,
+                                                    # not yet demanded
+        self._last_required = np.full((n,), -(10 ** 9), np.int64)
+        self._chunk_slot = {}                       # chunk -> arena slot
+        self._slot_chunk = np.full((r,), -1, np.int64)
+        self._mask_rows = np.zeros((r,), np.int64)
+        self._applied_tick = -1
+        self._counters = {'loads': 0, 'prefetch': 0, 'prefetch_hits': 0,
+                          'stalls': 0, 'evictions': 0, 'loaded_bytes': 0}
+        self._arena = jax.tree.map(
+            jnp.asarray, neutral_scene(r * self.chunked.chunk_cap))
+        self._scene = self._mask_jit(self._arena,
+                                     jnp.zeros((r,), jnp.int32))
+        self.dirty = True    # stepper must (re)take scene()
+
+    def reset(self) -> None:
+        """Cold-start between benchmark repetitions: empty arena, zeroed
+        mirrors and counters on the already-jitted callables."""
+        self._init_state()
+
+    def scene(self):
+        """The current effective scene: the arena with every lane past its
+        chunk's render budget neutralized.  Consumes the dirty flag."""
+        self.dirty = False
+        return self._scene
+
+    @property
+    def resident_bytes(self) -> int:
+        return int(self._loaded.sum()) * BYTES_PER_GAUSSIAN
+
+    @property
+    def arena_bytes(self) -> int:
+        return self.arena_slots * self.chunked.chunk_cap * BYTES_PER_GAUSSIAN
+
+    def counters(self) -> dict:
+        return dict(self._counters)
+
+    # -- jitted device load --------------------------------------------------
+
+    @staticmethod
+    def _load_fn(arena, block, start):
+        return jax.tree.map(
+            lambda a, b: jax.lax.dynamic_update_slice(
+                a, b, (start,) + (0,) * (a.ndim - 1)),
+            arena, block)
+
+    # -- planning (pure) -----------------------------------------------------
+
+    def _slot_requirements(self, cams: dict) -> tuple:
+        """Per-slot required rows [C] and per-chunk min camera distance."""
+        ch = self.chunked
+        per_slot = {}
+        min_dist = np.full((ch.num_chunks,), 10 ** 9, np.int64)
+        for slot in sorted(cams):
+            pos = np.asarray(cams[slot].position, np.float64)
+            cam_cell = np.floor(pos / ch.cell_size).astype(np.int64)
+            dist = np.abs(ch.cells - cam_cell[None, :]).max(axis=1)
+            lvl = np.where(dist <= self.near_radius, LEVEL_FULL,
+                           np.where(dist <= self.lod_radius, LEVEL_LOD, 0))
+            per_slot[slot] = (level_rows(ch, lvl, self.lod_frac), dist)
+            min_dist = np.minimum(min_dist, dist)
+        return per_slot, min_dist
+
+    def plan(self, tick: int, cams: dict, admits=frozenset()) -> StreamPlan:
+        """Pure residency plan for ``tick``: reads only host mirrors.  The
+        caller sequences it after the previous ``apply`` (same contract as
+        the stepper's scheduler mirrors).  ``admits`` names slots admitted
+        this tick — their demand loads are exempt from the per-tick load
+        budget, so cold starts burst instead of stalling."""
+        ch = self.chunked
+        per_slot, min_dist = self._slot_requirements(cams)
+        grace = self.grace_ticks if self.grace_ticks is not None else 8
+
+        # -- capacity reservation in epoch-rotated priority order ----------
+        # When the union working set fits the arena every slot reserves and
+        # the order is irrelevant (the no-stall regime the bit-identity
+        # contract lives in).  When it does not, slots reserve arena frames
+        # in a priority order that rotates every ``grace + 2`` ticks:
+        # the leading slots' requirements win, the rest are denied for the
+        # epoch so their chunks stop being required, age past the grace
+        # window and free their frames — the arena timeshares across
+        # oversized fleets instead of livelocking on an unsatisfiable
+        # union requirement.  Admit-tick slots always lead (cold starts).
+        for slot in sorted(per_slot):
+            need = int((per_slot[slot][0] > 0).sum())
+            if need > self.arena_slots:
+                raise RuntimeError(
+                    f'streaming arena too small: slot {slot} requires '
+                    f'{need} chunk frames but the arena holds only '
+                    f'{self.arena_slots} — raise the byte budget or '
+                    f'shrink near/lod radii')
+        slots_sorted = sorted(per_slot)
+        epoch = grace + 2
+        lead = ((tick // epoch) % len(slots_sorted)) if slots_sorted else 0
+        rotated = slots_sorted[lead:] + slots_sorted[:lead]
+        order_slots = ([s for s in rotated if s in admits]
+                       + [s for s in rotated if s not in admits])
+        req = np.zeros((ch.num_chunks,), np.int64)
+        reserved = []
+        stalled = set()
+        frames_left = self.arena_slots
+        for slot in order_slots:
+            rows, _ = per_slot[slot]
+            new_chunks = int(((rows > 0) & (req == 0)).sum())
+            if new_chunks > frames_left:
+                stalled.add(slot)
+                continue
+            frames_left -= new_chunks
+            req = np.maximum(req, rows)
+            reserved.append(slot)
+        loaded_after = self._loaded.copy()
+
+        # demand: chunks some reserved slot needs beyond what is resident
+        demand = np.nonzero(req > loaded_after)[0]
+        exempt = set()
+        for slot in (set(admits) & set(reserved)):
+            rows, _ = per_slot[slot]
+            exempt.update(np.nonzero(rows > loaded_after)[0].tolist())
+        order = sorted(demand.tolist(),
+                       key=lambda c: (c not in exempt, int(min_dist[c]), c))
+
+        # arena frames available: free ones, then grace-expired evictions
+        # (farthest from every camera first; never evict a required chunk)
+        free = sorted(set(range(self.arena_slots))
+                      - set(int(s) for s in self._chunk_slot.values()))
+        evictable = sorted(
+            (c for c in self._chunk_slot
+             if req[c] == 0 and tick - int(self._last_required[c]) >= grace),
+            key=lambda c: (-int(min_dist[c]), c))
+        budget = (self.max_loads_per_tick if self.max_loads_per_tick
+                  is not None else float('inf'))
+        evict, assign, loads, hits = [], [], [], []
+        spent = 0
+        for c in order:
+            is_exempt = c in exempt
+            if not is_exempt and spent >= budget:
+                continue
+            if c not in self._chunk_slot and c not in dict(assign):
+                if free:
+                    slot = free.pop(0)
+                elif evictable:
+                    victim = evictable.pop(0)
+                    evict.append(victim)
+                    slot = int(self._chunk_slot[victim])
+                else:
+                    continue
+                assign.append((c, slot))
+            level = LEVEL_FULL if req[c] >= int(ch.fill[c]) else LEVEL_LOD
+            block = (ch.chunk_cap if level == LEVEL_FULL else self.lod_block)
+            loads.append((int(c), int(req[c]), int(block), False))
+            loaded_after[c] = int(req[c])
+            if not is_exempt:
+                spent += 1
+
+        # prefetch hits: demanded chunks already warm from a prior prefetch
+        for c in np.nonzero((req > 0) & self._prefetched)[0].tolist():
+            if self._loaded[c] >= req[c]:
+                hits.append(int(c))
+
+        # prefetch the next ring with spare budget and FREE frames only
+        # (prefetch never evicts -- demand owns the reclaim path)
+        pre_lvl = chunk_levels(
+            ch, [np.asarray(cams[s].position, np.float64)
+                 for s in sorted(cams)],
+            self.near_radius + 1, self.lod_radius + 1) if cams else None
+        prefetch = []
+        if pre_lvl is not None:
+            pre_rows = level_rows(ch, pre_lvl, self.lod_frac)
+            cand = sorted(
+                np.nonzero(pre_rows > loaded_after)[0].tolist(),
+                key=lambda c: (int(min_dist[c]), c))
+            for c in cand:
+                if spent >= budget or not free:
+                    break
+                if c in self._chunk_slot or c in dict(assign):
+                    slot = None   # resident upgrade uses its own frame
+                else:
+                    slot = free.pop(0)
+                    assign.append((int(c), slot))
+                level = (LEVEL_FULL if pre_rows[c] >= int(ch.fill[c])
+                         else LEVEL_LOD)
+                block = (ch.chunk_cap if level == LEVEL_FULL
+                         else self.lod_block)
+                prefetch.append((int(c), int(pre_rows[c]), int(block), True))
+                loaded_after[c] = int(pre_rows[c])
+                spent += 1
+
+        # stall reserved slots whose own requirement stays unmet (denied
+        # slots are already stalled; partial loads above still made
+        # cross-tick progress toward unstalling them)
+        for slot in reserved:
+            rows, _ = per_slot[slot]
+            if (rows > loaded_after).any():
+                stalled.add(slot)
+
+        # render mask: required capped by loaded, per arena frame
+        # frames of evicted chunks are overwritten by ``assign`` entries
+        slot_chunk = self._slot_chunk.copy()
+        for c, s in assign:
+            slot_chunk[s] = c
+        mask_rows = np.zeros((self.arena_slots,), np.int64)
+        for s in range(self.arena_slots):
+            c = int(slot_chunk[s])
+            if c >= 0:
+                mask_rows[s] = min(int(req[c]), int(loaded_after[c]))
+        return StreamPlan(
+            tick=int(tick), evict=tuple(evict), assign=tuple(assign),
+            loads=tuple(loads) + tuple(prefetch),
+            stalled=frozenset(stalled), mask_rows=tuple(mask_rows),
+            hits=tuple(hits),
+            required_now=tuple(np.nonzero(req > 0)[0].tolist()))
+
+    # -- apply (mutates mirrors + device arena) ------------------------------
+
+    def apply(self, plan: StreamPlan) -> None:
+        """Execute a plan: evictions, host->device chunk loads, render-mask
+        rebuild, counters.  Idempotent per tick (hardened retries)."""
+        if plan.tick == self._applied_tick:
+            return
+        self._applied_tick = plan.tick
+        ch = self.chunked
+        n_demand = sum(1 for l in plan.loads if not l[3])
+        with self.tracer.span('stream.apply', tick=plan.tick,
+                              loads=len(plan.loads), evict=len(plan.evict),
+                              stalled=len(plan.stalled)):
+            for c in plan.evict:
+                self._counters['evictions'] += 1
+                slot = self._chunk_slot.pop(c)
+                self._slot_chunk[slot] = -1
+                self._loaded[c] = 0
+                self._prefetched[c] = False
+            for c, slot in plan.assign:
+                self._chunk_slot[c] = slot
+                self._slot_chunk[slot] = c
+            for c, rows, block, is_prefetch in plan.loads:
+                slot = int(self._chunk_slot[c])
+                host_block = ch.chunk_block(c, block, keep=rows)
+                self._arena = self._load_jit(
+                    self._arena, jax.tree.map(jnp.asarray, host_block),
+                    slot * ch.chunk_cap)
+                self._loaded[c] = rows
+                self._prefetched[c] = is_prefetch
+                self._counters['loaded_bytes'] += rows * BYTES_PER_GAUSSIAN
+                self._counters['prefetch' if is_prefetch else 'loads'] += 1
+            for c in plan.hits:
+                self._prefetched[c] = False
+            self._counters['prefetch_hits'] += len(plan.hits)
+            self._counters['stalls'] += len(plan.stalled)
+            for c in plan.required_now:
+                self._last_required[c] = plan.tick
+            new_mask = np.asarray(plan.mask_rows, np.int64)
+            if plan.loads or plan.evict \
+                    or (new_mask != self._mask_rows).any():
+                self._mask_rows = new_mask
+                self._scene = self._mask_jit(
+                    self._arena, jnp.asarray(new_mask, jnp.int32))
+                self.dirty = True
+        self.metrics.counter('stream.loads', 'demand chunk loads').inc(
+            n_demand)
+        self.metrics.counter('stream.prefetch',
+                             'speculative chunk loads').inc(
+                                 len(plan.loads) - n_demand)
+        self.metrics.counter(
+            'stream.prefetch_hits',
+            'demands served warm by a prior prefetch').inc(len(plan.hits))
+        self.metrics.counter(
+            'stream.stalls',
+            'slot-ticks stalled on a missing chunk').inc(len(plan.stalled))
+        self.metrics.counter('stream.evictions',
+                             'arena frames reclaimed').inc(len(plan.evict))
+        self.metrics.gauge(
+            'stream.resident_bytes',
+            'Gaussian bytes resident in the arena').set(
+                float(self.resident_bytes))
+        self.metrics.gauge(
+            'stream.arena_bytes',
+            'device bytes allocated to the streaming arena').set(
+                float(self.arena_bytes))
+
+    # -- checkpoint/restore --------------------------------------------------
+
+    def state_dict(self) -> tuple:
+        """``(arrays, meta)``: the device arena pytree plus JSON-able
+        residency mirrors and partition geometry."""
+        arrays = {'arena': self._arena}
+        meta = {
+            'geometry': self.chunked.meta_dict(),
+            'near_radius': self.near_radius,
+            'lod_radius': self.lod_radius,
+            'lod_frac': self.lod_frac,
+            'budget_bytes': self.budget_bytes,
+            'max_loads_per_tick': self.max_loads_per_tick,
+            'grace_ticks': self.grace_ticks,
+            'arena_slots': self.arena_slots,
+            'applied_tick': int(self._applied_tick),
+            'resident': [[int(c), int(s), int(self._loaded[c]),
+                          int(self._last_required[c]),
+                          bool(self._prefetched[c])]
+                         for c, s in sorted(self._chunk_slot.items())],
+            'mask_rows': [int(r) for r in self._mask_rows],
+            'counters': dict(self._counters),
+        }
+        return arrays, meta
+
+    def load_state(self, arrays, meta: dict) -> None:
+        geo = meta['geometry']
+        if (geo['num_chunks'] != self.chunked.num_chunks
+                or geo['chunk_cap'] != self.chunked.chunk_cap
+                or geo['source_count'] != self.chunked.source_count):
+            raise ValueError(
+                f'streaming checkpoint geometry mismatch: snapshot '
+                f'{geo["num_chunks"]}x{geo["chunk_cap"]} '
+                f'(source {geo["source_count"]}) vs live partition '
+                f'{self.chunked.num_chunks}x{self.chunked.chunk_cap} '
+                f'(source {self.chunked.source_count})')
+        self._init_state()
+        self._arena = jax.tree.map(jnp.asarray, arrays['arena'])
+        self._applied_tick = int(meta['applied_tick'])
+        for c, s, rows, last_req, prefetched in meta['resident']:
+            self._chunk_slot[int(c)] = int(s)
+            self._slot_chunk[int(s)] = int(c)
+            self._loaded[int(c)] = int(rows)
+            self._last_required[int(c)] = int(last_req)
+            self._prefetched[int(c)] = bool(prefetched)
+        self._mask_rows = np.asarray(meta['mask_rows'], np.int64)
+        self._counters = dict(meta['counters'])
+        self._scene = self._mask_jit(
+            self._arena, jnp.asarray(self._mask_rows, jnp.int32))
+        self.dirty = True
+
+    def state_template(self) -> dict:
+        """Arena-shaped arrays template for the checkpoint loader."""
+        return {'arena': jax.tree.map(
+            np.asarray, neutral_scene(self.arena_slots
+                                      * self.chunked.chunk_cap))}

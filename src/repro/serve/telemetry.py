@@ -238,8 +238,24 @@ def tick_rollup(tick_log: list[dict], warmup_ticks: int = 0) -> dict:
     # the end; the final-tick snapshot would understate the footprint)
     for key in ('sort_pool_bytes', 'sort_pool_alloc_bytes',
                 'sort_pool_reserved_bytes', 'cache_bytes', 'state_bytes',
-                'state_alloc_bytes', 'state_reserved_bytes'):
+                'state_alloc_bytes', 'state_reserved_bytes',
+                'stream_resident_bytes', 'stream_arena_bytes',
+                'stream_full_bytes'):
         vals = [t[key] for t in log if key in t]
         if vals:
             roll[key] = int(max(vals))
+    # streaming counters are cumulative over the run — the last snapshot is
+    # the total; ``stream_stalls_tail`` isolates the post-warmup window the
+    # steady-state gate (CI: stalls == 0 after warmup) reads
+    for key in ('stream_stalls', 'stream_loads', 'stream_prefetch_hits',
+                'stream_evictions'):
+        vals = [t[key] for t in log if key in t]
+        if vals:
+            roll[key] = int(vals[-1])
+    stall_vals = [t['stream_stalls'] for t in tick_log
+                  if 'stream_stalls' in t]
+    if stall_vals:
+        warm = (stall_vals[min(warmup_ticks, len(stall_vals)) - 1]
+                if warmup_ticks else 0)
+        roll['stream_stalls_tail'] = int(stall_vals[-1] - warm)
     return roll

@@ -519,6 +519,67 @@ def test_device_loss_cold_recovery_requeues_at_cursor(
             assert frames[(sid, f)][0] == golden_loss[(sid, f)]
 
 
+def test_restore_at_launch_resumes_fleet(fleet_steppers, tmp_path):
+    """Kill the whole fleet between ticks and relaunch with ``--restore``
+    semantics: ``restore_at_launch`` adopts the newest checkpoint step
+    COMMON to every device worker, every restored lane replays
+    bit-identically to the unfaulted golden run, and every viewer still
+    delivers every frame."""
+    frames = (6, 6, 6)
+    fm_g = _make_fleet(fleet_steppers)
+    for s in _sessions(frames=frames):
+        fm_g.submit(s)
+    assert [s.sid for s in _drain(fm_g)] == [0, 1, 2]
+    golden = {k: v[0] for k, v in _frames_of(fm_g).items()}
+
+    # victim: checkpoint every 2 ticks, die between ticks (SIGKILL)
+    fm_v = _make_fleet(fleet_steppers, ckpt_root=tmp_path, ckpt_every=2)
+    for s in _sessions(frames=frames):
+        fm_v.submit(s)
+    while fm_v.tick < 5:
+        fm_v.run_tick()
+    for w in fm_v.workers:
+        w.mgr._ckpt.wait()
+
+    # survivor: fresh fleet, restore at launch instead of submitting
+    fm_s = _make_fleet(fleet_steppers, ckpt_root=tmp_path, ckpt_every=2)
+    restored = fm_s.restore_at_launch(_sessions(frames=frames))
+    assert restored is not None and restored >= 2, restored
+    assert fm_s.metrics['fleet.restores'].value == 1
+    finished = _drain(fm_s)
+    assert sorted(s.sid for s in finished) == [0, 1, 2]
+    # fresh session objects only render the continuation — delivery is
+    # complete (cursor at the end), not re-counted from frame 0
+    assert all(s.cursor == 6 for s in finished)
+    assert all(0 < s.telemetry.frames <= 6 for s in finished)
+    cont = _frames_of(fm_s)
+    for sid in range(3):
+        covered = {f for (s, f) in cont if s == sid}
+        assert max(covered) == 5, f'sid {sid} never reached its last frame'
+        for f in covered:
+            assert all(d == golden[(sid, f)] for d in cont[(sid, f)]), \
+                f'sid {sid} frame {f} diverged from golden after restore'
+
+
+def test_restore_at_launch_without_common_step_returns_none(
+        fleet_steppers, tmp_path):
+    """One worker with no usable snapshot (or no overlap in steps) means
+    no crash-consistent fleet state: restore_at_launch refuses rather
+    than resuming workers at different ticks."""
+    fm_v = _make_fleet(fleet_steppers, ckpt_root=tmp_path, ckpt_every=2)
+    for s in _sessions(frames=(6, 6, 6)):
+        fm_v.submit(s)
+    while fm_v.tick < 5:
+        fm_v.run_tick()
+    for w in fm_v.workers:
+        w.mgr._ckpt.wait()
+    # wipe one device's snapshots: no common step remains
+    import shutil
+    shutil.rmtree(tmp_path / 'device1')
+    fm_s = _make_fleet(fleet_steppers, ckpt_root=tmp_path, ckpt_every=2)
+    assert fm_s.restore_at_launch(_sessions(frames=(6, 6, 6))) is None
+
+
 def test_loss_of_last_device_is_refused(fleet_steppers):
     fm = _make_fleet(fleet_steppers[:1], injector=_loss_injector(tick=1))
     for s in _sessions(frames=(3,)):

@@ -311,14 +311,81 @@ def test_history_tolerates_noise_and_row_intersection():
     ok = _serve_payload(fps=20.0, p95=90.0, overlap=0.2, hit=0.75)
     violations, _ = history.check_payloads('serve', base, ok)
     assert violations == []
-    # a fresh row with no baseline counterpart (quick CI vs full baseline
-    # in reverse) is skipped, not failed — but gating nothing at all fails
+    # a fresh row with no baseline counterpart is skipped, not failed —
+    # but it leaves the baseline row unmeasured (a missing-row regression)
+    # and gating nothing at all fails too
     extra = _serve_payload()
     extra['rows'][0]['viewers'] = 64
     violations, report = history.check_payloads('serve', base, extra)
-    assert violations == [f'serve: no gateable metric pairs between '
-                          f'payloads']
+    assert any('MISSING' in line for line in violations)
+    assert (f'serve: no gateable metric pairs between payloads'
+            in violations)
     assert any('no baseline row' in line for line in report)
+
+
+def test_history_fails_dropped_baseline_row():
+    """A baseline row the fresh payload stopped producing is itself a
+    regression — the dropped cell would otherwise silently un-gate every
+    metric it carried."""
+    base = _serve_payload()
+    dropped = dict(base['rows'][0], backend='reference')
+    base['rows'].append(dropped)
+    fresh = _serve_payload()   # only the pallas row survives
+    violations, report = history.check_payloads('serve', base, fresh)
+    assert len(violations) == 1 and 'MISSING' in violations[0]
+    assert 'backend=reference' in violations[0]
+
+
+def test_history_missing_row_allowlists():
+    base = _serve_payload()
+    dropped = dict(base['rows'][0], backend='reference')
+    base['rows'].append(dropped)
+    fresh = _serve_payload()
+    # programmatic allowlist: identity-subset match clears the violation
+    violations, report = history.check_payloads(
+        'serve', base, fresh,
+        allow_missing=({'backend': 'reference'},))
+    assert violations == []
+    assert any('allow_missing' in line for line in report)
+    # RETIRED_ROWS: the committed allowlist works the same way
+    old = history.RETIRED_ROWS['serve']
+    history.RETIRED_ROWS['serve'] = ({'backend': 'reference'},)
+    try:
+        violations, report = history.check_payloads('serve', base, fresh)
+    finally:
+        history.RETIRED_ROWS['serve'] = old
+    assert violations == []
+    assert any('retired' in line for line in report)
+    # a non-matching spec does NOT clear it
+    violations, _ = history.check_payloads(
+        'serve', base, fresh, allow_missing=({'backend': 'cuda'},))
+    assert len(violations) == 1 and 'MISSING' in violations[0]
+
+
+def test_history_quick_fresh_skips_full_only_rows():
+    """A --quick fresh payload may legitimately miss rows the full run
+    stamped ``quick_row: false`` — but quick-measured rows must still be
+    present."""
+    base = _serve_payload()
+    full_only = dict(base['rows'][0], backend='reference',
+                     quick_row=False)
+    base['rows'][0]['quick_row'] = True
+    base['rows'].append(full_only)
+    fresh = _serve_payload()
+    fresh['quick'] = True
+    violations, report = history.check_payloads('serve', base, fresh)
+    assert violations == []
+    assert any('full-run-only' in line for line in report)
+    # ...but dropping a quick-measured row still fails under --quick
+    fresh['rows'] = []
+    violations, _ = history.check_payloads('serve', base, fresh)
+    assert any('MISSING' in line for line in violations)
+    # and a full fresh payload gets no quick carve-out at all
+    full_fresh = _serve_payload()
+    full_fresh['rows'][0]['backend'] = 'reference'
+    violations, _ = history.check_payloads('serve', base, full_fresh)
+    assert any('MISSING' in line and 'backend=pallas' in line
+               for line in violations)
 
 
 def test_history_cli_check(tmp_path):

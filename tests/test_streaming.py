@@ -1,0 +1,337 @@
+"""Streaming scene residency (``repro.serve.streaming`` + the chunked
+scene container in ``repro.data.scenes``).
+
+The contracts, in dependency order:
+
+* **Exact partition** — ``structured_scene`` produces exactly the
+  requested Gaussian count for any ``num_gaussians`` (the partitioner
+  relies on exact counts), and ``partition_scene`` covers every source
+  Gaussian exactly once, cell-tags every chunk correctly, orders each
+  chunk significance-descending and pads with neutral lanes —
+  deterministically.
+* **LOD algebra** — ``level_rows`` maps FULL to the fill, LOD to the
+  non-empty significance prefix, ABSENT to zero; ``masked_scene`` at full
+  rows is the identity on real lanes.
+* **Bit-identity** — a budget-constrained streaming run whose arena covers
+  the live working set renders **bit-identically** to the unbounded
+  (fully-resident-arena) streaming run, with zero stalls and a resident
+  footprint strictly below the full scene; with the radiance cache off the
+  streamed (chunk-permuted) scene also matches the plain non-streaming
+  stepper exactly (the pure render is permutation+neutral-pad invariant).
+* **Determinism** — two SyncDriver replays of the same traffic produce
+  identical frames AND identical stream counters (loads, prefetch hits,
+  stalls, evictions): residency planning is a pure function of the
+  replayed schedule.
+* **Degraded, not dead** — when the union working set exceeds the arena
+  the epoch-rotated capacity reservation timeshares the arena (every
+  viewer drains, evictions reclaim frames); a single viewer whose own
+  requirement cannot fit raises a configuration error instead of stalling
+  forever.
+* **Crash-consistent residency** — checkpoint/restore at a partially
+  resident state resumes bit-identically to the uninterrupted run,
+  including the loads that happen after the restore point.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core.pipeline import LuminaConfig
+from repro.data.scenes import (BYTES_PER_GAUSSIAN, LEVEL_ABSENT, LEVEL_FULL,
+                               LEVEL_LOD, level_rows, masked_scene,
+                               neutral_scene, partition_scene,
+                               structured_scene)
+from repro.data.trajectory import orbit_trajectory
+from repro.serve.session import SessionManager, ViewerSession
+from repro.serve.stepper import BatchedStepper
+from repro.serve.streaming import ResidencyManager
+
+WIDTH = 64
+CELL = 0.4
+CAP = 64
+FRAME_BYTES = CAP * BYTES_PER_GAUSSIAN
+
+
+@pytest.fixture(scope='module')
+def scene600():
+    return structured_scene(jax.random.PRNGKey(0), 600)
+
+
+def _mgr(scene, budget_frames=None, **kw):
+    ch = partition_scene(scene, cell_size=CELL, chunk_cap=CAP)
+    budget = None if budget_frames is None else budget_frames * FRAME_BYTES
+    kw.setdefault('near_radius', 3)
+    kw.setdefault('lod_radius', 5)
+    return ResidencyManager(ch, budget_bytes=budget, **kw)
+
+
+def _serve(scene, streaming, *, viewers=2, frames=6, deg_step=40.0,
+           cfg=None, max_ticks=300, kill_at=None, ckpt=None):
+    """Drive a streaming serving run under the SyncDriver; returns
+    ``(session_manager, stepper, {(sid, cursor): frame})``."""
+    cfg = cfg or LuminaConfig(capacity=192, window=3)
+    cam0 = orbit_trajectory(1, width=WIDTH, height_px=WIDTH)[0]
+    stepper = BatchedStepper(scene, cfg, cam0, viewers, streaming=streaming)
+    sm = SessionManager(stepper, viewers)
+    if ckpt is not None:
+        sm.enable_checkpoints(ckpt, every=3)
+    for sid in range(viewers):
+        traj = orbit_trajectory(frames, width=WIDTH, height_px=WIDTH,
+                                start_deg=deg_step * sid)
+        sm.submit(ViewerSession(sid=sid, cams=traj, arrival_tick=sid))
+    outs = {}
+    orig = sm.observe_tick
+
+    def observing(plan, outputs, *a, **k):
+        for slot, out in outputs.items():
+            sess = sm.slot_session[slot]
+            if sess is not None:
+                outs[(sess.sid, sess.cursor)] = np.asarray(out[0])
+        return orig(plan, outputs, *a, **k)
+
+    sm.observe_tick = observing
+    t = 0
+    while not sm.drained() and t < max_ticks:
+        sm.run_tick()
+        sm.evict_finished()
+        if ckpt is not None:
+            sm.maybe_checkpoint()
+        t += 1
+        if kill_at is not None and sm.tick >= kill_at:
+            break
+    return sm, stepper, outs
+
+
+# ------------------------------------------------- exact partition -------
+
+def test_structured_scene_exact_split():
+    """The three-surface split is exact for ANY count — the partitioner
+    (and BYTES_PER_GAUSSIAN accounting) relies on it."""
+    for n in (1, 2, 3, 7, 100, 599, 1201):
+        s = structured_scene(jax.random.PRNGKey(1), n)
+        assert s.means.shape == (n, 3)
+        for field in ('log_scales', 'quats', 'opacity_logit', 'sh_dc',
+                      'sh_rest'):
+            assert getattr(s, field).shape[0] == n, (field, n)
+
+
+def test_partition_exact_cover_and_order(scene600):
+    ch = partition_scene(scene600, cell_size=CELL, chunk_cap=CAP)
+    host = jax.tree.map(np.asarray, scene600)
+    assert ch.source_count == 600
+    assert int(ch.fill.sum()) == 600
+    assert ch.scene_bytes == 600 * BYTES_PER_GAUSSIAN
+    # every real packed lane is a source Gaussian; match by means row
+    src = {tuple(np.round(m, 5)) for m in host.means}
+    seen = 0
+    sig_all = (1.0 / (1.0 + np.exp(-host.opacity_logit.astype(np.float64)))
+               * np.exp(host.log_scales.astype(np.float64).mean(axis=-1)))
+    by_mean = {tuple(np.round(m, 5)): s
+               for m, s in zip(host.means, sig_all)}
+    for c in range(ch.num_chunks):
+        fill = int(ch.fill[c])
+        lo = c * CAP
+        block = ch.packed.means[lo:lo + CAP]
+        sigs = []
+        for j in range(CAP):
+            key = tuple(np.round(block[j], 5))
+            if j < fill:
+                assert key in src, f'chunk {c} lane {j} not a source row'
+                # cell tag matches the Gaussian's quantized position
+                cell = np.floor(block[j] / CELL).astype(np.int64)
+                np.testing.assert_array_equal(cell, ch.cells[c])
+                sigs.append(by_mean[key])
+                seen += 1
+            else:
+                assert block[j][0] > 1e5, 'padding must be neutral'
+        assert sigs == sorted(sigs, reverse=True), (
+            f'chunk {c} not significance-descending')
+    assert seen == 600, 'partition must cover every source Gaussian once'
+    # determinism: same scene, same partition, bit for bit
+    ch2 = partition_scene(scene600, cell_size=CELL, chunk_cap=CAP)
+    np.testing.assert_array_equal(ch.cells, ch2.cells)
+    np.testing.assert_array_equal(ch.fill, ch2.fill)
+    for a, b in zip(jax.tree.leaves(ch.packed), jax.tree.leaves(ch2.packed)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_level_rows_and_masked_scene(scene600):
+    ch = partition_scene(scene600, cell_size=CELL, chunk_cap=CAP)
+    n = ch.num_chunks
+    full = level_rows(ch, np.full((n,), LEVEL_FULL), 0.5)
+    np.testing.assert_array_equal(full, ch.fill)
+    lod = level_rows(ch, np.full((n,), LEVEL_LOD), 0.5)
+    assert (lod[ch.fill > 0] >= 1).all(), 'LOD prefix never empty'
+    assert (lod <= ch.fill).all()
+    np.testing.assert_array_equal(
+        level_rows(ch, np.full((n,), LEVEL_ABSENT), 0.5), np.zeros((n,)))
+    # full mask is the identity on real lanes; zero mask is all-neutral
+    ident = masked_scene(ch.packed, full, CAP)
+    np.testing.assert_array_equal(np.asarray(ident.means), ch.packed.means)
+    nothing = masked_scene(ch.packed, np.zeros((n,), np.int64), CAP)
+    neutral = neutral_scene(n * CAP)
+    np.testing.assert_array_equal(np.asarray(nothing.means), neutral.means)
+    np.testing.assert_array_equal(np.asarray(nothing.opacity_logit),
+                                  neutral.opacity_logit)
+
+
+# ---------------------------------------------- residency management -----
+
+def test_arena_too_small_raises(scene600):
+    mgr = _mgr(scene600, budget_frames=2)
+    cam = orbit_trajectory(1, width=WIDTH, height_px=WIDTH)[0]
+    with pytest.raises(RuntimeError, match='arena too small'):
+        mgr.plan(0, {0: cam})
+
+
+def test_budget_bit_identity_and_counters(scene600):
+    """The acceptance contract: a budget covering the live working set
+    renders bit-identically to the unbounded arena, without stalls, on a
+    resident footprint strictly below the full scene."""
+    runs = {}
+    for name, frames_budget in (('lim', 63), ('full', None)):
+        mgr = _mgr(scene600, budget_frames=frames_budget)
+        sm, stepper, outs = _serve(scene600, mgr)
+        assert sm.drained()
+        runs[name] = (mgr, outs)
+    lim_mgr, lim = runs['lim'][0], runs['lim'][1]
+    full_mgr, full = runs['full'][0], runs['full'][1]
+    assert set(lim) == set(full) and lim, 'frame sets must match'
+    for key in lim:
+        np.testing.assert_array_equal(lim[key], full[key],
+                                      err_msg=f'frame {key} diverged')
+    counters = lim_mgr.counters()
+    assert counters['stalls'] == 0
+    assert counters['prefetch_hits'] > 0, 'neighbor prefetch never warmed'
+    assert lim_mgr.arena_slots < full_mgr.arena_slots
+    assert lim_mgr.resident_bytes < lim_mgr.chunked.scene_bytes
+    assert lim_mgr.resident_bytes > 0
+
+
+def test_streaming_matches_plain_stepper_pure_render(scene600):
+    """With the radiance cache off the render is a pure function of the
+    effective Gaussian set — chunk permutation and neutral padding must
+    not change a single bit vs the non-streaming stepper.  Every cell sits
+    inside the near radius (no LOD trim), so the streamed content equals
+    the plain scene exactly."""
+    cfg = LuminaConfig(capacity=192, window=3, use_rc=False)
+    _, _, plain = _serve(scene600, None, cfg=cfg)
+    _, _, streamed = _serve(
+        scene600, _mgr(scene600, near_radius=10 ** 6, lod_radius=10 ** 6),
+        cfg=cfg)
+    assert set(plain) == set(streamed) and plain
+    for key in plain:
+        np.testing.assert_array_equal(plain[key], streamed[key],
+                                      err_msg=f'frame {key} diverged')
+
+
+def test_replay_determinism_including_prefetch_hits(scene600):
+    """Two SyncDriver replays of the same traffic: identical frames and
+    identical stream counters — residency planning (prefetch included) is
+    a pure function of the replayed schedule."""
+    results = []
+    for _ in range(2):
+        mgr = _mgr(scene600, budget_frames=63)
+        sm, _, outs = _serve(scene600, mgr)
+        assert sm.drained()
+        results.append((mgr.counters(), sm.tick, outs))
+    (c1, t1, o1), (c2, t2, o2) = results
+    assert c1 == c2, f'stream counters diverged: {c1} vs {c2}'
+    assert c1['prefetch_hits'] > 0
+    assert t1 == t2
+    assert set(o1) == set(o2)
+    for key in o1:
+        np.testing.assert_array_equal(o1[key], o2[key])
+
+
+def test_timeshare_drains_oversized_union(scene600):
+    """Three viewers whose union working set exceeds the arena: the
+    epoch-rotated reservation timeshares the arena — every viewer drains
+    (degraded by stalls, reclaimed by evictions), nobody livelocks."""
+    mgr = _mgr(scene600, budget_frames=70)
+    sm, _, outs = _serve(scene600, mgr, viewers=3, frames=6,
+                         deg_step=120.0, max_ticks=400)
+    assert sm.drained(), 'timeshare must drain an oversized fleet'
+    for sid in range(3):
+        assert sum(1 for k in outs if k[0] == sid) == 6, (
+            f'viewer {sid} missing frames')
+    counters = mgr.counters()
+    assert counters['stalls'] > 0, 'an oversized union must stall'
+    assert counters['evictions'] > 0, 'timeshare must reclaim frames'
+
+
+def test_checkpoint_roundtrip_partial_residency(scene600, tmp_path):
+    """Kill/restore with the arena only partially resident: the restored
+    run must resume bit-identically, including the chunk loads that only
+    happen after the restore point (the late viewer's working set)."""
+    frames = 6
+    # a trickle load budget keeps the prefetch ring streaming across many
+    # ticks, so the kill point genuinely lands mid-stream
+    kw = dict(budget_frames=63, max_loads_per_tick=4)
+
+    # golden: uninterrupted run
+    mgr_g = _mgr(scene600, **kw)
+    _, _, golden = _serve(scene600, mgr_g, frames=frames)
+
+    # victim: checkpoint every 3 ticks, die mid-run
+    mgr_v = _mgr(scene600, **kw)
+    sm_v, _, _ = _serve(scene600, mgr_v, frames=frames,
+                        ckpt=CheckpointManager(tmp_path, keep=5), kill_at=4)
+    assert not sm_v.drained(), 'kill point must land mid-run'
+    sm_v._ckpt.wait()
+
+    # survivor: fresh stepper + fresh residency manager, restore, finish
+    cfg = LuminaConfig(capacity=192, window=3)
+    cam0 = orbit_trajectory(1, width=WIDTH, height_px=WIDTH)[0]
+    mgr_s = _mgr(scene600, **kw)
+    stepper2 = BatchedStepper(scene600, cfg, cam0, 2, streaming=mgr_s)
+    sm2 = SessionManager(stepper2, 2)
+    sessions = [ViewerSession(
+        sid=sid, cams=orbit_trajectory(frames, width=WIDTH, height_px=WIDTH,
+                                       start_deg=40.0 * sid),
+        arrival_tick=sid) for sid in range(2)]
+    restored = sm2.restore_serving(CheckpointManager(tmp_path), sessions)
+    assert restored == 3
+    # the snapshot must be PARTIALLY resident (that is the point)
+    loaded = (mgr_s._loaded > 0).sum()
+    assert 0 < loaded < mgr_s.chunked.num_chunks
+    c0 = mgr_s.counters()
+    loads_at_restore = c0['loads'] + c0['prefetch']
+
+    outs = {}
+    orig = sm2.observe_tick
+
+    def observing(plan, outputs, *a, **k):
+        for slot, out in outputs.items():
+            sess = sm2.slot_session[slot]
+            if sess is not None:
+                outs[(sess.sid, sess.cursor)] = np.asarray(out[0])
+        return orig(plan, outputs, *a, **k)
+
+    sm2.observe_tick = observing
+    t = 0
+    while not sm2.drained() and t < 300:
+        sm2.run_tick()
+        sm2.evict_finished()
+        t += 1
+    assert sm2.drained()
+    c1 = mgr_s.counters()
+    assert c1['loads'] + c1['prefetch'] > loads_at_restore, (
+        'continuation must stream in the not-yet-resident chunks')
+    # every post-restore frame matches the uninterrupted run bit for bit
+    assert outs, 'restored run rendered nothing'
+    for key, img in outs.items():
+        np.testing.assert_array_equal(img, golden[key],
+                                      err_msg=f'frame {key} diverged '
+                                              f'after restore')
+    assert mgr_s.resident_bytes == mgr_g.resident_bytes
+
+
+def test_checkpoint_geometry_mismatch_rejected(scene600):
+    mgr = _mgr(scene600)
+    arrays, meta = mgr.state_dict()
+    other = _mgr(structured_scene(jax.random.PRNGKey(2), 400))
+    with pytest.raises(ValueError, match='geometry mismatch'):
+        other.load_state(arrays, meta)
